@@ -1,0 +1,31 @@
+"""TPU adaptation bench: cross-pod (DCN) bytes per chip for the three
+gradient-sync schedules, closed form + (if artifacts exist) measured from
+the multi-pod dry-run HLO."""
+import glob
+import json
+
+from repro.collectives.schedules import dcn_bytes_per_chip
+
+from .common import Timer, row
+
+
+def run(quick: bool = True):
+    out = []
+    with Timer() as t:
+        for params_gb, name in ((3.7, "danube-1.8b"), (65.5, "qwen2.5-32b"),
+                                (463.5, "qwen3-moe-235b")):
+            p = params_gb * 1e9
+            d = dcn_bytes_per_chip(p, 1, 2, "direct")
+            g = dcn_bytes_per_chip(p, 16, 2, "pig")
+            q = dcn_bytes_per_chip(p, 16, 2, "pig_q8")
+            out.append(row(f"collective/{name}", 0, 1,
+                           f"direct={d/1e9:.2f}GB pig={g/1e9:.3f}GB "
+                           f"pig_q8={q/1e9:.3f}GB per-chip DCN/step"))
+    for f in sorted(glob.glob("artifacts/dryrun/multi--*--train_4k.json")):
+        d = json.load(open(f))
+        if "error" in d or "skipped" in d:
+            continue
+        out.append(row(f"collective/measured/{d['arch']}", t.dt, 1,
+                       f"cross_pod={d['cross_pod_bytes_per_chip']/1e9:.3f}GB/chip "
+                       f"in_pod={d['in_pod_bytes_per_chip']/1e9:.2f}GB/chip"))
+    return out

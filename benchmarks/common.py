@@ -1,0 +1,47 @@
+"""Shared benchmark helpers: throughput/latency measurement on the DES."""
+from __future__ import annotations
+
+import time
+
+from repro.core import Cluster, PigConfig, WorkloadConfig
+
+
+def measure(proto: str, n: int, pig=None, clients: int = 60,
+            duration: float = 0.6, warmup: float = 0.3, seed: int = 2,
+            workload=None, failures=(), leader_timeout: float = 50e-3,
+            topo=None):
+    c = Cluster(proto, n, pig=pig, seed=seed, topo=topo,
+                leader_timeout=leader_timeout)
+    for nid, t in failures:
+        c.crash_at(nid, t)
+    st = c.measure(duration=duration, warmup=warmup, clients=clients,
+                   workload=workload)
+    return st, c
+
+
+def max_throughput(proto: str, n: int, pig=None, client_grid=(20, 60, 120),
+                   duration: float = 0.5, warmup: float = 0.25, seed: int = 2,
+                   workload=None):
+    """The paper's 'maximum throughput' methodology: sweep offered load
+    (client count) and report the best sustained rate."""
+    best = None
+    for k in client_grid:
+        st, _ = measure(proto, n, pig=pig, clients=k, duration=duration,
+                        warmup=warmup, seed=seed, workload=workload)
+        if best is None or st.throughput > best.throughput:
+            best = st
+    return best
+
+
+def row(name: str, wall_s: float, calls: int, derived: str) -> str:
+    us = wall_s * 1e6 / max(calls, 1)
+    return f"{name},{us:.1f},{derived}"
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.time() - self.t0

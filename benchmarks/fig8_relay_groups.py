@@ -1,0 +1,33 @@
+"""Fig 8: max throughput vs number of relay groups, rotating vs static
+relays, 25-node cluster.  Reproduces: rotating => R=1 best; static => sqrt(N)
+best (and catastrophically worse at small R)."""
+from repro.core import PigConfig
+
+from .common import Timer, max_throughput, row
+
+
+def run(quick: bool = True):
+    out = []
+    rs = (1, 2, 3, 5) if quick else (1, 2, 3, 4, 5, 6, 8)
+    grid = (40, 120) if quick else (20, 60, 120)
+    dur = 0.4 if quick else 1.0
+    results = {}
+    for rotate in (True, False):
+        for r in rs:
+            pig = PigConfig(n_groups=r, prc=1, rotate_relays=rotate,
+                            single_group_majority=(r == 1 and rotate))
+            with Timer() as t:
+                st = max_throughput("pigpaxos", 25, pig=pig, client_grid=grid,
+                                    duration=dur)
+            label = "rotating" if rotate else "static"
+            results[(rotate, r)] = st.throughput
+            out.append(row(f"fig8/{label}/R={r}", t.dt, st.count,
+                           f"tput={st.throughput:.0f}req/s median={st.median_ms:.2f}ms"))
+    rot = {r: results[(True, r)] for r in rs}
+    stat = {r: results[(False, r)] for r in rs}
+    best_rot = min(rot, key=lambda r: -rot[r])
+    best_stat = min(stat, key=lambda r: -stat[r])
+    out.append(row("fig8/summary", 0, 1,
+                   f"best_R_rotating={best_rot} best_R_static={best_stat} "
+                   f"(paper: 1 and ~sqrt(N)=5)"))
+    return out

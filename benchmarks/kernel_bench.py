@@ -1,0 +1,45 @@
+"""Kernel micro-bench: Pallas (interpret on CPU) vs jnp reference — numbers
+here measure the *oracle agreement path*, not TPU performance (CPU-only
+container); flops are reported for the roofline context."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.pig_aggregate import quantize_blockwise
+
+from .common import Timer, row
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps
+
+
+def run(quick: bool = True):
+    out = []
+    B, S, H, D = 1, 256, 4, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, D), jnp.float32)
+    t_p = _time(lambda a, b, c: ops.flash_attention(a, b, c), q, k, v)
+    flops = 4 * B * H * S * S * D
+    out.append(row("kernel/flash_attention_256", t_p, 1,
+                   f"pallas_interp={t_p*1e3:.1f}ms flops={flops:.2e}"))
+    la = -jnp.abs(jax.random.normal(ks[3], (B, S, H, D))) * 0.5 - 0.01
+    t_s = _time(lambda a, b, c, d: ops.ssm_scan(a, b, c, d, chunk=64),
+                q, k, v, la)
+    out.append(row("kernel/ssm_scan_256", t_s, 1,
+                   f"pallas_interp={t_s*1e3:.1f}ms"))
+    x = jax.random.normal(ks[0], (8, 8192), jnp.float32)
+    qs, ss = zip(*[quantize_blockwise(x[g], 1024) for g in range(8)])
+    sh, sc = jnp.stack(qs), jnp.stack(ss)
+    t_a = _time(lambda a, b: ops.pig_aggregate(a, b, block=1024), sh, sc)
+    out.append(row("kernel/pig_aggregate_8x8192", t_a, 1,
+                   f"pallas_interp={t_a*1e3:.2f}ms"))
+    return out

@@ -1,0 +1,91 @@
+"""Generate the §Dry-run and §Roofline tables of EXPERIMENTS.md from the
+dry-run artifacts (baseline = artifacts/dryrun, optimized = artifacts/dryrun_opt)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def cells(dirname: str, mesh: str):
+    out = {}
+    for f in sorted(glob.glob(os.path.join(dirname, f"{mesh}--*.json"))):
+        base = os.path.basename(f)[:-5]
+        if base.count("-iter") or base.endswith("-direct"):
+            continue
+        d = json.load(open(f))
+        out[(d.get("arch"), d.get("shape"))] = d
+    return out
+
+
+def fmt_s(x):
+    return f"{x:8.2f}" if x < 1e4 else f"{x:8.2e}"
+
+
+def roofline_table(dirname: str, mesh: str) -> str:
+    rows = []
+    hdr = ("| arch | shape | t_compute (s) | t_memory (s) | t_collective (s) "
+           "| bound | roofline frac | useful FLOPs | note |")
+    sep = "|---|---|---|---|---|---|---|---|---|"
+    for (arch, shape), d in sorted(cells(dirname, mesh).items()):
+        if "skipped" in d:
+            rows.append(f"| {arch} | {shape} | — | — | — | — | — | — | "
+                        f"SKIP: sub-quadratic required |")
+            continue
+        if "error" in d:
+            rows.append(f"| {arch} | {shape} | — | — | — | — | — | — | ERROR |")
+            continue
+        rows.append(
+            f"| {arch} | {shape} | {d['t_compute']:.3f} | {d['t_memory']:.2f} "
+            f"| {d['t_collective']:.2f} | {d['bottleneck']} "
+            f"| {d['roofline_fraction']:.4f} | {min(d['useful_flops_ratio'],99):.2f} | |")
+    return "\n".join([hdr, sep] + rows)
+
+
+def memory_table(dirname: str, mesh: str) -> str:
+    hdr = "| arch | shape | args (GB/dev) | temp (GB/dev) | cross-pod (GB/chip) | collectives |"
+    sep = "|---|---|---|---|---|---|"
+    rows = []
+    for (arch, shape), d in sorted(cells(dirname, mesh).items()):
+        if "skipped" in d or "error" in d:
+            continue
+        m = d["memory"]
+        ck = ", ".join(f"{k}:{v/1e9:.0f}G" for k, v in
+                       sorted(d["collectives"].items(), key=lambda kv: -kv[1])[:3])
+        rows.append(f"| {arch} | {shape} | {(m['argument_bytes'] or 0)/1e9:.1f} "
+                    f"| {(m['temp_bytes'] or 0)/1e9:.1f} "
+                    f"| {d['cross_pod_bytes_per_chip']/1e9:.2f} | {ck} |")
+    return "\n".join([hdr, sep] + rows)
+
+
+def before_after(base_dir: str, opt_dir: str, mesh: str) -> str:
+    b = cells(base_dir, mesh)
+    o = cells(opt_dir, mesh)
+    hdr = ("| arch | shape | frac before | frac after | Δ | coll GB/chip "
+           "before→after |")
+    sep = "|---|---|---|---|---|---|"
+    rows = []
+    for key in sorted(set(b) & set(o)):
+        db, do = b[key], o[key]
+        if "skipped" in db or "error" in db or "skipped" in do or "error" in do:
+            continue
+        fb, fo = db["roofline_fraction"], do["roofline_fraction"]
+        cb = db["coll_bytes"] / db["chips"] / 1e9
+        co = do["coll_bytes"] / do["chips"] / 1e9
+        delta = "=" if abs(fo - fb) < 1e-4 else (f"+{(fo/max(fb,1e-9)):.1f}x"
+                                                 if fo > fb else f"{fo/fb:.2f}x")
+        rows.append(f"| {key[0]} | {key[1]} | {fb:.4f} | {fo:.4f} | {delta} "
+                    f"| {cb:.0f} → {co:.0f} |")
+    return "\n".join([hdr, sep] + rows)
+
+
+if __name__ == "__main__":
+    import sys
+    which = sys.argv[1] if len(sys.argv) > 1 else "roofline"
+    mesh = sys.argv[2] if len(sys.argv) > 2 else "single"
+    if which == "roofline":
+        print(roofline_table("artifacts/dryrun_opt", mesh))
+    elif which == "memory":
+        print(memory_table("artifacts/dryrun_opt", mesh))
+    elif which == "before_after":
+        print(before_after("artifacts/dryrun", "artifacts/dryrun_opt", mesh))

@@ -1,0 +1,31 @@
+"""Roofline table from dry-run artifacts (see EXPERIMENTS.md §Roofline)."""
+import glob
+import json
+
+from .common import row
+
+
+def load_cells(pattern="artifacts/dryrun/*.json"):
+    cells = []
+    for f in sorted(glob.glob(pattern)):
+        with open(f) as fh:
+            cells.append(json.load(fh))
+    return cells
+
+
+def run(quick: bool = True):
+    out = []
+    for d in load_cells():
+        name = f"roofline/{d.get('mesh')}/{d.get('arch')}/{d.get('shape')}"
+        if "skipped" in d:
+            out.append(row(name, 0, 1, "SKIPPED: " + d["skipped"][:60]))
+            continue
+        if "error" in d:
+            out.append(row(name, 0, 1, "ERROR: " + d["error"][:80]))
+            continue
+        out.append(row(name, 0, 1,
+                       f"tC={d['t_compute']*1e3:.2f}ms tM={d['t_memory']*1e3:.2f}ms "
+                       f"tN={d['t_collective']*1e3:.2f}ms "
+                       f"bound={d['bottleneck']} frac={d['roofline_fraction']:.3f} "
+                       f"useful={min(d['useful_flops_ratio'],9.99):.2f}"))
+    return out

@@ -1,0 +1,54 @@
+"""Benchmark driver: one module per paper table/figure + framework benches.
+Prints ``name,us_per_call,derived`` CSV rows.  --full for longer windows."""
+import argparse
+import importlib
+import sys
+import time
+
+MODULES = [
+    "table1_message_load",
+    "table2_message_load_small",
+    "fig8_relay_groups",
+    "fig9_latency_throughput",
+    "fig10_wan",
+    "fig11_small5",
+    "fig12_cluster9",
+    "fig13_payload",
+    "fig14_prc",
+    "fig15_graylist",
+    "fig16_group_failure",
+    "fig17_heatmap",
+    "serialization_cost",
+    "analytical_sweep",
+    "collective_schedules",
+    "kernel_bench",
+    "roofline",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    mods = MODULES if not args.only else args.only.split(",")
+    print("name,us_per_call,derived")
+    t00 = time.time()
+    failures = 0
+    for m in mods:
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{m}")
+            for line in mod.run(quick=not args.full):
+                print(line, flush=True)
+        except Exception as e:   # noqa: BLE001
+            failures += 1
+            print(f"{m},0,ERROR: {type(e).__name__}: {e}", flush=True)
+        print(f"# {m} done in {time.time()-t0:.1f}s", flush=True)
+    print(f"# total {time.time()-t00:.1f}s, failures={failures}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

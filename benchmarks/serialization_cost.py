@@ -1,0 +1,27 @@
+"""§5.3 microbenchmark analogue: wire sizes + modeled CPU cost of PigPaxos
+aggregated P2b vs EPaxos PreAcceptReply, and the N-scaling of EPaxos
+messages (paper: 25-node messages ~4x slower to serialize than 5-node)."""
+from repro.core.messages import (Command, CostModel, P2b, PigAggregate,
+                                 PreAcceptReply)
+
+from .common import Timer, row
+
+
+def run(quick: bool = True):
+    cm = CostModel()
+    with Timer() as t:
+        agg = PigAggregate(acks=8, voters=tuple(range(8)), missing=())
+        par5 = PreAcceptReply(deps=frozenset([("a", 1)]), n_cluster=5)
+        par25 = PreAcceptReply(deps=frozenset([("a", 1)]), n_cluster=25)
+        c_agg = cm.cpu_cost(agg)
+        c5 = cm.cpu_cost(par5)
+        c25 = cm.cpu_cost(par25)
+    return [
+        row("serialization/pig_aggregated_p2b", t.dt, 1,
+            f"bytes={agg.wire_size()} cpu={c_agg*1e6:.1f}us"),
+        row("serialization/epaxos_preacceptreply_n25", 0, 1,
+            f"bytes={par25.wire_size()} cpu={c25*1e6:.1f}us "
+            f"(pig aggregate {100*(1-c_agg/c25):.0f}% cheaper; paper: 8-14%)"),
+        row("serialization/epaxos_n_scaling", 0, 1,
+            f"cost25/cost5={c25/c5:.2f}x (paper: ~4x)"),
+    ]

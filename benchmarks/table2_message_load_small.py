@@ -1,0 +1,12 @@
+"""Table 2: message load in a small 5-node cluster."""
+from repro.core import analytical
+
+from .common import Timer, row
+
+
+def run(quick: bool = True):
+    with Timer() as t:
+        rows = analytical.load_table(5)
+    return [row(f"table2/R={x['R']}", t.dt, 1,
+                f"M_l={x['M_l']} M_f={x['M_f']} ratio={x['ratio']}")
+            for x in rows]

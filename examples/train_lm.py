@@ -1,0 +1,20 @@
+"""Train a (reduced) LM end to end with consensus-committed checkpoints:
+data pipeline -> train step -> PigPaxos manifest commit -> restart.
+
+    PYTHONPATH=src python examples/train_lm.py
+"""
+import subprocess
+import sys
+
+subprocess.run(
+    [sys.executable, "-m", "repro.launch.train", "--arch", "h2o-danube-1.8b",
+     "--smoke", "--steps", "40", "--batch", "8", "--seq", "64",
+     "--ckpt-every", "20", "--ckpt-dir", "/tmp/repro_example_ckpt"],
+    check=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+print("\n-- now resuming from the committed checkpoint --\n")
+subprocess.run(
+    [sys.executable, "-m", "repro.launch.train", "--arch", "h2o-danube-1.8b",
+     "--smoke", "--steps", "60", "--batch", "8", "--seq", "64",
+     "--ckpt-every", "20", "--ckpt-dir", "/tmp/repro_example_ckpt",
+     "--resume"],
+    check=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})

@@ -1,0 +1,122 @@
+"""Checkpointing with consensus-committed manifests.
+
+Layout: one .npy per pytree leaf under <dir>/step_<n>/, plus manifest.json.
+A checkpoint only *counts* once its manifest is committed through the
+PigPaxos coordination plane ('ckpt/latest'); a crash mid-write leaves a
+half-written directory that restore() never looks at — the classic
+write-then-commit pattern, with the commit being a real consensus op.
+
+Saves can run asynchronously (background thread over host copies) so the
+training loop only blocks for the device->host transfer.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Optional
+
+import jax
+import numpy as np
+
+from ..runtime.coordination import CoordinationService
+
+
+def _flatten_with_names(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "name", k)))
+                        for k in path)
+        out.append((name, leaf))
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str,
+                 coord: Optional[CoordinationService] = None,
+                 async_save: bool = True):
+        self.dir = directory
+        self.coord = coord
+        self.async_save = async_save
+        self._pending: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, state) -> None:
+        self.wait()                      # one outstanding save at a time
+        host = [(n, np.asarray(jax.device_get(l)))
+                for n, l in _flatten_with_names(state)]
+
+        def _write():
+            d = os.path.join(self.dir, f"step_{step}")
+            os.makedirs(d, exist_ok=True)
+            files = {}
+            for i, (name, arr) in enumerate(host):
+                fn = f"leaf_{i}.npy"
+                dt = str(arr.dtype)
+                # ml_dtypes (bfloat16 etc.) don't round-trip through .npy:
+                # store the raw bits and record the logical dtype
+                towrite = arr.view(np.uint16) if dt == "bfloat16" else arr
+                np.save(os.path.join(d, fn), towrite, allow_pickle=False)
+                files[name] = {"file": fn, "shape": list(arr.shape),
+                               "dtype": dt}
+            manifest = {"step": step, "dir": f"step_{step}", "files": files}
+            with open(os.path.join(d, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            # durable only once consensus-committed:
+            if self.coord is not None:
+                self.coord.put("ckpt/latest", {"step": step,
+                                               "dir": f"step_{step}"})
+
+        if self.async_save:
+            self._pending = threading.Thread(target=_write, daemon=True)
+            self._pending.start()
+        else:
+            _write()
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    # --------------------------------------------------------------- restore
+    def latest_step(self) -> Optional[int]:
+        if self.coord is not None:
+            meta = self.coord.get("ckpt/latest")
+            return None if meta is None else meta["step"]
+        steps = [int(d.split("_")[1]) for d in os.listdir(self.dir)
+                 if d.startswith("step_")
+                 and os.path.exists(os.path.join(self.dir, d, "manifest.json"))]
+        return max(steps) if steps else None
+
+    def restore(self, like, step: Optional[int] = None,
+                shardings=None):
+        """Restore into the structure of ``like``; optionally device_put with
+        new shardings (elastic re-shard: the host arrays are mesh-agnostic)."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            return None
+        d = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        names = [n for n, _ in _flatten_with_names(like)]
+        leaves = []
+        for name in names:
+            info = manifest["files"][name]
+            arr = np.load(os.path.join(d, info["file"]), allow_pickle=False)
+            if info["dtype"] == "bfloat16":
+                import ml_dtypes
+                arr = arr.view(ml_dtypes.bfloat16)
+            leaves.append(arr)
+        treedef = jax.tree_util.tree_structure(like)
+        restored = jax.tree_util.tree_unflatten(treedef, leaves)
+        like_leaves = jax.tree.leaves(like)
+        restored = jax.tree_util.tree_unflatten(
+            treedef, [np.asarray(r).astype(l.dtype) if hasattr(l, "dtype") else r
+                      for r, l in zip(jax.tree.leaves(restored), like_leaves)])
+        if shardings is not None:
+            restored = jax.device_put(restored, shardings)
+        else:
+            restored = jax.tree.map(jax.numpy.asarray, restored)
+        return restored, step

@@ -1,0 +1,2 @@
+from .schedules import (direct_allreduce, pig_allreduce,  # noqa: F401
+                        pig_allreduce_quantized, sync_grads)

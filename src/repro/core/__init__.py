@@ -1,0 +1,11 @@
+"""The paper's contribution: Pig + PigPaxos (and baselines) on a
+deterministic discrete-event cluster runtime."""
+from .analytical import (follower_messages, leader_messages,
+                         total_messages_per_round)  # noqa: F401
+from .cluster import Cluster, Stats, WorkloadConfig, agreement_ok  # noqa: F401
+from .epaxos import EPaxosNode  # noqa: F401
+from .events import Scheduler  # noqa: F401
+from .messages import Command, CostModel  # noqa: F401
+from .network import Network, Topology, wan_topology  # noqa: F401
+from .paxos import PaxosNode  # noqa: F401
+from .pig import DirectComm, PigComm, PigConfig  # noqa: F401

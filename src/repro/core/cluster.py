@@ -1,0 +1,208 @@
+"""Cluster harness: protocol deployments, closed-loop clients, failure
+injection, and measurement (throughput / latency percentiles / message loads).
+
+Mirrors the paper's testbed (§5.1): closed-loop (synchronous) clients, a
+YCSB-like uniform workload over a 1000-key in-memory KV store, latency
+measured at the client, throughput driven by the number of clients.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from .epaxos import EPaxosNode
+from .events import Scheduler
+from .messages import ClientReply, ClientRequest, Command, CostModel
+from .network import Network, Topology
+from .node import Node
+from .paxos import PaxosNode
+from .pig import PigConfig
+
+
+@dataclass
+class WorkloadConfig:
+    n_keys: int = 1000
+    payload_bytes: int = 8
+    write_fraction: float = 0.5   # paper: even reads/writes, both replicated
+
+
+class Client:
+    """Closed-loop client: one outstanding op; next op starts on reply."""
+
+    def __init__(self, cluster: "Cluster", cid: int, pick_target: Callable[[], int],
+                 workload: WorkloadConfig, stop_at: float):
+        self.cluster = cluster
+        self.id = cid
+        self.net_id = cluster.topo.n + cid      # ids >= n bypass CPU queues
+        self.pick_target = pick_target
+        self.wl = workload
+        self.stop_at = stop_at
+        self.seq = 0
+        self.sent_at = 0.0
+        self.crashed = False
+        self.latencies: List[tuple] = []   # (completion_time, latency)
+        self.payload = bytes(workload.payload_bytes)
+        cluster.net.register(self.net_id, self)
+
+    def start(self) -> None:
+        self._issue()
+
+    def _issue(self) -> None:
+        sched = self.cluster.sched
+        if sched.now >= self.stop_at:
+            return
+        rng = sched.rng
+        self.seq += 1
+        op = "put" if rng.random() < self.wl.write_fraction else "get"
+        cmd = Command(client_id=self.id, seq=self.seq, op=op,
+                      key=int(rng.integers(self.wl.n_keys)),
+                      value=self.payload if op == "put" else None)
+        self.sent_at = sched.now
+        self.cluster.net.send(self.net_id, self.pick_target(), ClientRequest(cmd=cmd))
+
+    def deliver(self, msg: ClientReply) -> None:
+        if msg.seq != self.seq:
+            return   # stale reply (e.g. from a retried request)
+        sched = self.cluster.sched
+        if not msg.ok:
+            # not leader / not elected yet: back off and retry the op
+            sched.after(5e-3, self._retry)
+            return
+        self.latencies.append((sched.now, sched.now - self.sent_at))
+        self._issue()
+
+    def _retry(self) -> None:
+        if self.cluster.sched.now >= self.stop_at:
+            return
+        self.seq -= 1
+        self._issue()
+
+
+class Cluster:
+    """A protocol deployment + clients on one scheduler."""
+
+    def __init__(self, protocol: str, n: int, topo: Optional[Topology] = None,
+                 pig: Optional[PigConfig] = None, seed: int = 0,
+                 cost: Optional[CostModel] = None, leader_timeout: float = 50e-3,
+                 quorums=None):
+        self.protocol = protocol
+        self.n = n
+        self.sched = Scheduler(seed=seed)
+        self.topo = topo or Topology(n=n)
+        self.net = Network(self.sched, self.topo, cost=cost)
+        self.pig = pig
+        peers = list(range(n))
+        self.nodes: List[Node] = []
+        for i in peers:
+            if protocol == "epaxos":
+                self.nodes.append(EPaxosNode(i, self.net, self.sched, peers))
+            else:
+                self.nodes.append(PaxosNode(i, self.net, self.sched, peers,
+                                            pig=pig if protocol == "pigpaxos" else None,
+                                            leader_timeout=leader_timeout,
+                                            quorums=quorums))
+        self.leader_id = 0
+        self.clients: List[Client] = []
+        if protocol in ("paxos", "pigpaxos"):
+            self.nodes[0].start_phase1()
+
+    # ------------------------------------------------------------- clients
+    def add_clients(self, k: int, workload: Optional[WorkloadConfig] = None,
+                    stop_at: float = float("inf"),
+                    start_at: float = 20e-3) -> None:
+        wl = workload or WorkloadConfig()
+        rng = self.sched.rng
+        for c in range(k):
+            if self.protocol == "epaxos":
+                pick = lambda: int(rng.integers(self.n))
+            else:
+                pick = lambda: self.leader_id
+            cl = Client(self, len(self.clients), pick, wl, stop_at)
+            self.clients.append(cl)
+            # stagger client start to avoid a thundering herd at t0
+            self.sched.at(start_at + 1e-4 * c, cl.start)
+
+    # ------------------------------------------------------------- failures
+    def crash_at(self, node_id: int, t: float) -> None:
+        self.sched.at(t, self.nodes[node_id].crash)
+
+    def recover_at(self, node_id: int, t: float) -> None:
+        self.sched.at(t, self.nodes[node_id].recover)
+
+    def partition_at(self, a: int, b: int, t: float) -> None:
+        self.sched.at(t, lambda: self.net.partition(a, b))
+
+    # ------------------------------------------------------------- running
+    def run(self, until: float) -> None:
+        self.sched.run(until=until)
+
+    def measure(self, duration: float, warmup: float = 0.5,
+                clients: int = 60, workload: Optional[WorkloadConfig] = None,
+                reset_stats_at_warmup: bool = True) -> "Stats":
+        stop = warmup + duration
+        self.add_clients(clients, workload, stop_at=stop)
+        if reset_stats_at_warmup:
+            self.sched.at(warmup, self.net.reset_stats)
+        mark = {}
+        def _mark_commits():
+            for i, nd in enumerate(self.nodes):
+                mark[i] = getattr(nd, "committed_count", 0)
+        self.sched.at(warmup, _mark_commits)
+        self.run(until=stop + 0.2)   # drain in-flight ops
+        lats = [l for c in self.clients for (t, l) in c.latencies
+                if warmup <= t <= stop]
+        committed = sum(getattr(nd, "committed_count", 0) for nd in self.nodes) \
+            - sum(mark.values())
+        return Stats.from_lat(lats, duration, self, committed)
+
+
+@dataclass
+class Stats:
+    throughput: float
+    mean_ms: float
+    median_ms: float
+    p25_ms: float
+    p75_ms: float
+    p99_ms: float
+    count: int
+    committed: int
+    msg_in: np.ndarray = None
+    msg_out: np.ndarray = None
+    flight: np.ndarray = None
+    cpu_busy: Dict[int, float] = None
+
+    @classmethod
+    def from_lat(cls, lats: List[float], duration: float, cluster: Cluster,
+                 committed: int) -> "Stats":
+        a = np.asarray(lats) * 1e3 if lats else np.asarray([np.nan])
+        n = cluster.n
+        return cls(
+            throughput=len(lats) / duration,
+            mean_ms=float(np.mean(a)), median_ms=float(np.median(a)),
+            p25_ms=float(np.percentile(a, 25)), p75_ms=float(np.percentile(a, 75)),
+            p99_ms=float(np.percentile(a, 99)),
+            count=len(lats), committed=committed,
+            msg_in=cluster.net.msgs_in[:n].copy(),
+            msg_out=cluster.net.msgs_out[:n].copy(),
+            flight=cluster.net.flight_matrix[:n, :n].copy(),
+            cpu_busy=dict(cluster.net.cpu_busy),
+        )
+
+    def messages_per_op(self, node_id: int) -> float:
+        ops = max(self.committed, 1)
+        return float(self.msg_in[node_id] + self.msg_out[node_id]) / ops
+
+
+def agreement_ok(cluster: Cluster) -> bool:
+    """Safety check: all nodes applied the same commands in the same order
+    (prefix agreement across replicas)."""
+    logs = []
+    for nd in cluster.nodes:
+        logs.append([(s, c.client_id, c.seq, c.op, c.key) for s, c in nd.applied_log])
+    ref = max(logs, key=len)
+    for lg in logs:
+        if lg != ref[:len(lg)]:
+            return False
+    return True

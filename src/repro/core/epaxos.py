@@ -1,0 +1,246 @@
+"""Egalitarian Paxos (EPaxos) — the paper's strongest baseline (§5, §7.2).
+
+Implemented faithfully enough for the paper's comparison:
+  * every node is an opportunistic command leader (clients pick a random node);
+  * PreAccept to the other replicas; fast-path commit when a fast quorum
+    (3N/4, §5.3) returns identical (deps, seq); slow path runs an Accept
+    round with a majority;
+  * dependency tracking per key; commit before execute; execution orders
+    strongly-connected components by sequence number;
+  * message sizes grow with N (dependency bookkeeping), reproducing the
+    paper's observation that 25-node EPaxos messages serialize ~4x slower
+    than 5-node ones (§5.3) — see messages.CostModel.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from .events import Scheduler
+from .messages import (ClientReply, ClientRequest, Command, EAccept,
+                       EAcceptReply, ECommit, PreAccept, PreAcceptReply)
+from .network import Network
+from .node import Node
+from .quorums import fast_quorum, majority
+
+
+@dataclass
+class _Inst:
+    cmd: Optional[Command] = None
+    deps: frozenset = frozenset()
+    seq: int = 0
+    state: str = "none"       # none|preaccepted|accepted|committed|executed
+    client_src: int = -1
+    replies: list = field(default_factory=list)
+    accept_acks: int = 0
+    is_mine: bool = False
+
+
+class EPaxosNode(Node):
+    def __init__(self, node_id: int, net: Network, sched: Scheduler,
+                 peers: list[int]):
+        super().__init__(node_id, net, sched)
+        self.peers = list(peers)
+        self.n = len(peers)
+        self.fq = fast_quorum(self.n)
+        self.maj = majority(self.n)
+        self.next_inum = 0
+        self.insts: Dict[tuple, _Inst] = {}
+        # per-key: latest interfering instance per replica (standard EPaxos
+        # optimization: depend on the most recent conflict per replica)
+        self.interf: Dict[int, Dict[int, tuple]] = {}
+        self._pending_exec: list = []
+        self.committed_count = 0
+
+    # ---------------------------------------------------------------- leader
+    def on_ClientRequest(self, msg: ClientRequest) -> None:
+        cmd = msg.cmd
+        inst_id = (self.id, self.next_inum)
+        self.next_inum += 1
+        deps = self._conflicts(cmd.key, exclude=inst_id)
+        seq = 1 + max([self.insts[d].seq for d in deps], default=0)
+        inst = _Inst(cmd=cmd, deps=deps, seq=seq, state="preaccepted",
+                     client_src=msg.src, is_mine=True)
+        self.insts[inst_id] = inst
+        self._note_interf(cmd.key, inst_id)
+        for p in self.peers:
+            if p != self.id:
+                self.send(p, PreAccept(inst=inst_id, cmd=cmd, deps=deps,
+                                       seq=seq, n_cluster=self.n))
+
+    def _conflicts(self, key: int, exclude: tuple) -> frozenset:
+        m = self.interf.get(key)
+        if not m:
+            return frozenset()
+        return frozenset(v for v in m.values() if v != exclude)
+
+    def _note_interf(self, key: int, inst_id: tuple) -> None:
+        self.interf.setdefault(key, {})[inst_id[0]] = inst_id
+
+    # -------------------------------------------------------------- replicas
+    def on_PreAccept(self, msg: PreAccept) -> None:
+        local = self._conflicts(msg.cmd.key, exclude=msg.inst)
+        deps = msg.deps | local
+        seq = max(msg.seq, 1 + max([self.insts[d].seq for d in local
+                                    if d in self.insts], default=0))
+        inst = self.insts.setdefault(msg.inst, _Inst())
+        if inst.state in ("committed", "executed"):
+            return
+        inst.cmd, inst.deps, inst.seq, inst.state = msg.cmd, deps, seq, "preaccepted"
+        self._note_interf(msg.cmd.key, msg.inst)
+        self.send(msg.src, PreAcceptReply(inst=msg.inst, ok=True, deps=deps,
+                                          seq=seq, n_cluster=self.n))
+
+    def on_PreAcceptReply(self, msg: PreAcceptReply) -> None:
+        inst = self.insts.get(msg.inst)
+        if inst is None or not inst.is_mine or inst.state != "preaccepted":
+            return
+        inst.replies.append(msg)
+        if len(inst.replies) < self.fq - 1:
+            return
+        # fast path: fast quorum (incl. self) agrees on (deps, seq)
+        if all(r.deps == inst.deps and r.seq == inst.seq for r in inst.replies):
+            self._commit(msg.inst, inst)
+        else:
+            # slow path: union deps, max seq, Paxos-accept round
+            for r in inst.replies:
+                inst.deps = inst.deps | r.deps
+                inst.seq = max(inst.seq, r.seq)
+            inst.state = "accepted"
+            inst.accept_acks = 1
+            for p in self.peers:
+                if p != self.id:
+                    self.send(p, EAccept(inst=msg.inst, cmd=inst.cmd,
+                                         deps=inst.deps, seq=inst.seq,
+                                         n_cluster=self.n))
+
+    def on_EAccept(self, msg: EAccept) -> None:
+        inst = self.insts.setdefault(msg.inst, _Inst())
+        if inst.state in ("committed", "executed"):
+            return
+        inst.cmd, inst.deps, inst.seq, inst.state = msg.cmd, msg.deps, msg.seq, "accepted"
+        self._note_interf(msg.cmd.key, msg.inst)
+        self.send(msg.src, EAcceptReply(inst=msg.inst, ok=True))
+
+    def on_EAcceptReply(self, msg: EAcceptReply) -> None:
+        inst = self.insts.get(msg.inst)
+        if inst is None or not inst.is_mine or inst.state != "accepted":
+            return
+        inst.accept_acks += 1
+        if inst.accept_acks >= self.maj:
+            self._commit(msg.inst, inst)
+
+    # ---------------------------------------------------------------- commit
+    def _commit(self, inst_id: tuple, inst: _Inst) -> None:
+        inst.state = "committed"
+        self.committed_count += 1
+        for p in self.peers:
+            if p != self.id:
+                self.send(p, ECommit(inst=inst_id, cmd=inst.cmd,
+                                     deps=inst.deps, seq=inst.seq,
+                                     n_cluster=self.n))
+        self._pending_exec.append(inst_id)
+        self._drain_exec()
+
+    def on_ECommit(self, msg: ECommit) -> None:
+        inst = self.insts.setdefault(msg.inst, _Inst())
+        inst.cmd, inst.deps, inst.seq = msg.cmd, msg.deps, msg.seq
+        if inst.state != "executed":
+            inst.state = "committed"
+        self._note_interf(msg.cmd.key, msg.inst)
+        self._pending_exec.append(msg.inst)
+        self._drain_exec()
+
+    def _drain_exec(self) -> None:
+        """Retry blocked instances until no more progress can be made."""
+        progress = True
+        while progress:
+            progress = False
+            still = []
+            for iid in self._pending_exec:
+                if self.insts[iid].state == "executed":
+                    progress = True
+                    continue
+                if self._try_execute(iid):
+                    progress = True
+                else:
+                    still.append(iid)
+            self._pending_exec = still
+
+    # --------------------------------------------------------------- execute
+    def _try_execute(self, start: tuple) -> bool:
+        """Execute committed instances: SCCs in dependency order, ties by
+        (seq, instance id) — the EPaxos execution algorithm."""
+        # Tarjan over committed subgraph reachable from ``start``
+        sys_stack = [start]
+        index: Dict[tuple, int] = {}
+        low: Dict[tuple, int] = {}
+        onstack: Dict[tuple, bool] = {}
+        stack: list = []
+        counter = [0]
+        sccs: list = []
+        blocked = [False]
+
+        def strongconnect(v: tuple) -> None:
+            work = [(v, iter(sorted(self.insts[v].deps)))]
+            index[v] = low[v] = counter[0]
+            counter[0] += 1
+            stack.append(v)
+            onstack[v] = True
+            while work:
+                node, it = work[-1]
+                advanced = False
+                for w in it:
+                    iw = self.insts.get(w)
+                    if iw is None or iw.state in ("none", "preaccepted", "accepted"):
+                        blocked[0] = True    # an uncommitted dep: defer
+                        continue
+                    if iw.state == "executed":
+                        continue
+                    if w not in index:
+                        index[w] = low[w] = counter[0]
+                        counter[0] += 1
+                        stack.append(w)
+                        onstack[w] = True
+                        work.append((w, iter(sorted(self.insts[w].deps))))
+                        advanced = True
+                        break
+                    elif onstack.get(w):
+                        low[node] = min(low[node], index[w])
+                if advanced:
+                    continue
+                work.pop()
+                if work:
+                    low[work[-1][0]] = min(low[work[-1][0]], low[node])
+                if low[node] == index[node]:
+                    scc = []
+                    while True:
+                        w = stack.pop()
+                        onstack[w] = False
+                        scc.append(w)
+                        if w == node:
+                            break
+                    sccs.append(scc)
+
+        inst0 = self.insts.get(start)
+        if inst0 is None or inst0.state != "committed":
+            return inst0 is not None and inst0.state == "executed"
+        strongconnect(start)
+        if blocked[0]:
+            return False   # retried by _drain_exec when the dep commits
+        for scc in sccs:   # Tarjan emits SCCs in reverse topological order
+            for iid in sorted(scc, key=lambda i: (self.insts[i].seq, i)):
+                self._execute(iid)
+        return True
+
+    def _execute(self, inst_id: tuple) -> None:
+        inst = self.insts[inst_id]
+        if inst.state == "executed":
+            return
+        val = self.store.apply(inst.cmd)
+        self.applied_log.append((inst_id, inst.cmd))
+        inst.state = "executed"
+        if inst.is_mine and inst.client_src >= 0:
+            self.send(inst.client_src,
+                      ClientReply(client_id=inst.cmd.client_id,
+                                  seq=inst.cmd.seq, ok=True, value=val))

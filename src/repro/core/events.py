@@ -1,0 +1,61 @@
+"""Deterministic discrete-event scheduler.
+
+The entire protocol evaluation (Figs 8-17, Tables 1-2 of the paper) runs on
+this virtual-time scheduler.  Determinism: a single seeded RNG drives every
+stochastic choice (latency jitter, relay selection, client keys), and ties in
+the event heap are broken by a monotone sequence number.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Callable, Optional
+
+import numpy as np
+
+
+class Scheduler:
+    __slots__ = ("now", "_heap", "_seq", "rng", "_cancelled")
+
+    def __init__(self, seed: int = 0):
+        self.now: float = 0.0
+        self._heap: list = []
+        self._seq: int = 0
+        self.rng = np.random.default_rng(seed)
+        self._cancelled: set[int] = set()
+
+    def at(self, t: float, fn: Callable[[], None]) -> int:
+        """Schedule ``fn`` at absolute virtual time ``t``. Returns a timer id."""
+        self._seq += 1
+        heapq.heappush(self._heap, (t, self._seq, fn))
+        return self._seq
+
+    def after(self, dt: float, fn: Callable[[], None]) -> int:
+        return self.at(self.now + dt, fn)
+
+    def cancel(self, timer_id: int) -> None:
+        self._cancelled.add(timer_id)
+
+    def run(self, until: float = float("inf"), max_events: Optional[int] = None) -> int:
+        """Run events until virtual time ``until``; returns #events executed."""
+        n = 0
+        heap = self._heap
+        cancelled = self._cancelled
+        while heap:
+            t, seq, fn = heap[0]
+            if t > until:
+                break
+            heapq.heappop(heap)
+            if seq in cancelled:
+                cancelled.discard(seq)
+                continue
+            self.now = t
+            fn()
+            n += 1
+            if max_events is not None and n >= max_events:
+                break
+        if self.now < until < float("inf"):
+            self.now = until
+        return n
+
+    def idle(self) -> bool:
+        return not self._heap

@@ -1,0 +1,131 @@
+"""JAX-vectorized performance model of Pig/Paxos communication.
+
+Two complementary pieces (both jit/vmap-compiled, used by benchmarks and
+property tests to cross-validate the discrete-event simulator and Eq. 1-3):
+
+1. Monte-Carlo relay rotation (``relay_load_mc``): samples relay choices for
+   thousands of rounds at once and returns per-node message-load statistics.
+   Shows the amortization effect of rotation (§3.1) and reproduces M_f
+   including its variance (which the closed form hides), plus the static
+   relay hotspot that makes sqrt(N) optimal without rotation (§5.2).
+
+2. Queueing model (``latency_curve``): each node is an M/D/1 server with
+   service time = CPU cost/message (§2.2).  Request latency is the sum of
+   hop latencies + queue waits along the Pig path; saturation = the busiest
+   node reaching utilization 1.  Produces Fig 9-shaped hockey-stick curves
+   analytically.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------- Monte Carlo
+@functools.partial(jax.jit, static_argnames=("n", "r", "rounds", "rotating"))
+def relay_load_mc(key: jax.Array, n: int, r: int, rounds: int,
+                  rotating: bool = True) -> dict:
+    """Per-node messages/round across ``rounds`` Pig rounds (leader = node 0).
+
+    Returns dict with 'mean' (n,), 'maxavg' (scalar: busiest node's mean
+    load), 'leader' (scalar).  Message accounting matches network.py: every
+    send counts at both endpoints.
+    """
+    followers = n - 1
+    sizes = jnp.full((r,), followers // r).at[: followers % r].add(1)
+    group_of = jnp.repeat(jnp.arange(r), sizes, total_repeat_length=followers)
+    # followers are ids 1..n-1; follower f belongs to group_of[f-1]
+    loads = jnp.zeros((rounds, n))
+    # leader: 2R + 2 per round (client io included)
+    loads = loads.at[:, 0].set(2 * r + 2)
+
+    keys = jax.random.split(key, rounds)
+
+    def per_round(k):
+        # pick one relay per group
+        u = jax.random.uniform(k, (followers,))
+        if rotating:
+            score = u
+        else:
+            score = jnp.arange(followers, dtype=jnp.float32)  # static: first member
+        # relay of group g = argmin score within group
+        masked = jnp.where(group_of[None, :] == jnp.arange(r)[:, None],
+                           score[None, :], jnp.inf)
+        relay_idx = jnp.argmin(masked, axis=1)              # (r,) follower index
+        gsz = sizes[group_of]                               # (followers,)
+        base = jnp.full((followers,), 2.0)                  # plain follower
+        relay_load = 2.0 + 2.0 * (sizes - 1)                # fanout+agg + peers RT
+        f_loads = base.at[relay_idx].set(relay_load)
+        return f_loads
+
+    f = jax.vmap(per_round)(keys)                           # (rounds, followers)
+    loads = loads.at[:, 1:].set(f)
+    mean = loads.mean(axis=0)
+    return {"mean": mean, "maxavg": mean.max(), "leader": mean[0],
+            "follower_mean": mean[1:].mean(), "per_round": loads}
+
+
+def mc_summary(n: int, r: int, rounds: int = 4096, rotating: bool = True,
+               seed: int = 0) -> dict:
+    out = relay_load_mc(jax.random.PRNGKey(seed), n, r, rounds, rotating)
+    return {k: np.asarray(v) for k, v in out.items() if k != "per_round"}
+
+
+# ---------------------------------------------------------------- queueing
+def _md1_wait(lam: jnp.ndarray, s: float) -> jnp.ndarray:
+    """Mean wait in an M/D/1 queue with arrival rate lam, service time s."""
+    rho = jnp.clip(lam * s, 0.0, 0.999)
+    return rho * s / (2.0 * (1.0 - rho))
+
+
+@functools.partial(jax.jit, static_argnames=("n", "r", "protocol"))
+def latency_curve(offered: jnp.ndarray, n: int, r: int,
+                  cpu_per_msg: float = 10e-6, hop: float = 0.25e-3,
+                  protocol: str = "pigpaxos") -> dict:
+    """Mean request latency vs offered load (req/s).  Returns latency (s)
+    and per-node utilizations; latency -> inf past saturation."""
+    if protocol == "paxos":
+        m_l = 2.0 * (n - 1) + 2.0
+        m_f = 2.0
+        hops = 4          # client->L, L->F, F->L, L->client
+        visits_l = m_l    # leader CPU touches per request
+        visits_f = m_f
+    elif protocol == "pigpaxos":
+        m_l = 2.0 * r + 2.0
+        m_f = 2.0 * (n - r - 1) / (n - 1) + 2.0
+        hops = 6          # client->L, L->relay, relay->F, F->relay, relay->L, L->client
+        visits_l = m_l
+        visits_f = m_f
+    else:  # epaxos (conflict-free fast path), all nodes symmetric
+        fq = (3 * n) // 4 + (1 if (3 * n) % 4 else 0)
+        m_f = (2.0 * (fq - 1) * 2 + (n - 1) * 2 + 2) / n
+        m_l = m_f
+        hops = 4
+        visits_l = visits_f = m_f
+
+    lam_l = offered * m_l
+    lam_f = offered * m_f
+    w_l = _md1_wait(lam_l, cpu_per_msg)
+    w_f = _md1_wait(lam_f, cpu_per_msg)
+    # each request pays leader queueing on its leader-CPU visits and one
+    # follower/relay queue per remote hop
+    lat = hops * hop + visits_l * (w_l + cpu_per_msg) + visits_f * (w_f + cpu_per_msg)
+    rho_l = lam_l * cpu_per_msg
+    sat = jnp.where(rho_l >= 1.0, jnp.inf, 0.0)
+    return {"latency": lat + sat, "rho_leader": rho_l,
+            "rho_follower": lam_f * cpu_per_msg}
+
+
+def saturation_point(n: int, r: int, cpu_per_msg: float = 10e-6,
+                     protocol: str = "pigpaxos") -> float:
+    if protocol == "paxos":
+        m = 2.0 * (n - 1) + 2.0
+    elif protocol == "pigpaxos":
+        m = max(2.0 * r + 2.0, 2.0 * (n - r - 1) / (n - 1) + 2.0)
+    else:
+        fq = (3 * n) // 4 + (1 if (3 * n) % 4 else 0)
+        m = (2.0 * (fq - 1) * 2 + (n - 1) * 2 + 2) / n
+    return 1.0 / (m * cpu_per_msg)

@@ -1,0 +1,248 @@
+"""Protocol messages and the CPU/byte cost model.
+
+The paper establishes (§2.2) that the leader bottleneck is CPU time spent
+serializing/deserializing messages ("~100,000 phase-2a/2b messages saturate
+one core" => ~10us/message), with a secondary dependence on payload size
+(§5.5) and, for EPaxos, on cluster size N through dependency tracking
+(§5.3: 25-node EPaxos messages serialize ~4x slower than 5-node ones).
+
+Every message type reports ``wire_size()``; the cost model converts sizes to
+CPU seconds at each endpoint.  Constants are calibrated in
+benchmarks/fig9_latency_throughput.py against the paper's reported saturation
+points (Paxos ~2k, EPaxos ~3k, PigPaxos >7k req/s at N=25).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+HEADER_BYTES = 24  # type tag + ballot + slot + ids
+
+
+@dataclass(slots=True)
+class Command:
+    """A state-machine command (KV get/put)."""
+    client_id: int
+    seq: int          # per-client sequence number
+    op: str           # 'get' | 'put'
+    key: int
+    value: Optional[bytes] = None
+
+    def wire_size(self) -> int:
+        return 16 + (len(self.value) if self.value is not None else 0)
+
+
+@dataclass(slots=True)
+class Msg:
+    src: int = -1
+
+    def wire_size(self) -> int:
+        return HEADER_BYTES
+
+    @property
+    def kind(self) -> str:
+        return type(self).__name__
+
+
+# ---------------------------------------------------------------- client I/O
+@dataclass(slots=True)
+class ClientRequest(Msg):
+    cmd: Command = None
+
+    def wire_size(self) -> int:
+        return HEADER_BYTES + self.cmd.wire_size()
+
+
+@dataclass(slots=True)
+class ClientReply(Msg):
+    client_id: int = 0
+    seq: int = 0
+    ok: bool = True
+    value: Optional[bytes] = None
+
+    def wire_size(self) -> int:
+        return HEADER_BYTES + 8 + (len(self.value) if self.value else 0)
+
+
+# ---------------------------------------------------------------- Paxos
+@dataclass(slots=True)
+class P1a(Msg):
+    ballot: tuple = (0, 0)
+
+
+@dataclass(slots=True)
+class P1b(Msg):
+    ballot: tuple = (0, 0)
+    ok: bool = True
+    # accepted: {slot: (ballot, Command)} for value recovery
+    accepted: dict = field(default_factory=dict)
+    # the follower's committed prefix: slots <= commit_index are pruned from
+    # ``accepted``, so a behind new leader must catch them up instead of
+    # re-proposing
+    commit_index: int = -1
+
+    def wire_size(self) -> int:
+        return HEADER_BYTES + 8 + sum(24 + c.wire_size() for (_, c) in self.accepted.values())
+
+
+@dataclass(slots=True)
+class P2a(Msg):
+    ballot: tuple = (0, 0)
+    slot: int = 0
+    cmd: Command = None
+    commit_index: int = -1   # phase-3 piggybacked on phase-2 (§2.1)
+
+    def wire_size(self) -> int:
+        return HEADER_BYTES + 16 + self.cmd.wire_size()
+
+
+@dataclass(slots=True)
+class P2b(Msg):
+    ballot: tuple = (0, 0)
+    slot: int = 0
+    ok: bool = True
+
+
+@dataclass(slots=True)
+class P3(Msg):
+    """Explicit commit (used on idle / trailing slots)."""
+    commit_index: int = -1
+
+
+# ---------------------------------------------------------------- Pig overlay
+@dataclass(slots=True)
+class PigFanout(Msg):
+    """Leader -> relay: carry an inner message + the Pig round id (§3.1)."""
+    pig_id: int = 0
+    group: int = 0
+    inner: Any = None
+    required: int = 0   # acks the relay must gather before replying (PRC, §4.1)
+
+    def wire_size(self) -> int:
+        return HEADER_BYTES + 8 + self.inner.wire_size()
+
+
+@dataclass(slots=True)
+class PigRelayed(Msg):
+    """Relay -> group peers: the re-broadcast inner message."""
+    pig_id: int = 0
+    relay: int = -1
+    inner: Any = None
+
+    def wire_size(self) -> int:
+        return HEADER_BYTES + 8 + self.inner.wire_size()
+
+
+@dataclass(slots=True)
+class PigReply(Msg):
+    """Follower -> relay: reply to the inner message, tagged with pig_id."""
+    pig_id: int = 0
+    inner: Any = None
+
+    def wire_size(self) -> int:
+        return HEADER_BYTES + 8 + self.inner.wire_size()
+
+
+@dataclass(slots=True)
+class PigAggregate(Msg):
+    """Relay -> leader: aggregated acks.
+
+    Deduplicated per §6.4: carries vote summary + ids of *missing* voters
+    (usually empty), not the full voter list.
+    """
+    pig_id: int = 0
+    group: int = 0
+    ballot: tuple = (0, 0)
+    slot: int = -1
+    acks: int = 0
+    voters: tuple = ()       # kept for leader-side dedup across retries
+    missing: tuple = ()
+    timed_out: bool = False  # True => missing nodes are failure suspects (§4.2)
+    reject: bool = False
+    reject_ballot: tuple = (0, 0)
+
+    def wire_size(self) -> int:
+        # leader needs only the missing-voter list on the wire (§6.4);
+        # the voters tuple models state the leader can reconstruct.
+        return HEADER_BYTES + 16 + 2 * len(self.missing)
+
+
+# ---------------------------------------------------------------- EPaxos
+@dataclass(slots=True)
+class PreAccept(Msg):
+    inst: tuple = (0, 0)      # (replica, instance_no)
+    ballot: tuple = (0, 0)
+    cmd: Command = None
+    deps: frozenset = frozenset()
+    seq: int = 0
+    n_cluster: int = 0        # drives the O(N) serialization cost (§5.3)
+
+    def wire_size(self) -> int:
+        return HEADER_BYTES + self.cmd.wire_size() + 12 * max(len(self.deps), 1) + 8 * self.n_cluster
+
+
+@dataclass(slots=True)
+class PreAcceptReply(Msg):
+    inst: tuple = (0, 0)
+    ok: bool = True
+    deps: frozenset = frozenset()
+    seq: int = 0
+    n_cluster: int = 0
+
+    def wire_size(self) -> int:
+        return HEADER_BYTES + 12 * max(len(self.deps), 1) + 8 * self.n_cluster
+
+
+@dataclass(slots=True)
+class EAccept(Msg):
+    inst: tuple = (0, 0)
+    ballot: tuple = (0, 0)
+    cmd: Command = None
+    deps: frozenset = frozenset()
+    seq: int = 0
+    n_cluster: int = 0
+
+    def wire_size(self) -> int:
+        return HEADER_BYTES + self.cmd.wire_size() + 12 * max(len(self.deps), 1) + 8 * self.n_cluster
+
+
+@dataclass(slots=True)
+class EAcceptReply(Msg):
+    inst: tuple = (0, 0)
+    ok: bool = True
+
+
+@dataclass(slots=True)
+class ECommit(Msg):
+    inst: tuple = (0, 0)
+    cmd: Command = None
+    deps: frozenset = frozenset()
+    seq: int = 0
+    n_cluster: int = 0
+
+    def wire_size(self) -> int:
+        return HEADER_BYTES + self.cmd.wire_size() + 12 * max(len(self.deps), 1) + 8 * self.n_cluster
+
+
+# ---------------------------------------------------------------- cost model
+@dataclass
+class CostModel:
+    """CPU seconds charged per message at each endpoint.
+
+    cpu = base + per_byte * wire_size       (serialize at src, parse at dst)
+
+    Defaults give ~10us per small message per endpoint => a 25-node Paxos
+    leader handling 2R+2=50 messages/request saturates at ~2000 req/s,
+    matching §2.2 and Fig 9.
+    """
+    base: float = 10e-6
+    per_byte: float = 0.7e-9        # ~1.4 GB/s serialization bandwidth
+    epaxos_extra_per_node: float = 1.2e-6   # dependency-tracking cost ∝ N (§5.3)
+    epaxos_exec_graph: float = 14e-6        # per-op dependency graph bookkeeping
+
+    def cpu_cost(self, msg: Msg) -> float:
+        c = self.base + self.per_byte * msg.wire_size()
+        n = getattr(msg, "n_cluster", 0)
+        if n:
+            c += self.epaxos_extra_per_node * n
+        return c

@@ -1,0 +1,149 @@
+"""Simulated transport: per-link latency + per-node CPU service queues.
+
+Model (matches the paper's observed bottleneck, §2.2):
+  send(msg):  src CPU busy for cost(msg)   (serialize)
+              -> link latency L(src,dst)   (propagation + jitter)
+              -> dst CPU busy for cost(msg) (deserialize + handle)
+              -> dst handler runs
+
+Each node's CPU is a single FIFO server; leader saturation emerges naturally
+when its CPU utilization approaches 1.  Message counts per (src,dst) and per
+node are recorded to validate the analytical model (Table 1/2) and to draw
+the in-flight heatmap (Fig 17).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from .events import Scheduler
+from .messages import CostModel, Msg
+
+
+@dataclass
+class Topology:
+    """Latency model. ``region_of`` maps node id -> region index;
+    ``rtt_matrix[r1][r2]`` is the one-way base latency between regions."""
+    n: int
+    base_latency: float = 0.25e-3          # LAN one-way
+    jitter: float = 0.05e-3
+    region_of: Optional[list] = None
+    region_latency: Optional[np.ndarray] = None   # one-way seconds
+
+    def latency(self, rng: np.random.Generator, src: int, dst: int) -> float:
+        if self.region_of is not None:
+            # endpoints >= n are clients: co-located with the leader's
+            # region (region 0), as in the paper's WAN setup (§5.3)
+            rs = self.region_of[src] if src < self.n else 0
+            rd = self.region_of[dst] if dst < self.n else 0
+            base = float(self.region_latency[rs][rd])
+        else:
+            base = self.base_latency
+        return base + rng.exponential(self.jitter)
+
+
+def wan_topology(nodes_per_region: list[int], oneway_ms: list[list[float]]) -> Topology:
+    region_of = []
+    for r, k in enumerate(nodes_per_region):
+        region_of += [r] * k
+    return Topology(
+        n=len(region_of),
+        jitter=0.05e-3,
+        region_of=region_of,
+        region_latency=np.asarray(oneway_ms) * 1e-3,
+    )
+
+
+class Network:
+    """Transport + CPU queues + failure injection + accounting."""
+
+    def __init__(self, sched: Scheduler, topo: Topology, cost: CostModel | None = None):
+        self.sched = sched
+        self.topo = topo
+        self.cost = cost or CostModel()
+        self.nodes: Dict[int, "object"] = {}      # id -> node (has .deliver & .crashed)
+        self.cpu_free: Dict[int, float] = {}      # id -> time CPU becomes free
+        self.cpu_busy: Dict[int, float] = {}      # id -> total busy seconds
+        cap = topo.n + 1024  # room for client endpoints (ids >= n)
+        self.msgs_out = np.zeros(cap, dtype=np.int64)
+        self.msgs_in = np.zeros(cap, dtype=np.int64)
+        self.flight_matrix = np.zeros((cap, cap), dtype=np.int64)
+        self.partitioned: set[Tuple[int, int]] = set()
+        self.accounting = True
+
+    def register(self, node_id: int, node) -> None:
+        self.nodes[node_id] = node
+        self.cpu_free[node_id] = 0.0
+        self.cpu_busy[node_id] = 0.0
+
+    # -------------------------------------------------------------- failure
+    def partition(self, a: int, b: int) -> None:
+        self.partitioned.add((a, b))
+        self.partitioned.add((b, a))
+
+    def heal(self, a: int, b: int) -> None:
+        self.partitioned.discard((a, b))
+        self.partitioned.discard((b, a))
+
+    # -------------------------------------------------------------- CPU
+    def _cpu(self, node_id: int, cost: float, fn: Callable[[], None]) -> None:
+        """Occupy ``node_id``'s CPU for ``cost`` seconds, then run ``fn``."""
+        start = max(self.sched.now, self.cpu_free[node_id])
+        done = start + cost
+        self.cpu_free[node_id] = done
+        self.cpu_busy[node_id] += cost
+        self.sched.at(done, fn)
+
+    # -------------------------------------------------------------- send
+    def send(self, src: int, dst: int, msg: Msg) -> None:
+        msg.src = src
+        node_src = self.nodes.get(src)
+        if node_src is not None and getattr(node_src, "crashed", False):
+            return
+        c = self.cost.cpu_cost(msg)
+        if self.accounting:
+            self.msgs_out[src] += 1
+            self.flight_matrix[src][dst] += 1
+
+        def _transmit() -> None:
+            if (src, dst) in self.partitioned:
+                return
+            lat = self.topo.latency(self.sched.rng, src, dst)
+            self.sched.after(lat, lambda: self._arrive(src, dst, msg, c))
+
+        # serialize on the sender's CPU (clients, id >= n, have free CPUs)
+        if src < self.topo.n:
+            self._cpu(src, c, _transmit)
+        else:
+            self.sched.after(0.0, _transmit)
+
+    def _arrive(self, src: int, dst: int, msg: Msg, c: float) -> None:
+        node = self.nodes.get(dst)
+        if node is None or getattr(node, "crashed", False):
+            return
+
+        def _handle() -> None:
+            n2 = self.nodes.get(dst)
+            if n2 is None or getattr(n2, "crashed", False):
+                return
+            if self.accounting:
+                self.msgs_in[dst] += 1
+            n2.deliver(msg)
+
+        if dst < self.topo.n:
+            self._cpu(dst, c, _handle)
+        else:
+            self.sched.after(0.0, _handle)
+
+    # -------------------------------------------------------------- stats
+    def reset_stats(self) -> None:
+        self.msgs_out[:] = 0
+        self.msgs_in[:] = 0
+        self.flight_matrix[:] = 0
+        for k in self.cpu_busy:
+            self.cpu_busy[k] = 0.0
+
+    def message_load(self, node_id: int) -> int:
+        return int(self.msgs_out[node_id] + self.msgs_in[node_id])

@@ -1,0 +1,67 @@
+"""Node runtime: mailbox dispatch, timers, crash/recover, KV state machine."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from .events import Scheduler
+from .messages import Command, Msg
+from .network import Network
+
+
+class KVStore:
+    """The in-memory key-value state machine (mirrors Paxi's internal store)."""
+
+    __slots__ = ("data", "applied_ops")
+
+    def __init__(self):
+        self.data: Dict[int, bytes] = {}
+        self.applied_ops = 0
+
+    def apply(self, cmd: Command) -> Optional[bytes]:
+        self.applied_ops += 1
+        if cmd.op == "put":
+            self.data[cmd.key] = cmd.value
+            return None
+        return self.data.get(cmd.key)
+
+
+class Node:
+    """Base class: protocol nodes subclass and add ``on_<MsgType>`` handlers."""
+
+    def __init__(self, node_id: int, net: Network, sched: Scheduler):
+        self.id = node_id
+        self.net = net
+        self.sched = sched
+        self.crashed = False
+        self.store = KVStore()
+        self.applied_log: list = []   # sequence of (slot/inst, command) applied
+        net.register(node_id, self)
+
+    # ------------------------------------------------------------ transport
+    def send(self, dst: int, msg: Msg) -> None:
+        self.net.send(self.id, dst, msg)
+
+    def deliver(self, msg: Msg) -> None:
+        if self.crashed:
+            return
+        handler = getattr(self, "on_" + msg.kind, None)
+        if handler is None:
+            raise RuntimeError(f"{type(self).__name__} has no handler for {msg.kind}")
+        handler(msg)
+
+    # ------------------------------------------------------------ timers
+    def set_timer(self, delay: float, fn) -> int:
+        def _fire():
+            if not self.crashed:
+                fn()
+        return self.sched.after(delay, _fire)
+
+    def cancel_timer(self, timer_id: int) -> None:
+        self.sched.cancel(timer_id)
+
+    # ------------------------------------------------------------ failure
+    def crash(self) -> None:
+        self.crashed = True
+
+    def recover(self) -> None:
+        self.crashed = False

@@ -1,0 +1,343 @@
+"""Multi-Paxos with a pluggable communication layer.
+
+The consensus core below is *identical* for Paxos and PigPaxos — only the
+``comm`` strategy object differs (DirectComm vs PigComm), mirroring the
+paper's central claim (§3.3) that Pig modifies only the communication
+implementation and therefore inherits Paxos's safety/liveness proofs.
+
+Multi-Paxos specifics implemented (§2.1):
+  * phase-1 once per leadership, subsequent instances go straight to phase-2;
+  * phase-3 (commit) piggybacked on the next phase-2 via ``commit_index``;
+  * pipelined slots (multiple outstanding instances);
+  * duplicate-vote suppression at the leader (voter-id sets, §3.4);
+  * leader retry with fresh relays on timeout (§3.4);
+  * catch-up path for followers that miss a slot body.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional
+
+from .events import Scheduler
+from .messages import (ClientReply, ClientRequest, Command, Msg, P1a, P1b,
+                       P2a, P2b, P3, PigAggregate)
+from .network import Network
+from .node import Node
+from .pig import DirectComm, PigComm, PigConfig, _P1Aggregate
+from .quorums import QuorumSystem, majority
+
+
+@dataclass(slots=True)
+class CatchUpReq(Msg):
+    slots: tuple = ()
+
+
+@dataclass(slots=True)
+class CatchUpResp(Msg):
+    entries: dict = field(default_factory=dict)   # slot -> Command
+
+    def wire_size(self) -> int:
+        return 24 + sum(16 + c.wire_size() for c in self.entries.values())
+
+
+@dataclass
+class _Slot:
+    cmd: Command
+    client_src: int = -1
+    voters: set = field(default_factory=set)
+    committed: bool = False
+    pig_ids: list = field(default_factory=list)
+    timer: Optional[int] = None
+    retries: int = 0
+
+
+class PaxosNode(Node):
+    def __init__(self, node_id: int, net: Network, sched: Scheduler,
+                 peers: list[int], pig: Optional[PigConfig] = None,
+                 leader_timeout: float = 50e-3,
+                 quorums: Optional["QuorumSystem"] = None):
+        super().__init__(node_id, net, sched)
+        self.peers = list(peers)
+        self.n = len(peers)
+        # flexible quorums (FPaxos, paper §7.1): Q1+Q2 > N; classic Paxos
+        # uses majorities for both.  Pig composes with either (§7.1).
+        self.quorums = quorums
+        self.majority = quorums.q2 if quorums else majority(self.n)
+        self.q1 = quorums.q1 if quorums else majority(self.n)
+        self.comm = (PigComm(self, peers, pig) if pig is not None
+                     else DirectComm(self, peers))
+        self.leader_timeout = leader_timeout
+
+        # acceptor state
+        self.promised: tuple = (0, 0)
+        self.accepted: Dict[int, tuple] = {}      # slot -> (ballot, cmd)
+        # learner state
+        self.committed: Dict[int, Command] = {}
+        self.commit_index: int = -1               # contiguous applied prefix
+        self._catching_up: set = set()
+        # leader state
+        self.ballot: tuple = (0, 0)
+        self.is_leader = False
+        self.next_slot: int = 0
+        self.log: Dict[int, _Slot] = {}
+        self._p1_voters: set = set()
+        self._p1_accepted: Dict[int, tuple] = {}
+        self._p1_timer: Optional[int] = None
+        self._p1_max_ci: tuple = (-1, -1)
+        # metrics
+        self.committed_count = 0
+
+    # ================================================================ leader
+    def start_phase1(self) -> None:
+        b = (max(self.promised[0], self.ballot[0]) + 1, self.id)
+        self.ballot = b
+        self.is_leader = False
+        self._p1_voters = {self.id}
+        self._p1_accepted = {s: v for s, v in self.accepted.items()
+                             if s > self.commit_index}
+        self._p1_max_ci = (-1, -1)
+        self.promised = b
+        self.comm.broadcast(lambda: P1a(ballot=b), round_key=("p1", b))
+        self._p1_timer = self.set_timer(self.leader_timeout, self._p1_retry)
+
+    def _p1_retry(self) -> None:
+        if not self.is_leader and self.ballot[1] == self.id:
+            self.start_phase1()
+
+    def _ingest_p1(self, voter: int, msg: P1b) -> None:
+        if self.is_leader or msg.ballot != self.ballot:
+            if not msg.ok and msg.ballot > self.ballot:
+                self._step_down(msg.ballot)
+            return
+        self._p1_voters.add(voter)
+        ci = getattr(msg, "commit_index", -1)
+        if ci > self._p1_max_ci[0]:
+            self._p1_max_ci = (ci, voter)
+        for s, (b, cmd) in msg.accepted.items():
+            cur = self._p1_accepted.get(s)
+            if cur is None or b > cur[0]:
+                self._p1_accepted[s] = (b, cmd)
+        if len(self._p1_voters) >= self.q1:
+            self._become_leader()
+
+    def _become_leader(self) -> None:
+        self.is_leader = True
+        if self._p1_timer is not None:
+            self.cancel_timer(self._p1_timer)
+        # catch up slots that a quorum already committed (they are pruned
+        # from P1b.accepted, so they must be *learned*, not re-proposed)
+        max_ci, ci_src = self._p1_max_ci
+        if max_ci > self.commit_index and ci_src >= 0:
+            self._learn_commit(max_ci, ci_src)
+        # re-propose uncommitted values found during phase-1 (§2.1)
+        slots = sorted(self._p1_accepted)
+        for s in slots:
+            _, cmd = self._p1_accepted[s]
+            if s <= max(self.commit_index, max_ci) or s in self.log:
+                continue
+            self.next_slot = max(self.next_slot, s + 1)
+            self._propose_at(s, cmd, client_src=-1)
+        self.next_slot = max(self.next_slot, self.commit_index + 1,
+                             max_ci + 1)
+
+    def _step_down(self, higher: tuple) -> None:
+        self.is_leader = False
+        for e in self.log.values():
+            if e.timer is not None:
+                self.cancel_timer(e.timer)
+        self.log.clear()
+
+    # -------------------------------------------------------------- phase 2
+    def on_ClientRequest(self, msg: ClientRequest) -> None:
+        if not self.is_leader:
+            self.send(msg.src, ClientReply(client_id=msg.cmd.client_id,
+                                           seq=msg.cmd.seq, ok=False))
+            return
+        slot = self.next_slot
+        self.next_slot += 1
+        self._propose_at(slot, msg.cmd, client_src=msg.src)
+
+    def _propose_at(self, slot: int, cmd: Command, client_src: int) -> None:
+        entry = _Slot(cmd=cmd, client_src=client_src)
+        entry.voters.add(self.id)
+        self.log[slot] = entry
+        # leader accepts locally
+        self.accepted[slot] = (self.ballot, cmd)
+        self._send_p2a(slot)
+
+    def _send_p2a(self, slot: int) -> None:
+        entry = self.log[slot]
+        b, ci = self.ballot, self.commit_index
+
+        def make() -> P2a:
+            return P2a(ballot=b, slot=slot, cmd=entry.cmd, commit_index=ci)
+
+        entry.pig_ids = self.comm.broadcast(make, round_key=slot) or []
+        entry.timer = self.set_timer(self.leader_timeout,
+                                     lambda: self._slot_timeout(slot))
+
+    def _slot_timeout(self, slot: int) -> None:
+        entry = self.log.get(slot)
+        if entry is None or entry.committed or not self.is_leader:
+            return
+        # gray non-responsive relays, then retry with fresh random relays (§3.4)
+        self.comm.on_round_timeout(entry.pig_ids)
+        entry.retries += 1
+        self._send_p2a(slot)
+
+    def ingest_vote(self, ballot: tuple, slot: int, voter: int, ok: bool,
+                    reject_ballot: tuple = (0, 0)) -> None:
+        if not ok:
+            if reject_ballot > self.ballot:
+                self._step_down(reject_ballot)
+            return
+        if ballot != self.ballot or not self.is_leader:
+            return
+        entry = self.log.get(slot)
+        if entry is None or entry.committed:
+            return
+        entry.voters.add(voter)   # set => duplicate votes counted once (§3.4)
+        if len(entry.voters) >= self.majority:
+            self._commit(slot)
+
+    def _commit(self, slot: int) -> None:
+        entry = self.log[slot]
+        entry.committed = True
+        if entry.timer is not None:
+            self.cancel_timer(entry.timer)
+        self.committed[slot] = entry.cmd
+        self.committed_count += 1
+        self._advance()
+
+    def _advance(self) -> None:
+        """Apply contiguously committed slots; reply to waiting clients."""
+        while (self.commit_index + 1) in self.committed:
+            s = self.commit_index + 1
+            cmd = self.committed[s]
+            val = self.store.apply(cmd)
+            self.applied_log.append((s, cmd))
+            self.commit_index = s
+            e = self.log.get(s)
+            if e is not None and e.client_src >= 0:
+                self.send(e.client_src,
+                          ClientReply(client_id=cmd.client_id, seq=cmd.seq,
+                                      ok=True, value=val))
+
+    def flush_commits(self) -> None:
+        """Idle-time commit propagation (harness use; P3 is normally
+        piggybacked on the next P2a)."""
+        for p in self.peers:
+            if p != self.id:
+                self.send(p, P3(commit_index=self.commit_index))
+
+    # ============================================================== acceptor
+    def process_inner(self, msg: Msg):
+        """Handle a (possibly relayed) leader message; return the reply."""
+        if isinstance(msg, P2a):
+            return self._accept(msg)
+        if isinstance(msg, P1a):
+            return self._promise(msg)
+        if isinstance(msg, P3):
+            self._learn_commit(msg.commit_index, msg.src)
+            return None
+        raise RuntimeError(f"unexpected inner {msg.kind}")
+
+    def _accept(self, msg: P2a) -> P2b:
+        if msg.ballot >= self.promised:
+            self.promised = msg.ballot
+            self.accepted[msg.slot] = (msg.ballot, msg.cmd)
+            self._learn_commit(msg.commit_index, msg.src)
+            r = P2b(ballot=msg.ballot, slot=msg.slot, ok=True)
+        else:
+            r = P2b(ballot=self.promised, slot=msg.slot, ok=False)
+        r.src = self.id
+        return r
+
+    def _promise(self, msg: P1a) -> P1b:
+        if msg.ballot > self.promised:
+            self.promised = msg.ballot
+            acc = {s: v for s, v in self.accepted.items()
+                   if s > self.commit_index}
+            r = P1b(ballot=msg.ballot, ok=True, accepted=acc,
+                    commit_index=self.commit_index)
+        else:
+            r = P1b(ballot=self.promised, ok=False)
+        r.src = self.id
+        return r
+
+    def _learn_commit(self, ci: int, leader_src: int) -> None:
+        self.comm.note_committed_up_to(ci)
+        while self.commit_index < ci:
+            s = self.commit_index + 1
+            if s in self.committed:
+                cmd = self.committed[s]
+            elif s in self.accepted:
+                cmd = self.accepted[s][1]
+            else:
+                if s not in self._catching_up and leader_src >= 0:
+                    self._catching_up.add(s)
+                    self.send(leader_src, CatchUpReq(slots=(s,)))
+                    # allow a re-request if the response gets lost
+                    self.set_timer(2 * self.leader_timeout,
+                                   lambda s=s: self._catching_up.discard(s))
+                return
+            self.committed.setdefault(s, cmd)
+            self.store.apply(cmd)
+            self.applied_log.append((s, cmd))
+            self.commit_index = s
+
+    def on_CatchUpReq(self, msg: CatchUpReq) -> None:
+        ent = {s: self.committed[s] for s in msg.slots if s in self.committed}
+        if ent:
+            self.send(msg.src, CatchUpResp(entries=ent))
+
+    def on_CatchUpResp(self, msg: CatchUpResp) -> None:
+        for s, cmd in msg.entries.items():
+            self.committed.setdefault(s, cmd)
+            self._catching_up.discard(s)
+        # replay contiguous applies
+        while (self.commit_index + 1) in self.committed:
+            s = self.commit_index + 1
+            cmd = self.committed[s]
+            self.store.apply(cmd)
+            self.applied_log.append((s, cmd))
+            self.commit_index = s
+
+    # ====================================================== direct handlers
+    def on_P2a(self, msg: P2a) -> None:
+        self.send(msg.src, self._accept(msg))
+
+    def on_P1a(self, msg: P1a) -> None:
+        self.send(msg.src, self._promise(msg))
+
+    def on_P3(self, msg: P3) -> None:
+        self._learn_commit(msg.commit_index, msg.src)
+
+    def on_P2b(self, msg: P2b) -> None:
+        self.ingest_vote(msg.ballot, msg.slot, msg.src, msg.ok,
+                         reject_ballot=msg.ballot)
+
+    def on_P1b(self, msg: P1b) -> None:
+        self._ingest_p1(msg.src, msg)
+
+    # ========================================================= pig handlers
+    def on_PigFanout(self, msg) -> None:
+        self.comm.on_PigFanout(msg)
+
+    def on_PigRelayed(self, msg) -> None:
+        self.comm.on_PigRelayed(msg)
+
+    def on_PigReply(self, msg) -> None:
+        self.comm.on_PigReply(msg)
+
+    def on_PigAggregate(self, msg: PigAggregate) -> None:
+        self.comm.leader_handle_aggregate(msg)
+        if isinstance(msg, _P1Aggregate):
+            for p1b in msg.p1bs:
+                self._ingest_p1(p1b.src, p1b)
+            return
+        if msg.reject:
+            self.ingest_vote(msg.ballot, msg.slot, -1, False,
+                             reject_ballot=msg.reject_ballot)
+        for v in msg.voters:
+            self.ingest_vote(msg.ballot, msg.slot, v, True)

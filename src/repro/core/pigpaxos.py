@@ -1,0 +1,26 @@
+"""PigPaxos (§3.2) = the unchanged Multi-Paxos core + the Pig communication
+layer.  This module exists to make the paper's composition explicit: there
+is intentionally no PigPaxos-specific consensus logic anywhere (§3.3 —
+"required almost no changes to the core Paxos code").
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from .events import Scheduler
+from .network import Network
+from .paxos import PaxosNode
+from .pig import PigConfig
+from .quorums import QuorumSystem
+
+
+class PigPaxosNode(PaxosNode):
+    """A Paxos node whose communication layer is always a Pig overlay."""
+
+    def __init__(self, node_id: int, net: Network, sched: Scheduler,
+                 peers: list[int], pig: Optional[PigConfig] = None,
+                 leader_timeout: float = 50e-3,
+                 quorums: Optional[QuorumSystem] = None):
+        super().__init__(node_id, net, sched, peers,
+                         pig=pig or PigConfig(),
+                         leader_timeout=leader_timeout, quorums=quorums)

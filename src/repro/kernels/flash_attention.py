@@ -1,0 +1,98 @@
+"""Tiled causal flash attention (TPU Pallas) with GQA support.
+
+Layout: q (B, Hq, Sq, Dh), k/v (B, Hkv, Sk, Dh) -> o (B, Hq, Sq, Dh).
+Grid (B, Hq, nq, nk); the k-block axis is minor-most, so the online-softmax
+scratch (m, l, acc) carries across k blocks sequentially (TPU grid order).
+Block sizes target VMEM: q/k/v tiles of (block, Dh) with Dh padded to a
+multiple of 128 by the ops.py wrapper so the MXU sees aligned matmuls.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  block_q: int, block_k: int, nk: int, scale: float,
+                  causal: bool):
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    qi = pl.program_id(2)
+    run = True
+    if causal:
+        # skip blocks strictly above the diagonal
+        run = (ki * block_k) <= (qi * block_q + block_q - 1)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, dh)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, dh)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))   # (bq, bk)
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret", "sm_scale"))
+def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array,
+                         causal: bool = True, block_q: int = 128,
+                         block_k: int = 128, interpret: bool = False,
+                         sm_scale: float | None = None) -> jax.Array:
+    """q: (B,Hq,Sq,Dh); k/v: (B,Hkv,Sk,Dh).  Dh and S must be multiples of
+    the block sizes (the ops.py wrapper pads)."""
+    B, Hq, Sq, Dh = q.shape
+    _, Hkv, Sk, _ = k.shape
+    rep = Hq // Hkv
+    nq = Sq // block_q
+    nk = Sk // block_k
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(Dh)
+    kernel = functools.partial(_flash_kernel, block_q=block_q, block_k=block_k,
+                               nk=nk, scale=scale, causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, Dh), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, Dh), lambda b, h, qi, ki: (b, h // rep, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, Dh), lambda b, h, qi, ki: (b, h // rep, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, Dh), lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, Dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

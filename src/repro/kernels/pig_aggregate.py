@@ -1,0 +1,56 @@
+"""Pig relay aggregation kernel (TPU Pallas).
+
+The TPU analogue of the relay's ack aggregation hot loop (§3.1 step 4 /
+§6.4): fuse the dequantize + accumulate of G group members' int8-compressed
+gradient shards into one pass, so the "relay" chip never materializes the
+dequantized f32 copies in HBM.
+
+Inputs per block:  shards (G, block) int8, scales (G, 1) f32 per block.
+Output:            sum_g shards[g] * scales[g]  (f32, one block).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _agg_kernel(q_ref, s_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)          # (G, blk)
+    s = s_ref[...].astype(jnp.float32)          # (G, 1)
+    o_ref[...] = jnp.sum(q * s, axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def pig_aggregate(shards: jax.Array, scales: jax.Array, block: int = 1024,
+                  interpret: bool = False) -> jax.Array:
+    """shards: (G, N) int8 with N % block == 0; scales: (G, N // block) f32.
+    Returns (N,) f32: the dequantized sum across the G group members."""
+    G, N = shards.shape
+    nb = N // block
+    assert scales.shape == (G, nb), (scales.shape, (G, nb))
+    out = pl.pallas_call(
+        _agg_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((G, block), lambda b: (0, b)),
+            pl.BlockSpec((G, 1), lambda b: (0, b)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda b: (0, b)),
+        out_shape=jax.ShapeDtypeStruct((1, N), jnp.float32),
+        interpret=interpret,
+    )(shards, scales)
+    return out[0]
+
+
+def quantize_blockwise(x: jax.Array, block: int = 1024) -> tuple:
+    """Symmetric per-block int8 quantization.  x: (N,) -> (int8 (N,),
+    scales (N//block,))."""
+    N = x.shape[0]
+    xb = x.reshape(N // block, block).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xb), axis=1)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xb / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(N), scale

@@ -1,0 +1,241 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first initialization).
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from ..configs import ARCHS, get_config                     # noqa: E402
+from ..data.pipeline import make_batch_specs                # noqa: E402
+from ..launch.mesh import chips, make_production_mesh       # noqa: E402
+from ..models import make_cache                             # noqa: E402
+from ..roofline import (RooflineReport, analyze_hlo,        # noqa: E402
+                        model_flops_decode, model_flops_train)
+from ..shard import sharding_rules                          # noqa: E402
+from ..train import (TrainOptions, activation_rules,        # noqa: E402
+                     build_prefill_step, build_serve_step, build_train_step,
+                     init_train_state, param_shardings)
+from ..train.sharding import cache_shardings                # noqa: E402
+
+SHAPES = {
+    "train_4k": {"kind": "train", "seq": 4096, "batch": 256},
+    "prefill_32k": {"kind": "prefill", "seq": 32768, "batch": 32},
+    "decode_32k": {"kind": "decode", "seq": 32768, "batch": 128},
+    "long_500k": {"kind": "decode", "seq": 524288, "batch": 1},
+}
+
+
+def input_specs(cfg, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    sh = SHAPES[shape_name]
+    if sh["kind"] == "train":
+        return make_batch_specs(cfg, sh["batch"], sh["seq"])
+    if sh["kind"] == "prefill":
+        if cfg.frontend:
+            return {"embeds": jax.ShapeDtypeStruct(
+                (sh["batch"], sh["seq"], cfg.d_model), jnp.bfloat16)}
+        return {"tokens": jax.ShapeDtypeStruct((sh["batch"], sh["seq"]),
+                                               jnp.int32)}
+    # decode: one new token against a cache of seq_len
+    return {
+        "tokens": jax.ShapeDtypeStruct((sh["batch"],), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((sh["batch"],), jnp.int32),
+    }
+
+
+def _as_specs(tree):
+    return jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+
+
+def _opt_shardings(state_shapes, mesh, fsdp: bool):
+    from ..train.step import TrainState
+    p_sh = param_shardings(state_shapes.params, mesh, fsdp=fsdp)
+    mu_sh = param_shardings(state_shapes.opt.mu, mesh, fsdp=fsdp)
+    nu_sh = param_shardings(state_shapes.opt.nu, mesh, fsdp=fsdp)
+    step_sh = NamedSharding(mesh, P())
+    return TrainState(params=p_sh, opt=type(state_shapes.opt)(
+        mu=mu_sh, nu=nu_sh, step=step_sh))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, fsdp: bool = True,
+             microbatch: int = 1, hlo_path: str = None) -> dict:
+    cfg = get_config(arch)
+    sh = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return {"arch": cfg.name, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "skipped": "pure full attention: 500k dense-KV decode is "
+                           "not sub-quadratic (see DESIGN.md §5)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = activation_rules(multi_pod,
+                             shard_kv_seq=(shape_name == "long_500k"))
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    t0 = time.time()
+    with sharding_rules(mesh, rules):
+        key = jax.random.PRNGKey(0)
+        if sh["kind"] == "train":
+            state_shapes = jax.eval_shape(
+                lambda: init_train_state(cfg, key))
+            state_sh = _opt_shardings(state_shapes, mesh, fsdp)
+            batch = input_specs(cfg, shape_name)
+            batch_sh = jax.tree.map(
+                lambda l: NamedSharding(mesh, P(batch_axes)), batch)
+            opts = TrainOptions(remat=True, impl="auto",
+                                microbatch=microbatch)
+            step = build_train_step(cfg, opts)
+            metrics_sh = {"loss": NamedSharding(mesh, P()),
+                          "grad_norm": NamedSharding(mesh, P()),
+                          "lr": NamedSharding(mesh, P())}
+            jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, metrics_sh))
+            lowered = jitted.lower(_as_specs(state_shapes), batch)
+            tokens = sh["batch"] * sh["seq"]
+            mflops = model_flops_train(cfg.active_param_count(), tokens)
+        else:
+            params_shapes = jax.eval_shape(
+                lambda: init_train_state(cfg, key)).params
+            p_sh = param_shardings(params_shapes, mesh, fsdp=fsdp)
+            cache_shapes = jax.eval_shape(
+                lambda: make_cache(cfg, sh["batch"], max_len=sh["seq"]))
+            c_sh = cache_shardings(cache_shapes, mesh, multi_pod,
+                                   shard_kv_seq=(shape_name == "long_500k"))
+            if sh["kind"] == "prefill":
+                step = build_prefill_step(cfg, impl="auto")
+                inp = input_specs(cfg, shape_name)
+                in_sh = jax.tree.map(
+                    lambda l: NamedSharding(mesh, P(batch_axes)), inp)
+                logits_sh = NamedSharding(mesh, P(batch_axes, "model"))
+                kw = ("embeds",) if cfg.frontend else ("tokens",)
+                fn = (lambda params, cache, x: step(params, cache, embeds=x)) \
+                    if cfg.frontend else \
+                    (lambda params, cache, x: step(params, cache, tokens=x))
+                jitted = jax.jit(fn, in_shardings=(p_sh, c_sh, in_sh[kw[0]]),
+                                 out_shardings=(logits_sh, c_sh))
+                lowered = jitted.lower(_as_specs(params_shapes), cache_shapes,
+                                       inp[kw[0]])
+                tokens = sh["batch"] * sh["seq"]
+            else:
+                step = build_serve_step(cfg, impl="auto")
+                inp = input_specs(cfg, shape_name)
+                tok_sh = NamedSharding(
+                    mesh, P(batch_axes) if sh["batch"] > 1 else P())
+                jitted = jax.jit(step, in_shardings=(p_sh, c_sh, tok_sh, tok_sh),
+                                 out_shardings=(c_sh, tok_sh))
+                lowered = jitted.lower(_as_specs(params_shapes), cache_shapes,
+                                       inp["tokens"], inp["pos"])
+                tokens = sh["batch"]
+            mflops = model_flops_decode(cfg.active_param_count(), tokens)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        txt = compiled.as_text()
+        if hlo_path:
+            import gzip
+            with gzip.open(hlo_path, "wt") as f:
+                f.write(txt)
+        pod_size = 256 if multi_pod else None
+        nchips = chips(multi_pod)
+        # loop-corrected whole-program accounting (XLA's cost_analysis visits
+        # while bodies once; see roofline.analyze_hlo)
+        corr = analyze_hlo(txt, pod_size=pod_size)
+        rep = RooflineReport(
+            arch=cfg.name, shape=shape_name,
+            mesh="multi" if multi_pod else "single", chips=nchips,
+            hlo_flops=corr["flops"] * nchips,
+            hlo_bytes=corr["traffic_bytes"] * nchips,
+            coll_bytes=corr["coll_total"] * nchips,
+            coll_cross_pod=corr["coll_cross_pod"] * nchips,
+            model_flops=mflops)
+        out = rep.to_dict()
+        out.update({
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+            },
+            "collectives": corr["by_kind"],
+            "loops": corr["loops"][:16],
+            "in_pod_bytes_per_chip": corr["coll_in_pod"],
+            "cross_pod_bytes_per_chip": corr["coll_cross_pod"],
+            "raw_cost_analysis": {
+                "flops_per_device": float(cost.get("flops", 0.0)),
+                "bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+            },
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "fsdp": fsdp, "microbatch": microbatch,
+        })
+        return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single,multi")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--fsdp", type=int, default=1)
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCHS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = args.mesh.split(",")
+    os.makedirs(args.out, exist_ok=True)
+
+    n_ok = n_skip = n_fail = 0
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape in shapes:
+                tag = f"-{args.tag}" if args.tag else ""
+                path = os.path.join(args.out,
+                                    f"{mesh_kind}--{arch}--{shape}{tag}.json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip-existing] {path}", flush=True)
+                    continue
+                t0 = time.time()
+                try:
+                    out = run_cell(arch, shape, multi_pod=(mesh_kind == "multi"),
+                                   fsdp=bool(args.fsdp),
+                                   microbatch=args.microbatch,
+                                   hlo_path=path.replace(".json", ".hlo.gz"))
+                    if "skipped" in out:
+                        n_skip += 1
+                        print(f"[SKIP] {mesh_kind} {arch} {shape}: "
+                              f"{out['skipped']}", flush=True)
+                    else:
+                        n_ok += 1
+                        print(f"[OK]   {mesh_kind} {arch} {shape} "
+                              f"({time.time()-t0:.0f}s) "
+                              f"bottleneck={out['bottleneck']} "
+                              f"frac={out['roofline_fraction']:.3f}", flush=True)
+                except Exception as e:   # noqa: BLE001
+                    n_fail += 1
+                    out = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                    print(f"[FAIL] {mesh_kind} {arch} {shape}: {e}", flush=True)
+                with open(path, "w") as f:
+                    json.dump(out, f, indent=1)
+                jax.clear_caches()
+    print(f"done: ok={n_ok} skip={n_skip} fail={n_fail}", flush=True)
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Inspect a dry-run cell's stored HLO: top collectives / dots / traffic ops
+by loop-corrected bytes.  The 'profile' of the CPU-only workflow (§Perf).
+
+  PYTHONPATH=src python -m repro.launch.hlotop artifacts/dryrun/<cell>.hlo.gz
+"""
+from __future__ import annotations
+
+import argparse
+import gzip
+import re
+import sys
+
+from collections import defaultdict, deque
+
+from ..roofline import (_COLLECTIVES, _TRIP_RE, _BODY_RE, _COND_RE,
+                        _APPLY_RE, _OPERAND_NAME_RE, _parse_instr,
+                        _shape_bytes, _split_computations, _operand_section)
+
+
+def top_ops(txt: str, k: int = 15):
+    comps, entry = _split_computations(txt)
+    parsed = {}
+    shape_of = {}
+    for cname, lines in comps.items():
+        pl = []
+        for ln in lines:
+            p = _parse_instr(ln)
+            if p:
+                shape_of[p[0]] = p[1]
+                pl.append(p)
+        parsed[cname] = pl
+    mult = defaultdict(float)
+    mult[entry] = 1.0
+    q = deque([entry])
+    seen = set()
+    while q:
+        c = q.popleft()
+        for (name, shape, opcode, ln) in parsed.get(c, []):
+            if opcode == "while":
+                t = _TRIP_RE.search(ln)
+                trip = int(t.group(1)) if t else 1
+                for rex in (_BODY_RE, _COND_RE):
+                    mm = rex.search(ln)
+                    if mm and (c, mm.group(1), name) not in seen:
+                        seen.add((c, mm.group(1), name))
+                        mult[mm.group(1)] += mult[c] * trip
+                        q.append(mm.group(1))
+            elif opcode in ("call", "conditional"):
+                mm = _APPLY_RE.search(ln)
+                if mm and (c, mm.group(1), name) not in seen:
+                    seen.add((c, mm.group(1), name))
+                    mult[mm.group(1)] += mult[c]
+                    q.append(mm.group(1))
+    from ..roofline import _NO_TRAFFIC_OPS
+    colls, dots, traffic = [], [], []
+    for cname, m in mult.items():
+        for (name, shape, opcode, ln) in parsed.get(cname, []):
+            kind = opcode[:-6] if opcode.endswith("-start") else opcode
+            b = _shape_bytes(shape)
+            meta = re.search(r'op_name="([^"]*)"', ln)
+            tag = meta.group(1)[-70:] if meta else ""
+            if kind in _COLLECTIVES:
+                colls.append((m * b, kind, shape[:60], m, tag))
+            elif kind == "dot":
+                dots.append((m * b, "dot", shape[:60], m, tag))
+            if kind in _NO_TRAFFIC_OPS:
+                continue
+            if kind in ("dynamic-slice", "gather", "slice"):
+                t = 2 * b
+            elif kind == "dynamic-update-slice":
+                t = 2 * b
+            else:
+                opsec = _operand_section(ln, opcode)
+                t = b + sum(_shape_bytes(shape_of.get(o, ""))
+                            for o in _OPERAND_NAME_RE.findall(opsec))
+            traffic.append((m * t, kind, shape[:60], m, tag))
+    return (sorted(colls, reverse=True)[:k], sorted(dots, reverse=True)[:k],
+            sorted(traffic, reverse=True)[:k])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path")
+    ap.add_argument("-k", type=int, default=15)
+    args = ap.parse_args()
+    with gzip.open(args.path, "rt") as f:
+        txt = f.read()
+    colls, dots, traffic = top_ops(txt, args.k)
+    print("== top collectives (loop-corrected bytes/device) ==")
+    for b, kind, shape, m, tag in colls:
+        print(f"  {b/1e9:9.3f}GB x{m:5.0f} {kind:20s} {shape:40s} {tag}")
+    print("== top dot outputs ==")
+    for b, kind, shape, m, tag in dots:
+        print(f"  {b/1e9:9.3f}GB x{m:5.0f} {kind:20s} {shape:40s} {tag}")
+    print("== top traffic ops ==")
+    for b, kind, shape, m, tag in traffic:
+        print(f"  {b/1e9:9.3f}GB x{m:5.0f} {kind:20s} {shape:40s} {tag}")
+
+
+if __name__ == "__main__":
+    main()

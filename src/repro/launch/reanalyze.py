@@ -1,0 +1,58 @@
+"""Rebuild dry-run JSON artifacts from stored (gzipped) HLO without
+recompiling — used when the roofline accounting itself is iterated on."""
+from __future__ import annotations
+
+import argparse
+import glob
+import gzip
+import json
+import os
+
+from ..configs import get_config
+from ..launch.mesh import chips
+from ..roofline import RooflineReport, analyze_hlo
+
+
+def reanalyze(json_path: str) -> bool:
+    hlo_path = json_path.replace(".json", ".hlo.gz")
+    if not os.path.exists(hlo_path):
+        return False
+    with open(json_path) as f:
+        d = json.load(f)
+    if "skipped" in d or "error" in d:
+        return False
+    with gzip.open(hlo_path, "rt") as f:
+        txt = f.read()
+    multi = d["mesh"] == "multi"
+    corr = analyze_hlo(txt, pod_size=256 if multi else None)
+    n = chips(multi)
+    rep = RooflineReport(
+        arch=d["arch"], shape=d["shape"], mesh=d["mesh"], chips=n,
+        hlo_flops=corr["flops"] * n, hlo_bytes=corr["traffic_bytes"] * n,
+        coll_bytes=corr["coll_total"] * n,
+        coll_cross_pod=corr["coll_cross_pod"] * n,
+        model_flops=d["model_flops"])
+    d.update(rep.to_dict())
+    d["collectives"] = corr["by_kind"]
+    d["loops"] = corr["loops"][:16]
+    d["in_pod_bytes_per_chip"] = corr["coll_in_pod"]
+    d["cross_pod_bytes_per_chip"] = corr["coll_cross_pod"]
+    with open(json_path, "w") as f:
+        json.dump(d, f, indent=1)
+    return True
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    args = ap.parse_args()
+    n = 0
+    for p in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        if reanalyze(p):
+            n += 1
+            print("reanalyzed", p)
+    print(f"done: {n} artifacts")
+
+
+if __name__ == "__main__":
+    main()

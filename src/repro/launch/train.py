@@ -1,0 +1,86 @@
+"""End-to-end training driver.
+
+On real hardware this runs under the production mesh; on CPU it drives the
+reduced (smoke) configs end to end — data pipeline, train step, PigPaxos-
+committed checkpoints, heartbeat/gray-list monitoring, elastic re-mesh
+decisions — i.e. the full control/data plane wiring at laptop scale.
+
+  PYTHONPATH=src python -m repro.launch.train --arch h2o-danube-1.8b \
+      --smoke --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from ..checkpoint import CheckpointManager
+from ..configs import get_config, get_smoke_config
+from ..data import DataConfig, SyntheticLMStream
+from ..optim import AdamWConfig
+from ..runtime import CoordinationService, ElasticController, HeartbeatMonitor
+from ..train import TrainOptions, build_train_step, init_train_state
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-1.8b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    print(f"arch={cfg.name} family={cfg.family} params={cfg.param_count()/1e6:.1f}M")
+
+    coord = CoordinationService(n_nodes=5, n_groups=2, seed=args.seed)
+    mgr = CheckpointManager(args.ckpt_dir, coord=coord, async_save=True)
+    hb = HeartbeatMonitor(timeout=60.0)
+
+    data = DataConfig(global_batch=args.batch, seq_len=args.seq, seed=args.seed)
+    stream = SyntheticLMStream(cfg, data)
+    opts = TrainOptions(
+        remat=True, impl="auto", microbatch=args.microbatch,
+        adamw=AdamWConfig(lr=args.lr, warmup_steps=10, total_steps=args.steps))
+    step_fn = jax.jit(build_train_step(cfg, opts))
+
+    state = init_train_state(cfg, jax.random.PRNGKey(args.seed))
+    start = 0
+    if args.resume:
+        got = mgr.restore(state)
+        if got is not None:
+            state, start = got
+            print(f"resumed from committed step {start}")
+
+    losses = []
+    for s in range(start, args.steps):
+        t0 = time.time()
+        state, metrics = step_fn(state, stream.batch_at(s))
+        dt = time.time() - t0
+        hb.beat(pod=0, step_time=dt)
+        losses.append(float(metrics["loss"]))
+        if (s + 1) % 10 == 0 or s == start:
+            print(f"step {s+1:4d} loss={float(metrics['loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} "
+                  f"lr={float(metrics['lr']):.2e} {dt*1e3:.0f}ms")
+        if (s + 1) % args.ckpt_every == 0:
+            mgr.save(s + 1, state)
+    mgr.wait()
+    committed = coord.get("ckpt/latest")
+    print(f"final loss {np.mean(losses[-5:]):.4f} "
+          f"(first 5: {np.mean(losses[:5]):.4f}); "
+          f"last committed checkpoint: {committed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .config import ModelConfig  # noqa: F401
+from .model import (decode_step, forward, forward_hidden, init_params,  # noqa: F401
+                    lm_loss, make_cache, prefill)

@@ -1,0 +1,248 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention (full, sliding
+window, KV-cached decode), gated MLPs, embeddings.  Pure JAX, params as dicts.
+
+Weight layout conventions (chosen for GSPMD-friendly sharding):
+  wq: (d_model, n_heads*dh)    wk/wv: (d_model, n_kv*dh)   wo: (n_heads*dh, d_model)
+  w1/w3: (d_model, d_ff)       w2: (d_ff, d_model)
+Stacked-layer variants prepend the layer axis L for lax.scan consumption.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..shard import constrain
+from .config import ModelConfig
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def rope_tables(positions: jax.Array, dh: int, theta: float) -> tuple:
+    """positions: (...,) int32 -> cos/sin of shape (..., dh/2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, Dh); cos/sin: (B?, S, Dh/2) broadcast over heads."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    out = jnp.stack([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.reshape(x.shape).astype(dt)
+
+
+def _attn_mask(q_pos: jax.Array, k_pos: jax.Array,
+               window: Optional[int]) -> jax.Array:
+    """Causal (+ sliding window) mask: (..., Sq, Sk) boolean, True = keep."""
+    m = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window is not None:
+        m &= k_pos[..., None, :] > (q_pos[..., :, None] - window)
+    return m
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  q_pos: jax.Array, k_pos: jax.Array,
+                  window: Optional[int] = None,
+                  k_valid: Optional[jax.Array] = None) -> jax.Array:
+    """Reference GQA attention.  q: (B,Sq,Hq,Dh), k/v: (B,Sk,Hkv,Dh).
+    q_pos: (B,Sq) absolute positions; k_pos: (B,Sk).  O(Sq*Sk) memory."""
+    B, Sq, Hq, Dh = q.shape
+    Hkv = k.shape[2]
+    rep = Hq // Hkv
+    qf = q.astype(jnp.float32) / math.sqrt(Dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qf = qf.reshape(B, Sq, Hkv, rep, Dh)
+    logits = jnp.einsum("bqhrd,bkhd->bhrqk", qf, kf)
+    mask = _attn_mask(q_pos, k_pos, window)[:, None, None]      # (B,1,1,Sq,Sk)
+    if k_valid is not None:
+        mask &= k_valid[:, None, None, None, :]
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", p, vf)
+    return out.reshape(B, Sq, Hq, Dh).astype(q.dtype)
+
+
+def attention_chunked(q: jax.Array, k: jax.Array, v: jax.Array,
+                      q_pos: jax.Array, k_pos: jax.Array,
+                      window: Optional[int] = None,
+                      k_valid: Optional[jax.Array] = None,
+                      chunk: int = 512) -> jax.Array:
+    """Flash-style online-softmax attention with a lax.scan over key chunks.
+
+    O(Sq * chunk) live memory instead of O(Sq * Sk) — the pure-jnp analogue
+    of the Pallas flash kernel, used for long sequences on any backend (and
+    for the CPU dry-run, where interpret-mode Pallas would unroll the grid).
+    """
+    B, Sq, Hq, Dh = q.shape
+    Sk = k.shape[1]
+    Hkv = k.shape[2]
+    rep = Hq // Hkv
+    pad = (-Sk) % chunk
+    if pad:
+        zp = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        k, v = zp(k), zp(v)
+        k_pos = jnp.pad(k_pos, [(0, 0), (0, pad)], constant_values=2**30)
+        k_valid = zp(k_valid) if k_valid is not None else None
+        Sk += pad
+    nk = Sk // chunk
+    qf = (q.astype(jnp.float32) / math.sqrt(Dh)).reshape(B, Sq, Hkv, rep, Dh)
+    kc = k.astype(jnp.float32).reshape(B, nk, chunk, Hkv, Dh).transpose(1, 0, 2, 3, 4)
+    vc = v.astype(jnp.float32).reshape(B, nk, chunk, Hkv, Dh).transpose(1, 0, 2, 3, 4)
+    pc = k_pos.reshape(B, nk, chunk).transpose(1, 0, 2)
+    valc = (k_valid.reshape(B, nk, chunk).transpose(1, 0, 2)
+            if k_valid is not None else jnp.ones((nk, B, chunk), bool))
+
+    m0 = jnp.full((B, Hkv, rep, Sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, rep, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hkv, rep, Dh), jnp.float32)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kj, vj, pj, valj = xs
+        s = jnp.einsum("bqhrd,bkhd->bhrqk", qf, kj)          # (B,Hkv,rep,Sq,ck)
+        mask = pj[:, None, None, None, :] <= q_pos[:, None, None, :, None]
+        if window is not None:
+            mask &= pj[:, None, None, None, :] > (
+                q_pos[:, None, None, :, None] - window)
+        mask &= valj[:, None, None, None, :]
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        pexp = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + jnp.sum(pexp, axis=-1)
+        upd = jnp.einsum("bhrqk,bkhd->bqhrd", pexp, vj)
+        acc_new = acc * alpha.transpose(0, 3, 1, 2)[..., None] + upd
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, pc, valc))
+    l = jnp.maximum(l, 1e-30)
+    out = acc / l.transpose(0, 3, 1, 2)[..., None]
+    return out.reshape(B, Sq, Hq, Dh).astype(q.dtype)
+
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": partial(jax.nn.gelu, approximate=True)}[name]
+
+
+def gated_mlp(p: dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    h = _act(act)(x @ p["w1"]) * (x @ p["w3"])
+    h = constrain(h, "batch", "seq", "ff")
+    return h @ p["w2"]
+
+
+# ----------------------------------------------------------------- attention
+def attention_block(p: dict, x: jax.Array, cfg: ModelConfig,
+                    positions: jax.Array,
+                    cache: Optional[dict] = None,
+                    impl: str = "ref") -> tuple:
+    """Full attention sublayer (projections + rope + attention + out-proj).
+
+    cache=None            : training/prefill over the whole sequence.
+    cache={'k','v','len'} : cached mode; writes current k/v at ``positions``
+                            and attends over the cache (decode or chunked
+                            prefill).  Returns (y, new_cache).
+    """
+    B, S, D = x.shape
+    dh = cfg.dh
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, dh)
+    k = (x @ p["wk"]).reshape(B, S, cfg.n_kv_heads, dh)
+    v = (x @ p["wv"]).reshape(B, S, cfg.n_kv_heads, dh)
+    if cfg.qkv_bias:
+        q = q + p["bq"].reshape(cfg.n_heads, dh)
+        k = k + p["bk"].reshape(cfg.n_kv_heads, dh)
+        v = v + p["bv"].reshape(cfg.n_kv_heads, dh)
+    q = constrain(q, "batch", "seq", "heads", None)
+    k = constrain(k, "batch", "seq", "kv_heads", None)
+    cos, sin = rope_tables(positions, dh, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    def _uncached_attention():
+        if impl == "flash" and cfg.sliding_window is None:
+            from ..kernels.ops import flash_attention
+            return flash_attention(q, k, v, causal=True)
+        if impl == "chunked" or (impl in ("ref", "auto") and S > 1024):
+            # linear-memory path: required at 4k+ sequence lengths
+            return attention_chunked(q, k, v, positions, positions,
+                                     window=cfg.sliding_window)
+        return attention_ref(q, k, v, positions, positions,
+                             window=cfg.sliding_window)
+
+    if cache is None:
+        y = _uncached_attention()
+        new_cache = None
+    else:
+        ck, cv, cpos = cache["k"], cache["v"], cache["pos"]
+        W = ck.shape[1]
+        # ring-buffer slots (full cache: W >= max_len so slot == position)
+        slots = positions % W
+        bidx = jnp.arange(B, dtype=jnp.int32)[:, None]
+        ck = ck.at[bidx, slots].set(k)
+        cv = cv.at[bidx, slots].set(v)
+        cpos = cpos.at[bidx, slots].set(positions)
+        valid = cpos >= 0
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+        if S > 1:
+            # prefill: attention over the freshly written sequence itself
+            # (prefill starts from an empty cache, so causal attention over
+            # the current chunk == attention over the cache)
+            y = _uncached_attention()
+        else:
+            y = attention_ref(q, ck, cv, positions, cpos,
+                              window=cfg.sliding_window, k_valid=valid)
+
+    y = y.reshape(B, S, cfg.q_dim) @ p["wo"]
+    return constrain(y, "batch", "seq", "embed"), new_cache
+
+
+def init_attention(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "wq": (jax.random.normal(k1, (d, cfg.q_dim)) * s).astype(dtype),
+        "wk": (jax.random.normal(k2, (d, cfg.kv_dim)) * s).astype(dtype),
+        "wv": (jax.random.normal(k3, (d, cfg.kv_dim)) * s).astype(dtype),
+        "wo": (jax.random.normal(k4, (cfg.q_dim, d)) * (1.0 / math.sqrt(cfg.q_dim))).astype(dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), dtype)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dtype)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dtype)
+    return p
+
+
+def init_mlp(key, d: int, d_ff: int, dtype=jnp.bfloat16) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": (jax.random.normal(k1, (d, d_ff)) / math.sqrt(d)).astype(dtype),
+        "w3": (jax.random.normal(k2, (d, d_ff)) / math.sqrt(d)).astype(dtype),
+        "w2": (jax.random.normal(k3, (d_ff, d)) / math.sqrt(d_ff)).astype(dtype),
+    }
+
+
+def empty_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   n_layers: Optional[int] = None, dtype=jnp.bfloat16) -> dict:
+    """Stacked per-layer KV cache.  Sliding-window models only keep W slots."""
+    W = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    L = cfg.n_layers if n_layers is None else n_layers
+    shape = (L, batch, W, cfg.n_kv_heads, cfg.dh)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "pos": jnp.full((L, batch, W), -1, jnp.int32),
+    }

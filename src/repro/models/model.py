@@ -1,0 +1,291 @@
+"""Top-level model zoo API: init_params / forward / prefill / decode_step.
+
+All families share one parameter layout convention: per-layer params are
+*stacked* along a leading L axis and consumed with ``jax.lax.scan`` so the
+lowered HLO stays compact for 100-layer models (critical for the 512-device
+dry-run compile times) and remat applies uniformly per layer.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..shard import constrain
+from .config import ModelConfig
+from .layers import (attention_block, empty_kv_cache, gated_mlp,
+                     init_attention, init_mlp, rmsnorm)
+from .moe import init_moe, moe_block
+from .rwkv import empty_rwkv_cache, init_rwkv_block, rwkv_block
+from .ssm import empty_ssm_cache, init_ssm, ssm_block
+
+
+# ================================================================== init
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=jnp.bfloat16) -> dict:
+    keys = jax.random.split(key, 8)
+    D, V = cfg.d_model, cfg.vocab
+    p = {
+        "embed": (jax.random.normal(keys[0], (V, D)) * 0.02).astype(dtype),
+        "final_norm": jnp.zeros((D,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = (jax.random.normal(keys[1], (D, V)) / math.sqrt(D)).astype(dtype)
+
+    lkeys = jax.random.split(keys[2], cfg.n_layers)
+    fam = cfg.family
+    if fam in ("dense", "vlm", "audio", "moe"):
+        def one(k):
+            k1, k2 = jax.random.split(k)
+            lp = {"attn": init_attention(k1, cfg, dtype),
+                  "ln1": jnp.zeros((D,), jnp.float32),
+                  "ln2": jnp.zeros((D,), jnp.float32)}
+            if fam == "moe":
+                lp["moe"] = init_moe(k2, cfg, dtype)
+            else:
+                lp["mlp"] = init_mlp(k2, D, cfg.d_ff, dtype)
+            return lp
+        p["layers"] = jax.vmap(one)(lkeys)
+    elif fam == "rwkv":
+        p["layers"] = jax.vmap(lambda k: init_rwkv_block(k, cfg, dtype))(lkeys)
+    elif fam in ("ssm", "hybrid"):
+        def one(k):
+            return {"ssm": init_ssm(k, cfg, dtype),
+                    "ln": jnp.zeros((D,), jnp.float32)}
+        p["layers"] = jax.vmap(one)(lkeys)
+        if fam == "hybrid":
+            k1, k2 = jax.random.split(keys[3])
+            p["shared_attn"] = {
+                "attn": init_attention(k1, cfg, dtype),
+                "mlp": init_mlp(k2, D, cfg.d_ff, dtype),
+                "ln1": jnp.zeros((D,), jnp.float32),
+                "ln2": jnp.zeros((D,), jnp.float32),
+            }
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return p
+
+
+# ================================================================== blocks
+def _dense_block(lp: dict, x, cfg: ModelConfig, positions, cache, impl):
+    h, nc = attention_block(lp["attn"], rmsnorm(x, lp["ln1"], cfg.norm_eps),
+                            cfg, positions, cache, impl)
+    x = x + h
+    xn = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        h = moe_block(lp["moe"], xn, cfg)
+    else:
+        h = gated_mlp(lp["mlp"], xn, cfg.mlp_act)
+    return x + h, nc
+
+
+def _ssm_layer(lp: dict, x, cfg: ModelConfig, cache, chunk=64):
+    h, nc = ssm_block(lp["ssm"], rmsnorm(x, lp["ln"], cfg.norm_eps), cfg,
+                      cache=cache, chunk=chunk)
+    return x + h, nc
+
+
+def _shared_attn_block(sp: dict, x, cfg: ModelConfig, positions, cache, impl):
+    h, nc = attention_block(sp["attn"], rmsnorm(x, sp["ln1"], cfg.norm_eps),
+                            cfg, positions, cache, impl)
+    x = x + h
+    x = x + gated_mlp(sp["mlp"], rmsnorm(x, sp["ln2"], cfg.norm_eps), cfg.mlp_act)
+    return x, nc
+
+
+def _hybrid_split(cfg: ModelConfig, tree):
+    """Split stacked-layer pytree into (n_super, k, ...) main + (rem, ...) tail."""
+    k = cfg.attn_every
+    n_super = cfg.n_layers // k
+    main = jax.tree.map(lambda a: a[: n_super * k].reshape((n_super, k) + a.shape[1:]), tree)
+    tail = jax.tree.map(lambda a: a[n_super * k:], tree)
+    return main, tail, n_super, cfg.n_layers - n_super * k
+
+
+# ================================================================== forward
+def forward_hidden(params: dict, cfg: ModelConfig, tokens=None, embeds=None,
+                   positions=None, impl: str = "ref", remat: bool = False):
+    """Training / evaluation forward pass -> final hidden states (B,S,D)."""
+    if embeds is not None:
+        x = embeds
+        B, S = x.shape[:2]
+    else:
+        B, S = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = constrain(x, "batch", "seq", "embed")
+    fam = cfg.family
+
+    if fam in ("dense", "vlm", "audio", "moe"):
+        def body(carry, lp):
+            y, _ = _dense_block(lp, carry, cfg, positions, None, impl)
+            return y, None
+        # NOTE (§Perf A2, refuted): saving the MoE combine buffer via
+        # save_only_these_names('moe_combine') removes the backward re-gather
+        # (-1TB/chip collectives) but keeps 94 x 10.7GB f32 buffers live --
+        # 1.6TB/device, far over HBM.  Default nothing-saved remat it is.
+        fn = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(fn, x, params["layers"])
+    elif fam == "rwkv":
+        def body(carry, lp):
+            y, _ = rwkv_block(lp, carry, cfg)
+            return y, None
+        fn = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(fn, x, params["layers"])
+    elif fam == "ssm":
+        def body(carry, lp):
+            y, _ = _ssm_layer(lp, carry, cfg, None)
+            return y, None
+        fn = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(fn, x, params["layers"])
+    elif fam == "hybrid":
+        main, tail, n_super, rem = _hybrid_split(cfg, params["layers"])
+        sp = params["shared_attn"]
+
+        def inner(carry, lp):
+            y, _ = _ssm_layer(lp, carry, cfg, None)
+            return y, None
+
+        def super_body(carry, lp_k):
+            y, _ = jax.lax.scan(inner, carry, lp_k)
+            y, _ = _shared_attn_block(sp, y, cfg, positions, None, impl)
+            return y, None
+        fn = jax.checkpoint(super_body) if remat else super_body
+        x, _ = jax.lax.scan(fn, x, main)
+        if rem:
+            fn_t = jax.checkpoint(inner) if remat else inner
+            x, _ = jax.lax.scan(fn_t, x, tail)
+    else:
+        raise ValueError(fam)
+    return rmsnorm(x, params["final_norm"], cfg.norm_eps)
+
+
+def logits_from_hidden(params: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["head"]
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+def forward(params, cfg, tokens=None, embeds=None, positions=None,
+            impl="ref", remat=False):
+    x = forward_hidden(params, cfg, tokens, embeds, positions, impl, remat)
+    return logits_from_hidden(params, cfg, x)
+
+
+# ================================================================== loss
+def lm_loss(params: dict, cfg: ModelConfig, batch: dict,
+            impl: str = "ref", remat: bool = True) -> jax.Array:
+    """Next-token CE, fp32 accumulation; labels < 0 are masked."""
+    x = forward_hidden(params, cfg, tokens=batch.get("tokens"),
+                       embeds=batch.get("embeds"), impl=impl, remat=remat)
+    logits = logits_from_hidden(params, cfg, x).astype(jnp.float32)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None],
+                             axis=-1)[..., 0]
+    nll = (lse - ll) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ================================================================== serving
+def make_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    fam = cfg.family
+    if fam in ("dense", "vlm", "audio", "moe"):
+        return {"kv": empty_kv_cache(cfg, batch, max_len, dtype=dtype)}
+    if fam == "rwkv":
+        return {"rwkv": empty_rwkv_cache(cfg, batch, dtype=dtype)}
+    if fam == "ssm":
+        return {"ssm": empty_ssm_cache(cfg, batch, dtype=dtype)}
+    if fam == "hybrid":
+        n_super = cfg.n_layers // cfg.attn_every
+        return {
+            "ssm": empty_ssm_cache(cfg, batch, dtype=dtype),
+            "kv": empty_kv_cache(cfg, batch, max_len, n_layers=n_super, dtype=dtype),
+        }
+    raise ValueError(fam)
+
+
+def _run_cached(params, cfg, x, positions, cache, impl):
+    """Shared cached-mode layer stack (prefill T>=1 and decode T==1)."""
+    fam = cfg.family
+    if fam in ("dense", "vlm", "audio", "moe"):
+        def body(carry, xs):
+            lp, cl = xs
+            y, nc = _dense_block(lp, carry, cfg, positions, cl, impl)
+            return y, nc
+        x, kv = jax.lax.scan(body, x, (params["layers"], cache["kv"]))
+        return x, {"kv": kv}
+    if fam == "rwkv":
+        def body(carry, xs):
+            lp, cl = xs
+            y, nc = rwkv_block(lp, carry, cfg, cache=cl)
+            return y, nc
+        x, rc = jax.lax.scan(body, x, (params["layers"], cache["rwkv"]))
+        return x, {"rwkv": rc}
+    if fam == "ssm":
+        def body(carry, xs):
+            lp, cl = xs
+            y, nc = _ssm_layer(lp, carry, cfg, cl)
+            return y, nc
+        x, sc = jax.lax.scan(body, x, (params["layers"], cache["ssm"]))
+        return x, {"ssm": sc}
+    if fam == "hybrid":
+        main, tail, n_super, rem = _hybrid_split(cfg, params["layers"])
+        cmain, ctail, _, _ = _hybrid_split(cfg, cache["ssm"])
+        sp = params["shared_attn"]
+
+        def inner(carry, xs):
+            lp, cl = xs
+            y, nc = _ssm_layer(lp, carry, cfg, cl)
+            return y, nc
+
+        def super_body(carry, xs):
+            lp_k, cl_k, kv_l = xs
+            y, nc = jax.lax.scan(inner, carry, (lp_k, cl_k))
+            y, nkv = _shared_attn_block(sp, y, cfg, positions, kv_l, impl)
+            return y, (nc, nkv)
+        x, (cm, kv) = jax.lax.scan(super_body, x, (main, cmain, cache["kv"]))
+        if rem:
+            x, ct = jax.lax.scan(inner, x, (tail, ctail))
+        else:
+            ct = ctail
+        flat = jax.tree.map(
+            lambda m, t: jnp.concatenate([m.reshape((-1,) + m.shape[2:]), t]), cm, ct)
+        return x, {"ssm": flat, "kv": kv}
+    raise ValueError(fam)
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens=None, embeds=None,
+            cache: Optional[dict] = None, impl: str = "ref"):
+    """Process a prompt, filling the cache.  Returns (last_logits, cache)."""
+    if embeds is not None:
+        x = embeds
+        B, S = x.shape[:2]
+    else:
+        B, S = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0)
+    if cache is None:
+        cache = make_cache(cfg, B, max_len=S)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = constrain(x, "batch", "seq", "embed")
+    x, new_cache = _run_cached(params, cfg, x, positions, cache, impl)
+    x = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    return logits_from_hidden(params, cfg, x)[:, 0], new_cache
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache: dict,
+                tokens: jax.Array, pos: jax.Array, impl: str = "ref"):
+    """One decode step.  tokens: (B,) int32; pos: (B,) absolute positions.
+    Returns (logits (B,V), new_cache)."""
+    x = jnp.take(params["embed"], tokens[:, None], axis=0)
+    positions = pos[:, None]
+    x = constrain(x, "batch", "seq", "embed")
+    x, new_cache = _run_cached(params, cfg, x, positions, cache, impl)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return logits_from_hidden(params, cfg, x)[:, 0], new_cache

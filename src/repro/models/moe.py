@@ -1,0 +1,124 @@
+"""Mixture-of-Experts sublayer: shared experts + routed top-k experts.
+
+Dispatch is sort-based (megablocks-style) rather than one-hot-einsum based:
+a (T,E,C) one-hot dispatch tensor is O(T*E*C) and blows past HBM at
+global-batch scale, while argsort + gather/scatter is O(T*k).  Tokens are
+grouped per sequence (G=B groups of S tokens) so dispatch stays local to the
+data shard; expert matmuls run with E sharded over the 'model' mesh axis
+(expert parallelism — the token movement lowers to all-to-alls under pjit).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..shard import constrain
+from .config import ModelConfig
+from .layers import _act, gated_mlp, init_mlp
+
+
+def _group_dispatch_indices(topi: jax.Array, E: int, C: int):
+    """topi: (S, k) expert choices for one token group.
+    Returns (slot (S,k) int32 into a flat (E*C) buffer, keep (S,k) bool)."""
+    S, k = topi.shape
+    flat_e = topi.reshape(-1)                               # (S*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    start = jnp.searchsorted(sorted_e, jnp.arange(E))       # (E,)
+    pos_sorted = jnp.arange(S * k) - start[sorted_e]
+    pos = jnp.zeros((S * k,), jnp.int32).at[order].set(pos_sorted.astype(jnp.int32))
+    keep = pos < C
+    slot = jnp.where(keep, flat_e * C + pos, E * C)         # E*C = drop slot
+    return slot.reshape(S, k), keep.reshape(S, k)
+
+
+def moe_block(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D)."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = max(1, int(cfg.capacity_factor * S * k / E))
+    gates = jax.nn.softmax(
+        x.astype(jnp.float32) @ p["router"].astype(jnp.float32), axis=-1)
+    topv, topi = jax.lax.top_k(gates, k)                    # (B,S,k)
+    topv = topv / (jnp.sum(topv, axis=-1, keepdims=True) + 1e-9)
+
+    slot, keep = jax.vmap(lambda t: _group_dispatch_indices(t, E, C))(topi)
+    slot = jnp.where(keep, slot, E * C)                     # dropped -> trash slot
+
+    # Dispatch stays BATCH-LOCAL: only small int32 index buffers are
+    # scattered; the wide (D) rows move via gathers over an unsharded dim.
+    # The only cross-chip movement is the explicit batch<->expert reshard of
+    # the dense buffers below (all-to-all under GSPMD) — without this, GSPMD
+    # replicates the scatter/gather operands per layer (~50TB/chip/step on
+    # qwen3-moe; see EXPERIMENTS.md §Perf iteration A1).
+    tok = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :, None],
+                           (B, S, k))
+    bidx = jnp.broadcast_to(jnp.arange(B)[:, None, None], (B, S, k))
+    buf_idx = jnp.full((B, E * C + 1), S, jnp.int32)        # S -> zero row
+    buf_idx = buf_idx.at[bidx.reshape(B, -1), slot.reshape(B, -1)].set(
+        tok.reshape(B, -1))
+    buf_idx = constrain(buf_idx, "batch", None)
+    x_pad = jnp.concatenate([x, jnp.zeros((B, 1, D), x.dtype)], axis=1)
+    ex_in = jnp.take_along_axis(x_pad, buf_idx[:, :E * C, None], axis=1)
+    ex_in = ex_in.reshape(B, E, C, D)
+    ex_in = constrain(ex_in, "batch", "experts", None, None)   # a2a -> EP
+
+    # bf16 dot outputs: otherwise XLA hoists the f32->bf16 convert past the
+    # combine all-gather and moves the buffer at twice the width (§Perf A3)
+    pet = x.dtype
+    h = _act(cfg.mlp_act)(jnp.einsum("becd,edf->becf", ex_in, p["w1"],
+                                     preferred_element_type=pet))
+    h = h * jnp.einsum("becd,edf->becf", ex_in, p["w3"],
+                       preferred_element_type=pet)
+    h = constrain(h, "batch", "experts", None, None)
+    ex_out = jnp.einsum("becf,efd->becd", h, p["w2"],
+                        preferred_element_type=pet)
+    ex_out = constrain(ex_out, "batch", "experts", None, None)
+
+    # a2a back to batch-local layout, then gather + weighted combine.
+    # (§Perf A3, refuted twice: neither preferred_element_type nor an
+    # optimization barrier stops the CPU lowering from hoisting the f32->bf16
+    # convert past this all-gather; on a real TPU backend the dot emits bf16
+    # directly, so we keep the clean form.)
+    flat_out = jnp.concatenate(
+        [ex_out.reshape(B, E * C, D),
+         jnp.zeros((B, 1, D), ex_out.dtype)], axis=1)       # trash slot reads 0
+    flat_out = constrain(flat_out, "batch", None, None)
+    # saved under remat (EXPERIMENTS.md §Perf A2): re-gathering this in the
+    # backward pass would repeat the most expensive collective of the layer
+    from jax.ad_checkpoint import checkpoint_name
+    flat_out = checkpoint_name(flat_out, "moe_combine")
+    y = jnp.take_along_axis(flat_out, slot.reshape(B, -1, 1), axis=1)
+    y = y.reshape(B, S, k, D)
+    w = (topv * keep).astype(y.dtype)
+    y = jnp.einsum("bskd,bsk->bsd", y, w)
+    if cfg.n_shared_experts:
+        y = y + gated_mlp(p["shared"], x, cfg.mlp_act)
+    return y
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": (jax.random.normal(ks[0], (d, E)) / math.sqrt(d)).astype(jnp.float32),
+        "w1": (jax.random.normal(ks[1], (E, d, f)) / math.sqrt(d)).astype(dtype),
+        "w3": (jax.random.normal(ks[2], (E, d, f)) / math.sqrt(d)).astype(dtype),
+        "w2": (jax.random.normal(ks[3], (E, f, d)) / math.sqrt(f)).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, cfg.n_shared_experts * f, dtype)
+    return p
+
+
+def aux_load_balance_loss(gates: jax.Array, k: int) -> jax.Array:
+    """Switch-style auxiliary loss (mean fraction * mean gate per expert)."""
+    T, E = gates.shape
+    topi = jax.lax.top_k(gates, k)[1]
+    counts = jnp.sum(jax.nn.one_hot(topi, E, dtype=jnp.float32), axis=(0, 1))
+    frac = counts / jnp.maximum(1.0, T * k)
+    imp = jnp.mean(gates, axis=0)
+    return E * jnp.sum(frac * imp)

@@ -1,0 +1,156 @@
+"""RWKV6 "Finch" blocks: time-mix with data-dependent per-channel decay and
+matrix-valued state, plus squared-ReLU channel-mix.  Attention-free.
+
+Simplifications vs the released checkpoint (documented in DESIGN.md):
+static token-shift mixing coefficients (the low-rank data-dependent mixing of
+the full model is folded into the decay LoRA only), GroupNorm replaced by a
+per-head RMSNorm.  The recurrence itself (data-dependent diag decay w_t,
+bonus u) is the faithful Finch kernel and is what the ssm_scan Pallas kernel
+executes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..shard import constrain
+from .config import ModelConfig
+from .layers import rmsnorm
+from .ssm import chunked_linear_scan, linear_scan_step
+
+HEAD_SIZE = 64
+
+
+def _dims(cfg: ModelConfig):
+    H = cfg.ssm_heads or cfg.d_model // HEAD_SIZE
+    return H, HEAD_SIZE
+
+
+def _shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """Token shift: x_{t-1} (zeros or cache['shift'] for t=0)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def time_mix(p: dict, x: jax.Array, cfg: ModelConfig,
+             cache: Optional[dict] = None, chunk: int = 16) -> tuple:
+    B, T, D = x.shape
+    H, N = _dims(cfg)
+    xx = _shift(x, None if cache is None else cache.get("shift_t"))
+    mix = lambda mu: x + (xx - x) * mu.astype(x.dtype)
+    r = (mix(p["mu_r"]) @ p["wr"]).reshape(B, T, H, N)
+    k = (mix(p["mu_k"]) @ p["wk"]).reshape(B, T, H, N)
+    v = (mix(p["mu_v"]) @ p["wv"]).reshape(B, T, H, N)
+    g = jax.nn.silu(mix(p["mu_g"]) @ p["wg"])
+    # data-dependent decay (LoRA): w_t = exp(-exp(w0 + tanh(x A) B))
+    wx = jnp.tanh(mix(p["mu_w"]).astype(jnp.float32) @ p["w_lora_a"].astype(jnp.float32))
+    logw = -jnp.exp(p["w0"].astype(jnp.float32)[None, None]
+                    + (wx @ p["w_lora_b"].astype(jnp.float32)))
+    # clamp per-step decay so the factored chunk form (q e^{A}) (k e^{-A})
+    # stays inside f32 range: |chunk| * 2.3 << log(f32_max) ~ 88
+    logw = jnp.clip(logw, -2.3, -1e-4)
+    logw = logw.reshape(B, T, H, N)                    # per-channel decay
+
+    if cache is None or T > 1:
+        pad_to = (-T) % chunk
+        s0 = None if cache is None else cache["state"]
+        if pad_to:
+            zp = lambda a: jnp.pad(a, [(0, 0), (0, pad_to)] + [(0, 0)] * (a.ndim - 2))
+            y, new_state = chunked_linear_scan(zp(r), zp(k), zp(v), zp(logw),
+                                               chunk, bonus=p["u"], s0=s0,
+                                               return_state=True)
+            y = y[:, :T]
+        else:
+            y, new_state = chunked_linear_scan(r, k, v, logw, chunk,
+                                               bonus=p["u"], s0=s0,
+                                               return_state=True)
+        if cache is None:
+            new_state = None
+    else:
+        S, y1 = linear_scan_step(cache["state"], r[:, 0], k[:, 0], v[:, 0],
+                                 logw[:, 0], bonus=p["u"])
+        y = y1[:, None]
+        new_state = S
+    # per-head norm (GroupNorm stand-in), gate, output proj
+    y = rmsnorm(y.reshape(B, T, H, N), p["ln_x"].reshape(H, N), cfg.norm_eps)
+    y = y.reshape(B, T, D) * g
+    out = y @ p["wo"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {"shift_t": x[:, -1:], "state": new_state}
+    return constrain(out, "batch", "seq", "embed"), new_cache
+
+
+def channel_mix(p: dict, x: jax.Array, cfg: ModelConfig,
+                cache: Optional[dict] = None) -> tuple:
+    xx = _shift(x, None if cache is None else cache.get("shift_c"))
+    xk = x + (xx - x) * p["mu_ck"].astype(x.dtype)
+    xr = x + (xx - x) * p["mu_cr"].astype(x.dtype)
+    h = jnp.square(jax.nn.relu(xk @ p["w_in"]))
+    h = constrain(h, "batch", "seq", "ff")
+    out = jax.nn.sigmoid(xr @ p["w_recv"]) * (h @ p["w_out"])
+    new_cache = {"shift_c": x[:, -1:]} if cache is not None else None
+    return out, new_cache
+
+
+def rwkv_block(p: dict, x: jax.Array, cfg: ModelConfig,
+               cache: Optional[dict] = None, chunk: int = 16) -> tuple:
+    y, c1 = time_mix(p["time"], rmsnorm(x, p["ln1"], cfg.norm_eps), cfg,
+                     cache=cache, chunk=chunk)
+    x = x + y
+    y, c2 = channel_mix(p["chan"], rmsnorm(x, p["ln2"], cfg.norm_eps), cfg,
+                        cache=cache)
+    x = x + y
+    new_cache = None
+    if cache is not None:
+        new_cache = {**(c1 or {}), **(c2 or {})}
+    return x, new_cache
+
+
+def init_rwkv_block(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    D = cfg.d_model
+    H, N = _dims(cfg)
+    lora = 64
+    ks = jax.random.split(key, 12)
+    s = 1.0 / math.sqrt(D)
+    nrm = lambda k, shape, sc: (jax.random.normal(k, shape) * sc).astype(dtype)
+    time = {
+        "mu_r": jnp.full((D,), 0.5, jnp.float32),
+        "mu_k": jnp.full((D,), 0.5, jnp.float32),
+        "mu_v": jnp.full((D,), 0.5, jnp.float32),
+        "mu_g": jnp.full((D,), 0.5, jnp.float32),
+        "mu_w": jnp.full((D,), 0.5, jnp.float32),
+        "wr": nrm(ks[0], (D, D), s), "wk": nrm(ks[1], (D, D), s),
+        "wv": nrm(ks[2], (D, D), s), "wg": nrm(ks[3], (D, D), s),
+        "wo": nrm(ks[4], (D, D), s),
+        "w_lora_a": nrm(ks[5], (D, lora), s),
+        "w_lora_b": jnp.zeros((lora, D), dtype),   # LoRA-B zero init
+        "w0": jnp.full((D,), 0.5, jnp.float32),       # exp(-exp(.5)) ~ .19 decay
+        "u": (jax.random.normal(ks[7], (H, N)) * 0.1).astype(jnp.float32),
+        "ln_x": jnp.zeros((D,), jnp.float32),
+    }
+    chan = {
+        "mu_ck": jnp.full((D,), 0.5, jnp.float32),
+        "mu_cr": jnp.full((D,), 0.5, jnp.float32),
+        "w_in": nrm(ks[8], (D, cfg.d_ff), s),
+        "w_out": nrm(ks[9], (cfg.d_ff, D), 1.0 / math.sqrt(cfg.d_ff)),
+        "w_recv": nrm(ks[10], (D, D), s),
+    }
+    return {"time": time, "chan": chan,
+            "ln1": jnp.zeros((D,), jnp.float32),
+            "ln2": jnp.zeros((D,), jnp.float32)}
+
+
+def empty_rwkv_cache(cfg: ModelConfig, batch: int,
+                     n_layers: Optional[int] = None, dtype=jnp.bfloat16) -> dict:
+    H, N = _dims(cfg)
+    L = cfg.n_layers if n_layers is None else n_layers
+    return {
+        "shift_t": jnp.zeros((L, batch, 1, cfg.d_model), dtype),
+        "shift_c": jnp.zeros((L, batch, 1, cfg.d_model), dtype),
+        "state": jnp.zeros((L, batch, H, N, N), jnp.float32),
+    }

@@ -1,0 +1,221 @@
+"""Mamba2-style SSD (state-space duality) blocks + the shared chunked
+linear-recurrence scan used by both Mamba2 and RWKV6.
+
+The recurrence (matrix-valued state S in R^{Dk x Dv} per head):
+    S_t = a_t * S_{t-1} + k_t v_t^T          (a_t scalar or diag per channel)
+    y_t = q_t^T S_t (+ bonus u: q_t^T (u ⊙ k_t) v_t for RWKV)
+
+``chunked_linear_scan`` evaluates it chunk-parallel (the same algorithm the
+Pallas ssm_scan kernel implements; kernels/ref.py delegates here).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..shard import constrain
+from .config import ModelConfig
+
+
+def chunked_linear_scan(q: jax.Array, k: jax.Array, v: jax.Array,
+                        log_a: jax.Array, chunk: int = 64,
+                        bonus: Optional[jax.Array] = None,
+                        s0: Optional[jax.Array] = None,
+                        return_state: bool = False):
+    """q,k: (B,T,H,Dk); v: (B,T,H,Dv); log_a: (B,T,H) scalar decay or
+    (B,T,H,Dk) per-channel decay; bonus: (H,Dk) current-token bonus (RWKV);
+    s0: initial state (B,H,Dk,Dv).  Returns y: (B,T,H,Dv) and, when
+    return_state, the final state.  T must be divisible by chunk."""
+    B, T, H, Dk = q.shape
+    Dv = v.shape[-1]
+    nc = T // chunk
+    diag = log_a.ndim == 4
+    f32 = jnp.float32
+    qc = q.astype(f32).reshape(B, nc, chunk, H, Dk)
+    kc = k.astype(f32).reshape(B, nc, chunk, H, Dk)
+    vc = v.astype(f32).reshape(B, nc, chunk, H, Dv)
+    la = log_a.astype(f32).reshape((B, nc, chunk, H, Dk) if diag else (B, nc, chunk, H))
+
+    # shard the recurrence over the state feature dim (head counts are often
+    # not mesh-divisible; Dk usually is).  The inter-chunk einsum contracts
+    # Dk -> one small psum per chunk instead of re-gathering the state
+    # (§Perf iteration C2).
+    qc = constrain(qc, "batch", None, None, None, "state_dk")
+    kc = constrain(kc, "batch", None, None, None, "state_dk")
+
+    A = jnp.cumsum(la, axis=2)                     # inclusive cumulative decay
+    Atot = A[:, :, -1]                             # (B,nc,H[,Dk])
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    strict = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+
+    if diag:
+        # per-channel decay: fold decays into q/k
+        q_in = qc * jnp.exp(A)                     # q_t e^{A_t}
+        k_in = kc * jnp.exp(-A)                    # k_s e^{-A_s}
+        mask = strict if bonus is not None else causal
+        scores = jnp.einsum("bcthd,bcshd->bchts", q_in, k_in)
+        scores = jnp.where(mask[None, None, None], scores, 0.0)
+        y_intra = jnp.einsum("bchts,bcshv->bcthv", scores, vc)
+        if bonus is not None:
+            # RWKV current-token bonus: y_t += (q_t . (u ⊙ k_t)) v_t
+            s_diag = jnp.einsum("bcthd,bcthd->bcth",
+                                qc * bonus.astype(f32)[None, None, None], kc)
+            y_intra += s_diag[..., None] * vc
+        k_state = kc * jnp.exp(Atot[:, :, None] - A)   # k_s e^{A_c - A_s}
+        q_cm = q_in.transpose(1, 0, 2, 3, 4)           # (nc,B,chunk,H,Dk) -- q e^{A}
+        kst_cm = k_state.transpose(1, 0, 2, 3, 4)
+        v_cm = vc.transpose(1, 0, 2, 3, 4)
+        at_cm = Atot.transpose(1, 0, 2, 3)             # (nc,B,H,Dk)
+
+        def stepd(S, xs):
+            q_i, kst, v_i, at = xs
+            y_inter = jnp.einsum("bthd,bhdv->bthv", q_i, S)
+            S = S * jnp.exp(at)[..., None] + jnp.einsum("bthd,bthv->bhdv", kst, v_i)
+            return S, y_inter
+
+        S0 = jnp.zeros((B, H, Dk, Dv), f32) if s0 is None else s0.astype(f32)
+        Sf, y_inter = jax.lax.scan(stepd, S0, (q_cm, kst_cm, v_cm, at_cm))
+        y = y_intra + y_inter.transpose(1, 0, 2, 3, 4)
+    else:
+        decay_qk = jnp.exp(A[:, :, :, None, :] - A[:, :, None, :, :])  # (B,nc,t,s,H)
+        mask = causal
+        scores = jnp.einsum("bcthd,bcshd->bchts", qc, kc)
+        scores = scores * jnp.where(mask[None, None, None],
+                                    decay_qk.transpose(0, 1, 4, 2, 3), 0.0)
+        y_intra = jnp.einsum("bchts,bcshv->bcthv", scores, vc)
+        k_state = kc * jnp.exp(Atot[:, :, None] - A)[..., None]
+        q_cm = (qc * jnp.exp(A)[..., None]).transpose(1, 0, 2, 3, 4)
+        kst_cm = k_state.transpose(1, 0, 2, 3, 4)
+        v_cm = vc.transpose(1, 0, 2, 3, 4)
+        at_cm = Atot.transpose(1, 0, 2)                # (nc,B,H)
+
+        def steps(S, xs):
+            q_i, kst, v_i, at = xs
+            y_inter = jnp.einsum("bthd,bhdv->bthv", q_i, S)
+            S = S * jnp.exp(at)[..., None, None] + jnp.einsum("bthd,bthv->bhdv", kst, v_i)
+            return S, y_inter
+
+        S0 = jnp.zeros((B, H, Dk, Dv), f32) if s0 is None else s0.astype(f32)
+        Sf, y_inter = jax.lax.scan(steps, S0, (q_cm, kst_cm, v_cm, at_cm))
+        y = y_intra + y_inter.transpose(1, 0, 2, 3, 4)
+
+    y = y.reshape(B, T, H, Dv).astype(v.dtype)
+    if return_state:
+        return y, Sf
+    return y
+
+
+def linear_scan_step(S: jax.Array, q: jax.Array, k: jax.Array, v: jax.Array,
+                     log_a: jax.Array, bonus: Optional[jax.Array] = None):
+    """Single-token recurrence for decode.  S: (B,H,Dk,Dv); q/k: (B,H,Dk);
+    v: (B,H,Dv); log_a: (B,H) or (B,H,Dk).  Returns (S', y: (B,H,Dv))."""
+    f32 = jnp.float32
+    Sf = S.astype(f32)
+    a = jnp.exp(log_a.astype(f32))
+    a = a[..., None, None] if a.ndim == 2 else a[..., None]
+    kv = jnp.einsum("bhd,bhv->bhdv", k.astype(f32), v.astype(f32))
+    S_new = Sf * a + kv
+    if bonus is None:
+        # matches the inclusive (s<=t) chunked mask: current kv attended
+        y = jnp.einsum("bhd,bhdv->bhv", q.astype(f32), S_new)
+    else:
+        # RWKV: attend decayed previous state + u-weighted current token
+        y = jnp.einsum("bhd,bhdv->bhv", q.astype(f32), Sf * a)
+        y += jnp.einsum("bhd,bhd->bh", q.astype(f32),
+                        bonus.astype(f32)[None] * k.astype(f32))[..., None] * v.astype(f32)
+    return S_new.astype(S.dtype), y.astype(v.dtype)
+
+
+# --------------------------------------------------------------- Mamba2 block
+def _ssm_dims(cfg: ModelConfig):
+    d_inner = 2 * cfg.d_model
+    P = 64                                   # head dim
+    H = cfg.ssm_heads or d_inner // P
+    N = cfg.ssm_state
+    return d_inner, H, P, N
+
+
+def ssm_block(p: dict, x: jax.Array, cfg: ModelConfig,
+              cache: Optional[dict] = None, chunk: int = 64) -> tuple:
+    """Mamba2(SSD) block.  x: (B,T,D).  cache: {'conv': (B,W-1,d_inner),
+    'state': (B,H,N,P)} for decode.  Returns (y, new_cache)."""
+    B, T, D = x.shape
+    d_inner, H, P, N = _ssm_dims(cfg)
+    zxbcdt = x @ p["in_proj"]
+    z, xs, B_, C_, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N], axis=-1)
+    # causal conv1d over xs
+    W = cfg.conv_width
+    if cache is None:
+        pad = jnp.zeros((B, W - 1, d_inner), xs.dtype)
+        xpad = jnp.concatenate([pad, xs], axis=1)
+        new_conv = xpad[:, -(W - 1):] if W > 1 else None
+    else:
+        xpad = jnp.concatenate([cache["conv"], xs], axis=1)
+        new_conv = xpad[:, -(W - 1):]
+    idx = jnp.arange(T)[:, None] + jnp.arange(W)[None, :]
+    xc = xpad[:, idx]                                  # (B,T,W,d_inner)
+    xs = jax.nn.silu(jnp.einsum("btwd,wd->btd", xc.astype(jnp.float32),
+                                p["conv_w"].astype(jnp.float32))).astype(x.dtype)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # (B,T,H)
+    log_a = -jnp.exp(p["A_log"].astype(jnp.float32))[None, None] * dt                # (B,T,H)
+    v = (xs.reshape(B, T, H, P).astype(jnp.float32) * dt[..., None]).astype(x.dtype)
+    k = jnp.broadcast_to(B_[:, :, None, :], (B, T, H, N)).astype(x.dtype)
+    q = jnp.broadcast_to(C_[:, :, None, :], (B, T, H, N)).astype(x.dtype)
+
+    if cache is None or T > 1:
+        pad_to = (-T) % chunk
+        s0 = None if cache is None else cache["state"]
+        if pad_to:
+            zp = lambda a: jnp.pad(a, [(0, 0), (0, pad_to)] + [(0, 0)] * (a.ndim - 2))
+            y, new_state = chunked_linear_scan(zp(q), zp(k), zp(v), zp(log_a),
+                                               chunk, s0=s0, return_state=True)
+            y = y[:, :T]
+        else:
+            y, new_state = chunked_linear_scan(q, k, v, log_a, chunk, s0=s0,
+                                               return_state=True)
+        if cache is None:
+            new_state = None   # training path does not thread state
+    else:
+        S, y1 = linear_scan_step(cache["state"], q[:, 0], k[:, 0], v[:, 0], log_a[:, 0])
+        y = y1[:, None]
+        new_state = S
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xs.reshape(B, T, H, P)
+    y = y.reshape(B, T, d_inner)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    y = constrain(y, "batch", "seq", "ff")
+    out = y @ p["out_proj"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv, "state": new_state}
+    return constrain(out, "batch", "seq", "embed"), new_cache
+
+
+def init_ssm(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    d_inner, H, P, N = _ssm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    in_dim = 2 * d_inner + 2 * N + H
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, in_dim)) / math.sqrt(d)).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, d_inner)) * 0.5).astype(dtype),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),     # A = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[2], (d_inner, d)) / math.sqrt(d_inner)).astype(dtype),
+    }
+
+
+def empty_ssm_cache(cfg: ModelConfig, batch: int, n_layers: Optional[int] = None,
+                    dtype=jnp.bfloat16) -> dict:
+    d_inner, H, P, N = _ssm_dims(cfg)
+    L = cfg.n_layers if n_layers is None else n_layers
+    return {
+        "conv": jnp.zeros((L, batch, cfg.conv_width - 1, d_inner), dtype),
+        "state": jnp.zeros((L, batch, H, N, P), jnp.float32),
+    }

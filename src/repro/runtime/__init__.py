@@ -1,0 +1,2 @@
+from .coordination import CoordinationService  # noqa: F401
+from .elastic import ElasticController, HeartbeatMonitor  # noqa: F401

@@ -1,0 +1,75 @@
+"""Logical-axis sharding annotations.
+
+Model code annotates activations with *logical* axis names
+(``constrain(x, 'batch', 'seq', 'embed')``).  The launcher installs a mesh +
+logical->mesh rules; without an installed context the calls are no-ops, so
+the same model code runs in single-device smoke tests and 512-device dry-runs.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX = threading.local()
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@contextmanager
+def sharding_rules(mesh: Mesh, rules: Dict[str, MeshAxes]):
+    prev = getattr(_CTX, "state", None)
+    _CTX.state = (mesh, dict(rules))
+    try:
+        yield
+    finally:
+        _CTX.state = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    st = getattr(_CTX, "state", None)
+    return st[0] if st else None
+
+
+def logical_to_spec(names: Sequence[Optional[str]]) -> Optional[P]:
+    st = getattr(_CTX, "state", None)
+    if st is None:
+        return None
+    _, rules = st
+    return P(*[rules.get(n) if n is not None else None for n in names])
+
+
+def constrain(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Apply a logical sharding constraint; no-op outside a rules context.
+
+    Axes that don't divide the dimension are dropped: constraining e.g. 8 kv
+    heads over a 16-way 'model' axis makes GSPMD pad + reshard, replicating
+    the tensor across other axes (measured at ~275GB/chip/step on
+    qwen2.5-32b train_4k — §Perf iteration B1)."""
+    st = getattr(_CTX, "state", None)
+    if st is None:
+        return x
+    mesh, rules = st
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    entries = []
+    for dim, n in zip(x.shape, names):
+        a = rules.get(n) if n is not None else None
+        axes = a if isinstance(a, tuple) else ((a,) if a else ())
+        prod = 1
+        for ax in axes:
+            prod *= sizes[ax]
+        entries.append(a if (axes and dim % prod == 0) else None)
+    spec = P(*entries)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(*names: Optional[str]) -> Optional[NamedSharding]:
+    st = getattr(_CTX, "state", None)
+    if st is None:
+        return None
+    mesh, rules = st
+    spec = P(*[rules.get(n) if n is not None else None for n in names])
+    return NamedSharding(mesh, spec)

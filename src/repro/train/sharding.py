@@ -1,0 +1,195 @@
+"""Mesh sharding rules: logical-axis rules for activations and per-leaf
+PartitionSpecs for parameters / optimizer state.
+
+Strategy (DESIGN.md §4):
+  * batch over ('pod','data') — DP across pods and the in-pod data axis;
+  * TP/EP over 'model' (attention heads, ffn dim, experts, vocab);
+  * FSDP: weight matrices additionally sharded over 'data' on their non-TP
+    dim, so params + Adam moments scale 1/(data*model) per chip.  The
+    backward pass then reduce-scatters gradients within the pod and
+    all-reduces only the 1/G shard across pods — this IS the Pig schedule
+    (GSPMD emits it once the shardings express it; see collectives/).
+  * Params are replicated across pods (FSDP domain = one pod; ZeRO-3 over
+    DCN would trade a cheap memory win for expensive per-layer DCN
+    all-gathers).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def activation_rules(multi_pod: bool, shard_kv_seq: bool = False) -> dict:
+    batch = ("pod", "data") if multi_pod else ("data",)
+    return {
+        "batch": batch,
+        "tokens": batch,          # flattened token dim in MoE dispatch
+        "seq": None,
+        "kv_seq": "data" if shard_kv_seq else None,
+        "embed": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "ff": "model",
+        "experts": "model",
+        "vocab": "model",
+        "state_dk": "model",
+    }
+
+
+# leaf name -> (spec with fsdp, spec without)
+_MATRIX_RULES = {
+    # (L, in, out) projections: out dim on 'model'
+    "wq": (P(None, "data", "model"), P(None, None, "model")),
+    "wk": (P(None, "data", "model"), P(None, None, "model")),
+    "wv": (P(None, "data", "model"), P(None, None, "model")),
+    "w1": (P(None, "data", "model"), P(None, None, "model")),
+    "w3": (P(None, "data", "model"), P(None, None, "model")),
+    "in_proj": (P(None, "data", "model"), P(None, None, "model")),
+    "w_in": (P(None, "data", "model"), P(None, None, "model")),
+    "wr": (P(None, "data", "model"), P(None, None, "model")),
+    "wg": (P(None, "data", "model"), P(None, None, "model")),
+    "w_recv": (P(None, "data", "model"), P(None, None, "model")),
+    "router": (P(None, "data", "model"), P(None, None, "model")),
+    # (L, in, out) with in on 'model'
+    "wo": (P(None, "model", "data"), P(None, "model", None)),
+    "w2": (P(None, "model", "data"), P(None, "model", None)),
+    "out_proj": (P(None, "model", "data"), P(None, "model", None)),
+    "w_out": (P(None, "model", "data"), P(None, "model", None)),
+}
+
+_MOE_RULES = {
+    "w1": (P(None, "model", "data", None), P(None, "model", None, None)),
+    "w3": (P(None, "model", "data", None), P(None, "model", None, None)),
+    "w2": (P(None, "model", None, "data"), P(None, "model", None, None)),
+}
+
+
+def _leaf_spec(path: tuple, shape: tuple, fsdp: bool) -> P:
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    leaf = names[-1]
+    in_moe = "moe" in names and "shared" not in names
+    in_shared_attn = "shared_attn" in names   # single block: no leading L axis
+
+    if leaf == "embed":
+        return P("model", "data") if fsdp else P("model", None)
+    if leaf == "head":
+        return P("data", "model") if fsdp else P(None, "model")
+    if in_moe and leaf in _MOE_RULES and len(shape) == 4:
+        return _MOE_RULES[leaf][0 if fsdp else 1]
+    if leaf in _MATRIX_RULES and len(shape) == 3:
+        return _MATRIX_RULES[leaf][0 if fsdp else 1]
+    if in_shared_attn and leaf in _MATRIX_RULES and len(shape) == 2:
+        full = _MATRIX_RULES[leaf][0 if fsdp else 1]
+        return P(*full[1:])               # drop the (absent) layer axis
+    if leaf == "conv_w":
+        return P(None, None, "model") if len(shape) == 3 else P(None, "model")
+    return P()                            # norms, biases, scalars: replicate
+
+
+def _axis_sizes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def fit_spec(spec: P, shape: tuple, mesh: Mesh) -> P:
+    """pjit argument shardings must divide the dim exactly: drop axes that
+    don't, then try to re-place them on another (non-layer) dim so the leaf
+    stays fully sharded (e.g. 60 experts can't split 16 ways -> fold 'model'
+    onto the 'data' dim instead)."""
+    sizes = _axis_sizes(mesh)
+    dims = list(shape)
+    entries = list(spec) + [None] * (len(dims) - len(spec))
+    as_tuple = lambda a: a if isinstance(a, tuple) else ((a,) if a else ())
+    prod = lambda axes: int(np.prod([sizes[x] for x in axes])) if axes else 1
+    new = []
+    dropped = []
+    for dim, a in zip(dims, entries):
+        axes = as_tuple(a)
+        if axes and dim % prod(axes) != 0:
+            keep = []
+            for x in axes:   # keep a divisible prefix if possible
+                if dim % prod(keep + [x]) == 0:
+                    keep.append(x)
+                else:
+                    dropped.append(x)
+            new.append(tuple(keep) if len(keep) > 1 else (keep[0] if keep else None))
+        else:
+            new.append(a)
+    used = {x for a in new for x in as_tuple(a)}
+    for ax in dropped:
+        if ax in used:
+            continue
+        for i in range(len(dims) - 1, -1, -1):
+            if len(dims) >= 3 and i == 0:
+                continue            # dim 0 is the scan-over-layers axis
+            cur = as_tuple(new[i])
+            if ax in cur:
+                continue
+            if dims[i] % (prod(list(cur)) * sizes[ax]) == 0:
+                new[i] = tuple(list(cur) + [ax])
+                used.add(ax)
+                break
+    return P(*new)
+
+
+def param_shardings(param_tree, mesh: Mesh, fsdp: bool = True):
+    """Map a pytree of arrays/ShapeDtypeStructs to NamedShardings."""
+    def one(path, leaf):
+        spec = _leaf_spec(path, leaf.shape, fsdp)
+        return NamedSharding(mesh, fit_spec(spec, leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(one, param_tree)
+
+
+def batch_sharding(batch_tree, mesh: Mesh, multi_pod: bool):
+    axes = ("pod", "data") if multi_pod else ("data",)
+
+    def one(leaf):
+        spec = P(axes) if leaf.ndim >= 1 else P()
+        return NamedSharding(mesh, spec)
+    return jax.tree.map(one, batch_tree)
+
+
+def cache_shardings(cache_tree, mesh: Mesh, multi_pod: bool,
+                    shard_kv_seq: bool = False):
+    """KV/state caches: batch over DP axes; kv heads over 'model' (GSPMD pads
+    non-divisible head counts); optionally seq over 'data' for long-context."""
+    axes = ("pod", "data") if multi_pod else ("data",)
+
+    sizes = _axis_sizes(mesh)
+
+    def one(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        leafname = names[-1]
+        nd = leaf.ndim
+        if leafname in ("k", "v"):        # (L, B, W, Hkv, Dh)
+            seq = "data" if shard_kv_seq else None
+            bat = None if shard_kv_seq else axes
+            # model-axis placement priority: kv heads, else head_dim, else seq
+            hkv, dh, w = leaf.shape[3], leaf.shape[4], leaf.shape[2]
+            m = sizes["model"]
+            if hkv % m == 0:
+                spec = P(None, bat, seq, "model", None)
+            elif dh % m == 0:
+                spec = P(None, bat, seq, None, "model")
+            elif seq is None and w % m == 0:
+                spec = P(None, bat, "model", None, None)
+            else:
+                spec = P(None, bat, seq, None, None)
+            return NamedSharding(mesh, fit_spec(spec, leaf.shape, mesh))
+        if leafname == "pos":             # (L, B, W)
+            seq = "data" if shard_kv_seq else None
+            bat = None if shard_kv_seq else axes
+            return NamedSharding(mesh, fit_spec(P(None, bat, seq),
+                                                leaf.shape, mesh))
+        if leafname == "state" and nd == 5:   # (L, B, H, Dk, Dv)
+            h, dk = leaf.shape[2], leaf.shape[3]
+            m = sizes["model"]
+            spec = (P(None, axes, "model", None, None) if h % m == 0
+                    else P(None, axes, None, "model", None))
+            return NamedSharding(mesh, fit_spec(spec, leaf.shape, mesh))
+        if nd >= 2:                        # conv/shift caches: (L, B, ...)
+            return NamedSharding(mesh, fit_spec(P(None, axes), leaf.shape, mesh))
+        return NamedSharding(mesh, P())
+    return jax.tree_util.tree_map_with_path(one, cache_tree)

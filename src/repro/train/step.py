@@ -1,0 +1,87 @@
+"""Train / prefill / serve step builders.
+
+``build_train_step`` returns a pure (state, batch) -> (state, metrics)
+function suitable for jax.jit with explicit in/out shardings; microbatching
+(gradient accumulation), remat, and the attention-kernel choice are knobs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import decode_step, init_params, lm_loss, make_cache, prefill
+from ..models.config import ModelConfig
+from ..optim import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclass(frozen=True)
+class TrainOptions:
+    microbatch: int = 1          # gradient-accumulation splits
+    remat: bool = True
+    impl: str = "ref"            # 'ref' | 'flash' attention implementation
+    adamw: AdamWConfig = field(default_factory=AdamWConfig)
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: object
+
+
+def init_train_state(cfg: ModelConfig, key: jax.Array) -> TrainState:
+    params = init_params(cfg, key)
+    return TrainState(params=params, opt=adamw_init(params))
+
+
+def build_train_step(cfg: ModelConfig, opts: TrainOptions = TrainOptions()):
+    def loss_fn(params, batch):
+        return lm_loss(params, cfg, batch, impl=opts.impl, remat=opts.remat)
+
+    def train_step(state: TrainState, batch: dict):
+        if opts.microbatch > 1:
+            k = opts.microbatch
+
+            def split(x):
+                return x.reshape((k, x.shape[0] // k) + x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc_step(carry, mb):
+                loss_acc, g_acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(state.params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / k, g_acc, grads)
+                return (loss_acc + loss / k, g_acc), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (loss, grads), _ = jax.lax.scan(acc_step, (jnp.zeros(()), zeros),
+                                            micro)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+        new_params, new_opt, stats = adamw_update(grads, state.opt,
+                                                  state.params, opts.adamw)
+        metrics = {"loss": loss, **stats}
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig, impl: str = "ref"):
+    """(params, batch_tokens_or_embeds, cache) -> (last_logits, cache)."""
+    def prefill_step(params, cache, tokens=None, embeds=None):
+        return prefill(params, cfg, tokens=tokens, embeds=embeds,
+                       cache=cache, impl=impl)
+    return prefill_step
+
+
+def build_serve_step(cfg: ModelConfig, impl: str = "ref"):
+    """One batched greedy decode step: (params, cache, tokens, pos) ->
+    (cache, next_tokens)."""
+    def serve_step(params, cache, tokens, pos):
+        logits, new_cache = decode_step(params, cfg, cache, tokens, pos,
+                                        impl=impl)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return new_cache, nxt
+    return serve_step

@@ -1,0 +1,97 @@
+"""Property tests (hypothesis) for the analytical model + JAX MC simulator."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import analytical
+from repro.core.jaxsim import latency_curve, mc_summary, saturation_point
+
+
+# ------------------------------------------------------- closed-form invariants
+@given(st.integers(min_value=3, max_value=101).filter(lambda n: n % 2 == 1),
+       st.integers(min_value=1, max_value=100))
+def test_follower_load_bounded(n, r):
+    r = min(r, n - 1)
+    mf = analytical.follower_messages(n, r)
+    assert 2.0 <= mf <= 4.0           # §6.5: asymptote is 4
+
+
+@given(st.integers(min_value=5, max_value=101).filter(lambda n: n % 2 == 1))
+def test_leader_remains_bottleneck(n):
+    """§6.5: for every R, leader load >= amortized follower load."""
+    for r in range(1, n):
+        assert analytical.leader_messages(r) >= analytical.follower_messages(n, r) - 1e-9
+
+
+@given(st.integers(min_value=5, max_value=101).filter(lambda n: n % 2 == 1),
+       st.integers(min_value=1, max_value=100))
+def test_total_messages_r_independent(n, r):
+    r = max(1, min(r, n - 1))
+    g = (n - 1) / r
+    total = (r + 1) + r * ((g - 1) + 1) + (n - 1 - r) * 1
+    assert abs(total - analytical.total_messages_per_round(n)) < 1e-9
+
+
+def test_best_r_rotating_is_one():
+    for n in (5, 9, 15, 25, 49, 99):
+        assert analytical.best_r_rotating(n) == 1     # headline finding
+
+
+def test_best_r_static_near_sqrt():
+    for n in (9, 16, 25, 49, 100):
+        r = analytical.best_r_static(n)
+        assert abs(r - np.sqrt(n - 1)) <= 2           # §5.2
+
+
+def test_table1_values():
+    rows = {row["R"]: row for row in analytical.load_table(25)}
+    # exact values from Table 1 of the paper
+    assert rows[1]["M_l"] == 4 and abs(rows[1]["M_f"] - 3.92) < 0.01
+    assert rows[3]["M_l"] == 8 and abs(rows[3]["M_f"] - 3.75) < 0.01
+    assert rows[6]["M_l"] == 14 and abs(rows[6]["M_f"] - 3.50) < 0.01
+    assert rows[24]["M_l"] == 50 and rows[24]["M_f"] == 2.0
+    assert abs(rows[1]["ratio"] - 1.020) < 0.01
+    assert abs(rows[24]["ratio"] - 25.0) < 0.01
+
+
+def test_table2_values():
+    rows = {row["R"]: row for row in analytical.load_table(5)}
+    assert rows[1]["M_l"] == 4 and abs(rows[1]["M_f"] - 3.5) < 0.01
+    assert rows[2]["M_l"] == 6 and abs(rows[2]["M_f"] - 3.0) < 0.01
+    assert rows[4]["M_l"] == 10 and rows[4]["M_f"] == 2.0
+
+
+# ------------------------------------------------------- MC vs closed form
+@pytest.mark.parametrize("n,r", [(9, 1), (9, 3), (25, 1), (25, 3), (25, 6)])
+def test_mc_matches_closed_form(n, r):
+    out = mc_summary(n, r, rounds=8192)
+    assert abs(out["leader"] - analytical.leader_messages(r)) < 1e-3
+    assert abs(out["follower_mean"] - analytical.follower_messages(n, r)) < 0.05
+
+
+def test_mc_static_hotspot():
+    """Without rotation the static relay's average load is the group cost."""
+    out = mc_summary(25, 3, rounds=1024, rotating=False)
+    assert abs(out["maxavg"] - analytical.static_relay_load(25, 3)) < 1e-3
+    rot = mc_summary(25, 3, rounds=8192, rotating=True)
+    assert rot["maxavg"] < out["maxavg"]   # rotation amortizes the hotspot
+
+
+# ------------------------------------------------------- queueing model
+def test_latency_curve_hockey_stick():
+    import jax.numpy as jnp
+    offered = jnp.asarray([100.0, 1000.0, 1800.0])
+    out = latency_curve(offered, n=25, r=24, protocol="paxos")
+    lat = np.asarray(out["latency"])
+    assert lat[0] < lat[1] < lat[2]
+    assert np.all(np.isfinite(lat))
+    out_sat = latency_curve(jnp.asarray([2100.0]), n=25, r=24, protocol="paxos")
+    assert not np.isfinite(np.asarray(out_sat["latency"]))[0]
+
+
+def test_saturation_ordering_matches_paper():
+    """Fig 9: PigPaxos >> EPaxos > Paxos at N=25."""
+    paxos = saturation_point(25, 24, protocol="paxos")
+    pig = saturation_point(25, 3, protocol="pigpaxos")
+    assert pig > 3 * paxos    # ">3 folds improved throughput" (abstract)

@@ -1,0 +1,120 @@
+"""Per-architecture smoke tests: reduced configs, one forward + one grad step
+on CPU; asserts output shapes, finiteness, and param-count formula accuracy.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.models import (decode_step, forward, init_params, lm_loss,
+                          make_cache, prefill)
+
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    kt, kl = jax.random.split(key)
+    if cfg.frontend:
+        emb = jax.random.normal(kt, (B, S, cfg.d_model), jnp.bfloat16) * 0.1
+        labels = jax.random.randint(kl, (B, S), 0, cfg.vocab)
+        return {"embeds": emb, "labels": labels}
+    toks = jax.random.randint(kt, (B, S), 0, cfg.vocab)
+    labels = jax.random.randint(kl, (B, S), 0, cfg.vocab)
+    return {"tokens": toks, "labels": labels}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finiteness(arch):
+    cfg = get_smoke_config(arch)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    logits = forward(params, cfg, tokens=batch.get("tokens"),
+                     embeds=batch.get("embeds"))
+    assert logits.shape == (B, S, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_grad_step(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+
+    loss, grads = jax.value_and_grad(lm_loss)(params, cfg, batch, remat=True)
+    assert np.isfinite(float(loss))
+    # rough sanity: CE near log(V) at init
+    assert 0.1 * np.log(cfg.vocab) < float(loss) < 3.0 * np.log(cfg.vocab)
+    leaves = jax.tree.leaves(grads)
+    assert leaves, "no grads"
+    for g in leaves:
+        assert np.isfinite(np.asarray(g, np.float32)).all()
+    # at least one nonzero gradient per top-level group
+    total = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32)))) for g in leaves)
+    assert total > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_count_formula_matches_init(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    actual = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    predicted = cfg.param_count()
+    assert abs(actual - predicted) / actual < 0.02, (actual, predicted)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch):
+    """prefill(t0..tn) + decode(t_{n+1}) must equal forward over the full
+    sequence (teacher forcing) position-by-position."""
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    if cfg.frontend:
+        pytest.skip("stub-frontend archs decode from tokens; covered below")
+    T = 8
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, T), 0, cfg.vocab)
+    full = forward(params, cfg, tokens=toks)                  # (B,T,V)
+    cache = make_cache(cfg, B, max_len=T)
+    last_logits, cache = prefill(params, cfg, tokens=toks[:, :T - 1],
+                                 cache=cache)
+    np.testing.assert_allclose(
+        np.asarray(last_logits, np.float32),
+        np.asarray(full[:, T - 2], np.float32), rtol=2e-2, atol=2e-2)
+    pos = jnp.full((B,), T - 1, jnp.int32)
+    step_logits, _ = decode_step(params, cfg, cache, toks[:, T - 1], pos)
+    np.testing.assert_allclose(
+        np.asarray(step_logits, np.float32),
+        np.asarray(full[:, T - 1], np.float32), rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("arch", ["internvl2_76b", "musicgen_large"])
+def test_frontend_stub_decode(arch):
+    """VLM/audio: prefill from precomputed embeddings, decode from tokens."""
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    emb = jax.random.normal(jax.random.PRNGKey(3), (B, 6, cfg.d_model),
+                            jnp.bfloat16) * 0.1
+    cache = make_cache(cfg, B, max_len=16)
+    logits, cache = prefill(params, cfg, embeds=emb, cache=cache)
+    assert logits.shape == (B, cfg.vocab)
+    tok = jnp.argmax(logits, -1)
+    logits2, _ = decode_step(params, cfg, cache, tok,
+                             jnp.full((B,), 6, jnp.int32))
+    assert logits2.shape == (B, cfg.vocab)
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()
+
+
+def test_sliding_window_masks_old_tokens():
+    """Danube SWA: token beyond the window must not influence the output."""
+    cfg = get_smoke_config("h2o_danube_1_8b").replace(sliding_window=4, n_layers=1)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    t1 = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0, cfg.vocab)
+    t2 = t1.at[0, 0].set((t1[0, 0] + 7) % cfg.vocab)   # differs outside window
+    f1 = forward(params, cfg, tokens=t1)
+    f2 = forward(params, cfg, tokens=t2)
+    np.testing.assert_allclose(np.asarray(f1[0, -1], np.float32),
+                               np.asarray(f2[0, -1], np.float32),
+                               rtol=1e-5, atol=1e-5)
+    assert not np.allclose(np.asarray(f1[0, 1], np.float32),
+                           np.asarray(f2[0, 1], np.float32), atol=1e-5)

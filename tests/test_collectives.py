@@ -1,0 +1,27 @@
+"""Multi-device collective schedule tests (subprocess: 8 host devices)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+def test_pig_schedules_multidevice():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run([sys.executable, "tests/collective_worker.py"],
+                       capture_output=True, text=True, env=env, timeout=600,
+                       cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "OK all" in r.stdout
+
+
+def test_dcn_byte_model():
+    from repro.collectives.schedules import dcn_bytes_per_chip
+    P = 1e9
+    d = dcn_bytes_per_chip(P, 1, 2, "direct")
+    p = dcn_bytes_per_chip(P, 256, 2, "pig")
+    q = dcn_bytes_per_chip(P, 256, 2, "pig_q8")
+    assert p == pytest.approx(d / 256)
+    assert q < p                      # compression halves the bf16 wire bytes
+    assert q == pytest.approx(p * (1 + 4 / 1024) / 2)

@@ -1,0 +1,149 @@
+"""Per-kernel validation: Pallas (interpret=True on CPU) vs pure-jnp oracle,
+swept over shapes and dtypes, plus hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.pig_aggregate import quantize_blockwise
+
+
+# ------------------------------------------------------------- flash attention
+@pytest.mark.parametrize("B,S,Hq,Hkv,Dh", [
+    (1, 128, 4, 4, 64),       # MHA, aligned
+    (2, 256, 8, 2, 64),       # GQA 4:1
+    (1, 200, 4, 1, 64),       # MQA, unaligned seq (padding path)
+    (1, 128, 4, 4, 112),      # zamba2 head_dim 112 (pad to 128)
+    (2, 96, 8, 8, 256),       # gemma head_dim 256
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_vs_ref(B, S, Hq, Hkv, Dh, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, Dh), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, Dh), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, Dh), dtype)
+    got = ops.flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    qb, kb, vb = (a.transpose(0, 2, 1, 3) for a in (q, k, v))
+    want = ref.flash_attention_ref(qb, kb, vb, causal=True).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_matches_model_attention():
+    """flash path == attention_ref used inside the models (causal, GQA)."""
+    from repro.models.layers import attention_ref
+    B, S, Hq, Hkv, Dh = 2, 128, 8, 4, 64
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, Dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, Dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, Dh), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    want = attention_ref(q, k, v, pos, pos)
+    got = ops.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------------- ssm scan
+@pytest.mark.parametrize("B,T,H,Dk,Dv,chunk", [
+    (1, 128, 2, 64, 64, 32),
+    (2, 96, 4, 64, 64, 32),     # pad path (96 % 32 == 0, but use 64 below)
+    (1, 100, 1, 32, 64, 32),    # unaligned T
+    (2, 64, 2, 16, 64, 16),     # rwkv-style chunk 16
+])
+@pytest.mark.parametrize("scalar_decay", [True, False])
+def test_ssm_scan_vs_ref(B, T, H, Dk, Dv, chunk, scalar_decay):
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    q = jax.random.normal(ks[0], (B, T, H, Dk), jnp.float32) * 0.3
+    k = jax.random.normal(ks[1], (B, T, H, Dk), jnp.float32) * 0.3
+    v = jax.random.normal(ks[2], (B, T, H, Dv), jnp.float32) * 0.3
+    la = -jnp.abs(jax.random.normal(ks[3], (B, T, H, Dk))) * 0.5 - 0.01
+    if scalar_decay:
+        la = jnp.broadcast_to(la[..., :1], la.shape)
+    got = ops.ssm_scan(q, k, v, la, chunk=chunk)
+    fold = lambda a: a.transpose(0, 2, 1, 3).reshape(B * H, T, a.shape[-1])
+    want = ref.ssm_scan_ref(fold(q), fold(k), fold(v), fold(la), chunk=chunk)
+    want = want.reshape(B, H, T, Dv).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssm_scan_bonus_rwkv_mode():
+    B, T, H, D = 1, 64, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    q = jax.random.normal(ks[0], (B, T, H, D)) * 0.3
+    k = jax.random.normal(ks[1], (B, T, H, D)) * 0.3
+    v = jax.random.normal(ks[2], (B, T, H, D)) * 0.3
+    la = -jnp.abs(jax.random.normal(ks[3], (B, T, H, D))) * 0.5 - 0.01
+    u = jax.random.normal(ks[4], (H, D)) * 0.1
+    got = ops.ssm_scan(q, k, v, la, u=u, chunk=16)
+    fold = lambda a: a.transpose(0, 2, 1, 3).reshape(B * H, T, a.shape[-1])
+    want = ref.ssm_scan_ref(fold(q), fold(k), fold(v), fold(la),
+                            u=jnp.tile(u, (B, 1)), chunk=16)
+    want = want.reshape(B, H, T, D).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssm_scan_equals_sequential_recurrence():
+    """Chunked kernel == naive sequential recurrence (independent oracle)."""
+    B, T, H, D = 1, 48, 1, 8
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    q = jax.random.normal(ks[0], (B, T, H, D)) * 0.5
+    k = jax.random.normal(ks[1], (B, T, H, D)) * 0.5
+    v = jax.random.normal(ks[2], (B, T, H, D)) * 0.5
+    la = -jnp.abs(jax.random.normal(ks[3], (B, T, H, D))) * 0.3 - 0.01
+    got = np.asarray(ops.ssm_scan(q, k, v, la, chunk=16))
+    S = np.zeros((D, D))
+    qn, kn, vn, ln = (np.asarray(a[0, :, 0], np.float64) for a in (q, k, v, la))
+    for t in range(T):
+        S = S * np.exp(ln[t])[:, None] + np.outer(kn[t], vn[t])
+        np.testing.assert_allclose(got[0, t, 0], qn[t] @ S, rtol=1e-3, atol=1e-3)
+
+
+# -------------------------------------------------------------- pig aggregate
+@pytest.mark.parametrize("G,N,block", [(2, 2048, 1024), (5, 8192, 512),
+                                       (16, 4096, 256)])
+def test_pig_aggregate_vs_ref(G, N, block):
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (G, N), jnp.float32)
+    qs, ss = [], []
+    for g in range(G):
+        q, s = quantize_blockwise(x[g], block)
+        qs.append(q)
+        ss.append(s)
+    shards = jnp.stack(qs)
+    scales = jnp.stack(ss)
+    got = ops.pig_aggregate(shards, scales, block=block)
+    want = ref.pig_aggregate_ref(shards, scales, block=block)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+    # dequantized sum approximates the true sum to int8 precision
+    true = np.asarray(x.sum(0))
+    err = np.abs(np.asarray(got) - true).max()
+    amax = np.abs(np.asarray(x)).max()
+    assert err <= G * amax / 127.0 * 0.6
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 8), st.integers(1, 6))
+def test_pig_aggregate_property(G, nb):
+    """Quantize->aggregate error is bounded by the per-block quant step."""
+    block = 256
+    N = nb * block
+    x = jax.random.normal(jax.random.PRNGKey(G * 31 + nb), (G, N), jnp.float32)
+    shards, scales = [], []
+    for g in range(G):
+        q, s = quantize_blockwise(x[g], block)
+        shards.append(q)
+        scales.append(s)
+    got = np.asarray(ops.pig_aggregate(jnp.stack(shards), jnp.stack(scales),
+                                       block=block))
+    true = np.asarray(x.sum(0))
+    step = np.asarray(jnp.stack(scales)).max()
+    assert np.abs(got - true).max() <= G * step * 0.51 + 1e-6

@@ -1,0 +1,196 @@
+"""Protocol behaviour tests: safety, liveness, message-count model validation."""
+import pytest
+
+from repro.core import (Cluster, PigConfig, WorkloadConfig, agreement_ok,
+                        analytical)
+
+
+def _flush_and_drain(c: Cluster, extra: float = 0.5) -> None:
+    for nd in c.nodes:
+        if getattr(nd, "is_leader", False) and not nd.crashed:
+            nd.flush_commits()
+    c.run(c.sched.now + extra)
+
+
+# ------------------------------------------------------------------ safety
+@pytest.mark.parametrize("proto,pig", [
+    ("paxos", None),
+    ("pigpaxos", PigConfig(n_groups=1, single_group_majority=True)),
+    ("pigpaxos", PigConfig(n_groups=3)),
+    ("pigpaxos", PigConfig(n_groups=3, prc=1, use_gray_list=True)),
+])
+def test_replica_agreement(proto, pig):
+    c = Cluster(proto, 9, pig=pig, seed=11)
+    st = c.measure(duration=0.4, warmup=0.1, clients=10)
+    assert st.throughput > 500
+    _flush_and_drain(c)
+    assert agreement_ok(c)
+    # every replica applied the same final state
+    states = [nd.store.data for nd in c.nodes]
+    assert all(s == states[0] for s in states)
+
+
+def test_agreement_under_follower_crash():
+    c = Cluster("pigpaxos", 9, pig=PigConfig(n_groups=3, prc=1), seed=13)
+    c.crash_at(4, 0.15)
+    st = c.measure(duration=0.5, warmup=0.1, clients=10)
+    assert st.throughput > 200   # stays live (f < majority)
+    _flush_and_drain(c)
+    alive = Cluster.__new__(Cluster)  # reuse checker on alive nodes only
+    alive.nodes = [n for n in c.nodes if not n.crashed]
+    assert agreement_ok(alive)
+
+
+def test_agreement_under_relay_crashes():
+    """Relay failures delay but never violate safety (§3.4)."""
+    c = Cluster("pigpaxos", 9, pig=PigConfig(n_groups=2), seed=17,
+                leader_timeout=30e-3)
+    c.crash_at(1, 0.12)
+    c.crash_at(5, 0.18)
+    st = c.measure(duration=0.6, warmup=0.1, clients=8)
+    assert st.throughput > 100
+    _flush_and_drain(c)
+    alive = Cluster.__new__(Cluster)
+    alive.nodes = [n for n in c.nodes if not n.crashed]
+    assert agreement_ok(alive)
+
+
+def test_leader_failover_preserves_committed():
+    c = Cluster("pigpaxos", 5, pig=PigConfig(n_groups=2), seed=19)
+    st_pre = c.measure(duration=0.2, warmup=0.05, clients=5)
+    committed_before = {s: cmd for s, cmd in c.nodes[0].committed.items()}
+    c.nodes[0].crash()
+    # node 1 takes over
+    c.sched.after(0.01, c.nodes[1].start_phase1)
+    c.leader_id = 1
+    c.run(c.sched.now + 0.5)
+    assert c.nodes[1].is_leader
+    # new leader must agree with every committed slot of the old leader
+    for s, cmd in committed_before.items():
+        if s in c.nodes[1].committed:
+            got = c.nodes[1].committed[s]
+            assert (got.client_id, got.seq) == (cmd.client_id, cmd.seq)
+    # and the cluster keeps committing
+    before = c.nodes[1].committed_count
+    c.add_clients(5, stop_at=c.sched.now + 0.3)
+    c.run(c.sched.now + 0.4)
+    assert c.nodes[1].committed_count > before
+
+
+def test_stale_leader_rejected():
+    """A deposed leader's ballot must be rejected (§3.4)."""
+    c = Cluster("pigpaxos", 5, pig=PigConfig(n_groups=2), seed=23)
+    c.run(0.05)
+    assert c.nodes[0].is_leader
+    c.nodes[1].start_phase1()
+    c.run(c.sched.now + 0.1)
+    assert c.nodes[1].is_leader
+    assert c.nodes[1].promised > (1, 0)
+
+
+# ------------------------------------------------------------------ liveness
+def test_liveness_with_random_relay_failures():
+    """Random rotation circumvents minority failures denying progress (§3.3)."""
+    c = Cluster("pigpaxos", 11, pig=PigConfig(n_groups=2, prc=1), seed=29,
+                leader_timeout=25e-3)
+    for nid in (3, 7):   # two crashed followers, leader + 8 alive >= majority 6
+        c.crash_at(nid, 0.1)
+    st = c.measure(duration=0.8, warmup=0.2, clients=10)
+    assert st.throughput > 100
+
+
+# --------------------------------------------------------- message-count model
+@pytest.mark.parametrize("n,r", [(9, 1), (9, 2), (9, 3), (25, 3), (25, 5)])
+def test_message_load_matches_analytical(n, r):
+    """DES per-node message counts must match Eq. 1-3 (Table 1/2)."""
+    c = Cluster("pigpaxos", n, pig=PigConfig(n_groups=r), seed=31)
+    st = c.measure(duration=0.6, warmup=0.3, clients=12)
+    ml = st.messages_per_op(0)
+    mf = sum(st.messages_per_op(i) for i in range(1, n)) / (n - 1)
+    assert abs(ml - analytical.leader_messages(r)) < 0.15
+    assert abs(mf - analytical.follower_messages(n, r)) < 0.15
+
+
+def test_paxos_message_load():
+    c = Cluster("paxos", 9, seed=37)
+    st = c.measure(duration=0.5, warmup=0.25, clients=12)
+    assert abs(st.messages_per_op(0) - (2 * 8 + 2)) < 0.15
+    mf = sum(st.messages_per_op(i) for i in range(1, 9)) / 8
+    assert abs(mf - 2.0) < 0.1
+
+
+def test_total_messages_constant_in_r():
+    """§6.4: total messages per round = 2N-1 regardless of R."""
+    n = 13
+    totals = []
+    for r in (1, 2, 3, 4):
+        c = Cluster("pigpaxos", n, pig=PigConfig(n_groups=r), seed=41)
+        st = c.measure(duration=0.5, warmup=0.25, clients=10)
+        server_msgs = float(st.msg_out[:n].sum()) / max(st.committed, 1)
+        totals.append(server_msgs)
+        # exactly 2N-1 server-side sends per round (client reply included)
+        assert abs(server_msgs - (2 * n - 1)) < 0.5, (r, server_msgs)
+    assert max(totals) - min(totals) < 0.5
+
+
+# ------------------------------------------------------------------ EPaxos
+def test_epaxos_conflict_free_fast_path():
+    c = Cluster("epaxos", 5, seed=43)
+    st = c.measure(duration=0.4, warmup=0.1, clients=10,
+                   workload=WorkloadConfig(n_keys=1000))
+    assert st.throughput > 1000
+    # all committed instances executed on every node eventually
+    c.run(c.sched.now + 0.5)
+    for nd in c.nodes:
+        assert not nd._pending_exec
+
+
+def test_epaxos_conflicting_ops_serialize_consistently():
+    """With a single hot key, all replicas must apply conflicting writes in
+    the same order (per-key linearization)."""
+    c = Cluster("epaxos", 5, seed=47)
+    st = c.measure(duration=0.4, warmup=0.05, clients=8,
+                   workload=WorkloadConfig(n_keys=1, write_fraction=1.0))
+    assert st.throughput > 100
+    c.run(c.sched.now + 1.0)
+    orders = []
+    for nd in c.nodes:
+        orders.append([(c2.client_id, c2.seq) for _, c2 in nd.applied_log])
+    ref = max(orders, key=len)
+    for o in orders:
+        assert o == ref[:len(o)], "replicas disagree on conflicting-op order"
+
+
+# ------------------------------------------------------------------ gray list
+def test_gray_list_suspects_only_on_timeout():
+    """PRC early flushes must not gray healthy nodes (§4.2 regression)."""
+    pig = PigConfig(n_groups=2, prc=2, use_gray_list=True)
+    c = Cluster("pigpaxos", 15, pig=pig, seed=53)
+    c.measure(duration=0.5, warmup=0.1, clients=20)
+    assert len(c.nodes[0].comm.gray) == 0
+
+
+def test_gray_list_catches_crashed_node():
+    A = list(range(1, 9)); B = list(range(9, 15))
+    pig = PigConfig(n_groups=2, groups=[A, B], prc=1, use_gray_list=True)
+    c = Cluster("pigpaxos", 15, pig=pig, seed=59)
+    c.crash_at(3, 0.1)
+    c.measure(duration=0.6, warmup=0.2, clients=10)
+    gray = c.nodes[0].comm.gray
+    assert 3 in gray
+    healthy_grayed = [g for g in gray if g != 3]
+    assert not healthy_grayed
+
+
+def test_pig_composes_with_flexible_quorums():
+    """FPaxos (paper §7.1): Q2 < majority with Q1+Q2 > N, over Pig comms."""
+    from repro.core.quorums import QuorumSystem
+    qs = QuorumSystem(9, q1=7, q2=3)
+    c = Cluster("pigpaxos", 9, pig=PigConfig(n_groups=2), seed=61, quorums=qs)
+    st = c.measure(duration=0.4, warmup=0.1, clients=10)
+    assert st.throughput > 500
+    _flush_and_drain(c)
+    assert agreement_ok(c)
+    # smaller Q2 must still agree across all replicas
+    states = [nd.store.data for nd in c.nodes]
+    assert all(s == states[0] for s in states)
