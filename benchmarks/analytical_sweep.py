@@ -8,18 +8,22 @@ from .common import Timer, row
 
 def run(quick: bool = True):
     out = []
-    with Timer() as t:
-        mc = mc_summary(25, 1, rounds=2048)
     for n in (5, 9, 25, 49, 101):
         out.append(row(f"analytical/N={n}", 0, 1,
                            f"bestR_rot={analytical.best_r_rotating(n)} "
                            f"bestR_static={analytical.best_r_static(n)} "
                        f"M_l(R=1)={analytical.leader_messages(1)} "
                        f"M_f={analytical.follower_messages(n,1):.3f}"))
-    out.append(row("analytical/mc_check_N25_R1", t.dt, 2048,
-                   f"mc_leader={float(mc['leader']):.2f} "
-                   f"mc_follower={float(mc['follower_mean']):.3f} "
-                   f"closed_form={analytical.follower_messages(25,1):.3f}"))
+    # JAX Monte-Carlo cross-check at every scale the DES sweeps reach
+    # (25 = paper testbed, 49/101 = the extended fig8/sim_engine regimes)
+    rounds = 1024 if quick else 4096
+    for n in (25, 49, 101):
+        with Timer() as t:
+            mc = mc_summary(n, 1, rounds=rounds)
+        out.append(row(f"analytical/mc_check_N{n}_R1", t.dt, rounds,
+                       f"mc_leader={float(mc['leader']):.2f} "
+                       f"mc_follower={float(mc['follower_mean']):.3f} "
+                       f"closed_form={analytical.follower_messages(n,1):.3f}"))
     out.append(row("analytical/asymptote", 0, 1,
                    "lim M_f = 4 = M_l(R=1): leader remains the bottleneck "
                    "for every N (paper §6.5)"))

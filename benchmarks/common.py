@@ -9,9 +9,9 @@ from repro.core import Cluster, PigConfig, WorkloadConfig
 def measure(proto: str, n: int, pig=None, clients: int = 60,
             duration: float = 0.6, warmup: float = 0.3, seed: int = 2,
             workload=None, failures=(), leader_timeout: float = 50e-3,
-            topo=None):
+            topo=None, engine: str = "exact"):
     c = Cluster(proto, n, pig=pig, seed=seed, topo=topo,
-                leader_timeout=leader_timeout)
+                leader_timeout=leader_timeout, engine=engine)
     for nid, t in failures:
         c.crash_at(nid, t)
     st = c.measure(duration=duration, warmup=warmup, clients=clients,
@@ -21,13 +21,14 @@ def measure(proto: str, n: int, pig=None, clients: int = 60,
 
 def max_throughput(proto: str, n: int, pig=None, client_grid=(20, 60, 120),
                    duration: float = 0.5, warmup: float = 0.25, seed: int = 2,
-                   workload=None):
+                   workload=None, engine: str = "exact"):
     """The paper's 'maximum throughput' methodology: sweep offered load
     (client count) and report the best sustained rate."""
     best = None
     for k in client_grid:
         st, _ = measure(proto, n, pig=pig, clients=k, duration=duration,
-                        warmup=warmup, seed=seed, workload=workload)
+                        warmup=warmup, seed=seed, workload=workload,
+                        engine=engine)
         if best is None or st.throughput > best.throughput:
             best = st
     return best

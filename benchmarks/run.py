@@ -1,7 +1,11 @@
 """Benchmark driver: one module per paper table/figure + framework benches.
-Prints ``name,us_per_call,derived`` CSV rows.  --full for longer windows."""
+Prints ``name,us_per_call,derived`` CSV rows.  --full for longer windows;
+--json PATH additionally persists all rows (plus the engine events/sec
+numbers from sim_engine_bench's BENCH_sim.json) for the perf trajectory."""
 import argparse
 import importlib
+import json
+import os
 import sys
 import time
 
@@ -20,32 +24,63 @@ MODULES = [
     "fig17_heatmap",
     "serialization_cost",
     "analytical_sweep",
+    "sim_engine_bench",
     "collective_schedules",
     "kernel_bench",
     "roofline",
 ]
 
 
+def _parse_row(line: str) -> dict:
+    name, us, derived = line.split(",", 2)
+    try:
+        us_val = float(us)
+    except ValueError:
+        us_val = None
+    return {"name": name, "us_per_call": us_val, "derived": derived}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write all rows (+ engine stats) to a BENCH json")
     args = ap.parse_args()
     mods = MODULES if not args.only else args.only.split(",")
     print("name,us_per_call,derived")
     t00 = time.time()
     failures = 0
+    rows = []
     for m in mods:
         t0 = time.time()
         try:
             mod = importlib.import_module(f"benchmarks.{m}")
             for line in mod.run(quick=not args.full):
+                rows.append(_parse_row(line))
                 print(line, flush=True)
         except Exception as e:   # noqa: BLE001
             failures += 1
-            print(f"{m},0,ERROR: {type(e).__name__}: {e}", flush=True)
+            line = f"{m},0,ERROR: {type(e).__name__}: {e}"
+            rows.append(_parse_row(line))
+            print(line, flush=True)
         print(f"# {m} done in {time.time()-t0:.1f}s", flush=True)
-    print(f"# total {time.time()-t00:.1f}s, failures={failures}")
+    total = time.time() - t00
+    print(f"# total {total:.1f}s, failures={failures}")
+    if args.json:
+        payload = {"rows": rows, "total_s": round(total, 1),
+                   "failures": failures, "full": bool(args.full)}
+        # fold in the engine events/sec trajectory if the engine bench ran
+        try:
+            from benchmarks.sim_engine_bench import BENCH_PATH
+            if os.path.exists(BENCH_PATH):
+                with open(BENCH_PATH) as f:
+                    payload["sim_engine"] = json.load(f)
+        except Exception:   # noqa: BLE001
+            pass
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {args.json}")
     if failures:
         sys.exit(1)
 

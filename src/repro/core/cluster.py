@@ -44,7 +44,12 @@ class Client:
         self.crashed = False
         self.latencies: List[tuple] = []   # (completion_time, latency)
         self.payload = bytes(workload.payload_bytes)
+        # fused-loop dispatch table (see network.Network._run)
+        self._dispatch = {ClientReply: self.deliver}
         cluster.net.register(self.net_id, self)
+
+    def _bind_handler(self, cls):
+        raise RuntimeError(f"Client has no handler for {cls.__name__}")
 
     def start(self) -> None:
         self._issue()
@@ -86,20 +91,43 @@ class Cluster:
     def __init__(self, protocol: str, n: int, topo: Optional[Topology] = None,
                  pig: Optional[PigConfig] = None, seed: int = 0,
                  cost: Optional[CostModel] = None, leader_timeout: float = 50e-3,
-                 quorums=None):
+                 quorums=None, engine: str = "exact"):
+        """``engine`` selects the simulation engine:
+
+        * ``"exact"`` (default) — fused slab engine, trace-identical to the
+          seed implementation (golden-trace guarantee);
+        * ``"fast"``  — flattened single-event-per-hop delivery; aggregate
+          stats preserved, traces not bit-identical (big-N sweeps);
+        * ``"ref"``   — the seed engine kept verbatim in refengine.py
+          (golden-trace baseline and speedup benchmarks).
+        """
         self.protocol = protocol
         self.n = n
-        self.sched = Scheduler(seed=seed)
+        self.engine = engine
         self.topo = topo or Topology(n=n)
-        self.net = Network(self.sched, self.topo, cost=cost)
+        if engine == "ref":
+            # the verbatim seed stack: seed scheduler/network AND seed
+            # protocol classes (golden-trace baseline, see refengine.py)
+            from .refengine import (RefEPaxosNode, RefNetwork, RefPaxosNode,
+                                    RefScheduler)
+            self.sched = RefScheduler(seed=seed)
+            self.net = RefNetwork(self.sched, self.topo, cost=cost)
+            paxos_cls, epaxos_cls = RefPaxosNode, RefEPaxosNode
+        elif engine in ("exact", "fast"):
+            self.sched = Scheduler(seed=seed)
+            self.net = Network(self.sched, self.topo, cost=cost,
+                               fast_path=(engine == "fast"))
+            paxos_cls, epaxos_cls = PaxosNode, EPaxosNode
+        else:
+            raise ValueError(f"unknown engine {engine!r}")
         self.pig = pig
         peers = list(range(n))
         self.nodes: List[Node] = []
         for i in peers:
             if protocol == "epaxos":
-                self.nodes.append(EPaxosNode(i, self.net, self.sched, peers))
+                self.nodes.append(epaxos_cls(i, self.net, self.sched, peers))
             else:
-                self.nodes.append(PaxosNode(i, self.net, self.sched, peers,
+                self.nodes.append(paxos_cls(i, self.net, self.sched, peers,
                                             pig=pig if protocol == "pigpaxos" else None,
                                             leader_timeout=leader_timeout,
                                             quorums=quorums))

@@ -63,10 +63,12 @@ class EPaxosNode(Node):
                      client_src=msg.src, is_mine=True)
         self.insts[inst_id] = inst
         self._note_interf(cmd.key, inst_id)
+        # one shared instance per broadcast: receivers never mutate messages
+        m = PreAccept(inst=inst_id, cmd=cmd, deps=deps, seq=seq,
+                      n_cluster=self.n)
         for p in self.peers:
             if p != self.id:
-                self.send(p, PreAccept(inst=inst_id, cmd=cmd, deps=deps,
-                                       seq=seq, n_cluster=self.n))
+                self.send(p, m)
 
     def _conflicts(self, key: int, exclude: tuple) -> frozenset:
         m = self.interf.get(key)
@@ -108,11 +110,11 @@ class EPaxosNode(Node):
                 inst.seq = max(inst.seq, r.seq)
             inst.state = "accepted"
             inst.accept_acks = 1
+            m = EAccept(inst=msg.inst, cmd=inst.cmd, deps=inst.deps,
+                        seq=inst.seq, n_cluster=self.n)
             for p in self.peers:
                 if p != self.id:
-                    self.send(p, EAccept(inst=msg.inst, cmd=inst.cmd,
-                                         deps=inst.deps, seq=inst.seq,
-                                         n_cluster=self.n))
+                    self.send(p, m)
 
     def on_EAccept(self, msg: EAccept) -> None:
         inst = self.insts.setdefault(msg.inst, _Inst())
@@ -134,11 +136,11 @@ class EPaxosNode(Node):
     def _commit(self, inst_id: tuple, inst: _Inst) -> None:
         inst.state = "committed"
         self.committed_count += 1
+        m = ECommit(inst=inst_id, cmd=inst.cmd, deps=inst.deps, seq=inst.seq,
+                    n_cluster=self.n)
         for p in self.peers:
             if p != self.id:
-                self.send(p, ECommit(inst=inst_id, cmd=inst.cmd,
-                                     deps=inst.deps, seq=inst.seq,
-                                     n_cluster=self.n))
+                self.send(p, m)
         self._pending_exec.append(inst_id)
         self._drain_exec()
 

@@ -35,13 +35,20 @@ class Command:
 @dataclass(slots=True)
 class Msg:
     src: int = -1
+    # per-instance CPU-cost cache (CostModel.cpu_cost): broadcasts reuse one
+    # message instance for every destination, so the cost is computed once.
+    # Excluded from __eq__/__repr__ so caching never changes message identity.
+    _cost: float = field(default=-1.0, compare=False, repr=False)
 
     def wire_size(self) -> int:
         return HEADER_BYTES
 
     @property
     def kind(self) -> str:
-        return type(self).__name__
+        # subclasses that must dispatch as another type (e.g. pig._P1Aggregate)
+        # set ``_kind_name`` on the class instead of overriding this property
+        cls = type(self)
+        return getattr(cls, "_kind_name", None) or cls.__name__
 
 
 # ---------------------------------------------------------------- client I/O
@@ -96,11 +103,18 @@ class P2a(Msg):
         return HEADER_BYTES + 16 + self.cmd.wire_size()
 
 
-@dataclass(slots=True)
 class P2b(Msg):
-    ballot: tuple = (0, 0)
-    slot: int = 0
-    ok: bool = True
+    """Phase-2 vote. Hand-written init: this is the hottest message class
+    (one per follower per slot), and the dataclass-generated __init__ costs
+    ~100ns more per instantiation."""
+    __slots__ = ("ballot", "slot", "ok")
+
+    def __init__(self, ballot=(0, 0), slot=0, ok=True):
+        self.src = -1
+        self._cost = -1.0
+        self.ballot = ballot
+        self.slot = slot
+        self.ok = ok
 
 
 @dataclass(slots=True)
@@ -133,11 +147,16 @@ class PigRelayed(Msg):
         return HEADER_BYTES + 8 + self.inner.wire_size()
 
 
-@dataclass(slots=True)
 class PigReply(Msg):
-    """Follower -> relay: reply to the inner message, tagged with pig_id."""
-    pig_id: int = 0
-    inner: Any = None
+    """Follower -> relay: reply to the inner message, tagged with pig_id.
+    Hand-written init like P2b: one instance per follower reply."""
+    __slots__ = ("pig_id", "inner")
+
+    def __init__(self, pig_id=0, inner=None):
+        self.src = -1
+        self._cost = -1.0
+        self.pig_id = pig_id
+        self.inner = inner
 
     def wire_size(self) -> int:
         return HEADER_BYTES + 8 + self.inner.wire_size()
@@ -225,6 +244,13 @@ class ECommit(Msg):
 
 
 # ---------------------------------------------------------------- cost model
+# message classes carrying an O(N) dependency payload (resolved lazily so
+# protocol modules can add their own Msg subclasses without registering here)
+_HAS_N_CLUSTER: dict = {}
+# wrapper classes whose wire size is HEADER + 8 + inner.wire_size()
+_PIG_WRAPPERS = frozenset((PigFanout, PigRelayed, PigReply))
+
+
 @dataclass
 class CostModel:
     """CPU seconds charged per message at each endpoint.
@@ -234,15 +260,52 @@ class CostModel:
     Defaults give ~10us per small message per endpoint => a 25-node Paxos
     leader handling 2R+2=50 messages/request saturates at ~2000 req/s,
     matching §2.2 and Fig 9.
+
+    Hot-path note: classes that inherit ``Msg.wire_size`` have a constant
+    wire size, so their cost is computed once and cached per class (about
+    half of all hops are fixed-size replies: P1a/P2b/P3/EAcceptReply/...).
+    Costs depend only on the frozen constants above; mutate them only by
+    constructing a fresh CostModel.
     """
     base: float = 10e-6
     per_byte: float = 0.7e-9        # ~1.4 GB/s serialization bandwidth
     epaxos_extra_per_node: float = 1.2e-6   # dependency-tracking cost ∝ N (§5.3)
     epaxos_exec_graph: float = 14e-6        # per-op dependency graph bookkeeping
 
+    def __post_init__(self):
+        self._fixed: dict = {}      # class -> constant cpu cost
+        self._wrap_fixed: dict = {} # (wrapper cls, inner cls) -> cpu cost
+
     def cpu_cost(self, msg: Msg) -> float:
+        c = msg._cost
+        if c >= 0.0:
+            return c                # instance cache (broadcast reuse)
+        cls = msg.__class__
+        c = self._fixed.get(cls)
+        if c is not None:
+            msg._cost = c
+            return c
+        if cls in _PIG_WRAPPERS:
+            # Pig wrappers: wire = HEADER + 8 + inner.wire_size(); constant
+            # per (wrapper, inner) pair when the inner is header-only
+            icls = msg.inner.__class__
+            key = (cls, icls)
+            c = self._wrap_fixed.get(key)
+            if c is None:
+                if icls.wire_size is Msg.wire_size:
+                    c = self.base + self.per_byte * (2 * HEADER_BYTES + 8)
+                    self._wrap_fixed[key] = c
+                else:
+                    c = self.base + self.per_byte * msg.wire_size()
+            msg._cost = c
+            return c
         c = self.base + self.per_byte * msg.wire_size()
-        n = getattr(msg, "n_cluster", 0)
-        if n:
-            c += self.epaxos_extra_per_node * n
+        has_n = _HAS_N_CLUSTER.get(cls)
+        if has_n is None:
+            has_n = _HAS_N_CLUSTER.setdefault(cls, hasattr(msg, "n_cluster"))
+        if has_n:
+            c += self.epaxos_extra_per_node * msg.n_cluster
+        elif cls.wire_size is Msg.wire_size:
+            self._fixed[cls] = c    # header-only message: constant per class
+        msg._cost = c
         return c

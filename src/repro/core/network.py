@@ -10,16 +10,38 @@ Each node's CPU is a single FIFO server; leader saturation emerges naturally
 when its CPU utilization approaches 1.  Message counts per (src,dst) and per
 node are recorded to validate the analytical model (Table 1/2) and to draw
 the in-flight heatmap (Fig 17).
+
+Engine notes (the seed implementation is preserved in ``refengine.py``):
+
+  * The three stages of a hop are slab events (see events.py) executed by
+    the fused loop in :meth:`Network._run` — no closures, no per-event
+    Python function call, no numpy scalars on the hot path.  Event times,
+    tie-break order, and RNG consumption are identical to the seed engine;
+    tests/test_golden_trace.py enforces this.
+  * ``fast_path=True`` flattens each hop into a single delivery event whose
+    CPU-queue start times are precomputed at send time (latency drawn and
+    partitions checked at send instead of at serialize-done).  ~3x fewer
+    heap operations; aggregate statistics (throughput, utilization, message
+    counts) are preserved but traces are *not* bit-identical to the seed —
+    use it for large-N sweeps, never for golden-trace comparisons.
+  * Accounting uses plain Python ints (lists + a sparse flight dict); the
+    numpy views are materialized lazily via properties.  Set
+    ``accounting=False`` to skip it entirely in the hot loop.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Dict, Optional, Tuple
+import gc
+import heapq
+from dataclasses import dataclass
+from typing import Optional, Tuple
 
 import numpy as np
 
-from .events import Scheduler
+from .events import (K_ARRIVE, K_CALL, K_DELIVER, K_HANDLE, K_TRANSMIT,
+                     Scheduler)
 from .messages import CostModel, Msg
+
+_INF = float("inf")
 
 
 @dataclass
@@ -59,24 +81,40 @@ def wan_topology(nodes_per_region: list[int], oneway_ms: list[list[float]]) -> T
 class Network:
     """Transport + CPU queues + failure injection + accounting."""
 
-    def __init__(self, sched: Scheduler, topo: Topology, cost: CostModel | None = None):
+    def __init__(self, sched: Scheduler, topo: Topology,
+                 cost: CostModel | None = None, fast_path: bool = False):
         self.sched = sched
+        sched._net = self              # sched.run() degrades to our fused loop
         self.topo = topo
         self.cost = cost or CostModel()
-        self.nodes: Dict[int, "object"] = {}      # id -> node (has .deliver & .crashed)
-        self.cpu_free: Dict[int, float] = {}      # id -> time CPU becomes free
-        self.cpu_busy: Dict[int, float] = {}      # id -> total busy seconds
-        cap = topo.n + 1024  # room for client endpoints (ids >= n)
-        self.msgs_out = np.zeros(cap, dtype=np.int64)
-        self.msgs_in = np.zeros(cap, dtype=np.int64)
-        self.flight_matrix = np.zeros((cap, cap), dtype=np.int64)
+        self.fast_path = fast_path
+        self.n_servers = topo.n        # ids >= n are clients (free CPUs)
+        cap = topo.n + 1024            # room for client endpoints (ids >= n)
+        self._cap = cap
+        self.nodes: list = [None] * cap          # id -> node (has ._dispatch & .crashed)
+        self.cpu_free: list = [0.0] * cap        # id -> time CPU becomes free
+        self._cpu_busy: list = [0.0] * cap       # id -> total busy seconds
+        self._msgs_out: list = [0] * cap
+        self._msgs_in: list = [0] * cap
+        # deferred send accounting: the hot path appends one encoded int per
+        # send ((src << 20) | dst); _materialize() folds the log into
+        # _msgs_out/_flight when stats are actually read
+        self._send_log: list = []
+        self._flight: dict = {}                  # (src<<20|dst) -> count
+        self._fixed = self.cost._fixed           # class -> constant cpu cost
         self.partitioned: set[Tuple[int, int]] = set()
         self.accounting = True
 
     def register(self, node_id: int, node) -> None:
+        if node_id >= self._cap:
+            grow = node_id + 256 - self._cap
+            self.nodes.extend([None] * grow)
+            self.cpu_free.extend([0.0] * grow)
+            self._cpu_busy.extend([0.0] * grow)
+            self._msgs_out.extend([0] * grow)
+            self._msgs_in.extend([0] * grow)
+            self._cap = node_id + 256
         self.nodes[node_id] = node
-        self.cpu_free[node_id] = 0.0
-        self.cpu_busy[node_id] = 0.0
 
     # -------------------------------------------------------------- failure
     def partition(self, a: int, b: int) -> None:
@@ -87,63 +125,292 @@ class Network:
         self.partitioned.discard((a, b))
         self.partitioned.discard((b, a))
 
-    # -------------------------------------------------------------- CPU
-    def _cpu(self, node_id: int, cost: float, fn: Callable[[], None]) -> None:
-        """Occupy ``node_id``'s CPU for ``cost`` seconds, then run ``fn``."""
-        start = max(self.sched.now, self.cpu_free[node_id])
-        done = start + cost
-        self.cpu_free[node_id] = done
-        self.cpu_busy[node_id] += cost
-        self.sched.at(done, fn)
-
     # -------------------------------------------------------------- send
     def send(self, src: int, dst: int, msg: Msg) -> None:
         msg.src = src
-        node_src = self.nodes.get(src)
-        if node_src is not None and getattr(node_src, "crashed", False):
+        node_src = self.nodes[src]
+        if node_src is not None and node_src.crashed:
             return
-        c = self.cost.cpu_cost(msg)
+        c = msg._cost
+        if c < 0.0:
+            c = self._fixed.get(msg.__class__)
+            if c is None:
+                c = self.cost.cpu_cost(msg)
         if self.accounting:
-            self.msgs_out[src] += 1
-            self.flight_matrix[src][dst] += 1
-
-        def _transmit() -> None:
-            if (src, dst) in self.partitioned:
-                return
-            lat = self.topo.latency(self.sched.rng, src, dst)
-            self.sched.after(lat, lambda: self._arrive(src, dst, msg, c))
-
-        # serialize on the sender's CPU (clients, id >= n, have free CPUs)
-        if src < self.topo.n:
-            self._cpu(src, c, _transmit)
-        else:
-            self.sched.after(0.0, _transmit)
-
-    def _arrive(self, src: int, dst: int, msg: Msg, c: float) -> None:
-        node = self.nodes.get(dst)
-        if node is None or getattr(node, "crashed", False):
+            self._send_log.append((src << 20) | dst)
+        sched = self.sched
+        if self.fast_path:
+            self._send_fast(src, dst, msg, c, sched)
             return
-
-        def _handle() -> None:
-            n2 = self.nodes.get(dst)
-            if n2 is None or getattr(n2, "crashed", False):
-                return
-            if self.accounting:
-                self.msgs_in[dst] += 1
-            n2.deliver(msg)
-
-        if dst < self.topo.n:
-            self._cpu(dst, c, _handle)
+        # serialize on the sender's CPU (clients, id >= n, have free CPUs)
+        if src < self.n_servers:
+            free = self.cpu_free[src]
+            now = sched.now
+            start = now if now > free else free
+            done = start + c
+            self.cpu_free[src] = done
+            self._cpu_busy[src] += c
         else:
-            self.sched.after(0.0, _handle)
+            done = sched.now
+        sched._seq = seq = sched._seq + 1
+        heapq.heappush(sched._heap, (done, seq, K_TRANSMIT, src, dst, msg, c))
+
+    def _send_fast(self, src: int, dst: int, msg: Msg, c: float,
+                   sched: Scheduler) -> None:
+        """Flattened hop: ONE heap event per message.
+
+        Serialize-reservation, partition check, and the latency draw all
+        happen inline at send time; the single K_DELIVER event fires at the
+        *arrival* time, where the loop reserves the receiver's CPU slot
+        (preserving FIFO arrival-order queueing — reserving at send time
+        would queue the receiver's own sends behind not-yet-arrived traffic)
+        and runs the handler immediately with ``now`` advanced to the
+        service-completion time.  Handler order per node and all CPU-queue
+        occupancy match the exact engine; only the fine-grained interleaving
+        across nodes (and hence RNG order) differs.
+        """
+        now = sched.now
+        if src < self.n_servers:
+            free = self.cpu_free[src]
+            start = now if now > free else free
+            done = start + c
+            self.cpu_free[src] = done
+            self._cpu_busy[src] += c
+        else:
+            done = now
+        if self.partitioned and (src, dst) in self.partitioned:
+            return
+        arrive = done + self.topo.latency(sched.rng, src, dst)
+        sched._seq = seq = sched._seq + 1
+        heapq.heappush(sched._heap, (arrive, seq, K_DELIVER, dst, msg, c, None))
+
+    # -------------------------------------------------------------- engine
+    def _run(self, until: float, max_events: Optional[int]) -> int:
+        """Fused event loop: executes message stages inline (no per-event
+        Python call) and K_CALL timers via the scheduler slab.
+
+        Semantics are identical to refengine.RefScheduler.run driving
+        refengine.RefNetwork's closure chain (same times, same tie-breaks,
+        same RNG order) — verified by tests/test_golden_trace.py.
+
+        The collector is paused for the duration of the loop: the hot path
+        churns short-lived tuples/messages that gen-0 collections rescan
+        constantly (~25% of wall time).  Simulation state is effectively
+        acyclic, so deferring collection to the end of the run is safe.
+        """
+        gc_was_enabled = gc.isenabled()
+        if gc_was_enabled:
+            gc.disable()
+        try:
+            if self.fast_path:
+                return self._run_fast(until, max_events)
+            return self._run_exact(until, max_events)
+        finally:
+            if gc_was_enabled:
+                gc.enable()
+
+    def _run_exact(self, until: float, max_events: Optional[int]) -> int:
+        sched = self.sched
+        heap = sched._heap
+        pop = heapq.heappop
+        push = heapq.heappush
+        nodes = self.nodes
+        cpu_free = self.cpu_free
+        cpu_busy = self._cpu_busy
+        msgs_in = self._msgs_in
+        gens = sched._gen
+        free_slots = sched._free
+        nsrv = self.n_servers
+        topo = self.topo
+        lan = topo.region_of is None
+        base = topo.base_latency
+        jitter = topo.jitter
+        rng = sched.rng
+        rng_exp = rng.exponential
+        part = self.partitioned
+        acct = self.accounting
+        n = 0
+        while heap:
+            ev = pop(heap)
+            t = ev[0]
+            if t > until:
+                push(heap, ev)
+                break
+            kind = ev[2]
+            if kind == K_HANDLE:
+                dst = ev[3]
+                node = nodes[dst]
+                sched.now = t
+                if node is not None and not node.crashed:
+                    msg = ev[4]
+                    if acct:
+                        msgs_in[dst] += 1
+                    try:
+                        d = node._dispatch
+                    except AttributeError:
+                        node.deliver(msg)   # duck-typed node (runtime layer)
+                    else:
+                        h = d.get(msg.__class__)
+                        if h is None:
+                            h = node._bind_handler(msg.__class__)
+                        h(msg)
+            elif kind == K_ARRIVE:
+                sched.now = t
+                dst = ev[4]
+                node = nodes[dst]
+                if node is not None and not node.crashed:
+                    if dst < nsrv:
+                        c = ev[6]
+                        free = cpu_free[dst]
+                        start = t if t > free else free
+                        done = start + c
+                        cpu_free[dst] = done
+                        cpu_busy[dst] += c
+                        sched._seq = seq = sched._seq + 1
+                        push(heap, (done, seq, K_HANDLE, dst, ev[5], None, None))
+                    else:
+                        sched._seq = seq = sched._seq + 1
+                        push(heap, (t, seq, K_HANDLE, dst, ev[5], None, None))
+            elif kind == K_TRANSMIT:
+                sched.now = t
+                src = ev[3]
+                dst = ev[4]
+                if not part or (src, dst) not in part:
+                    if lan:
+                        lat = base + rng_exp(jitter)
+                    else:
+                        lat = topo.latency(rng, src, dst)
+                    sched._seq = seq = sched._seq + 1
+                    push(heap, (t + lat, seq, K_ARRIVE, src, dst, ev[5], ev[6]))
+            else:  # K_CALL timer via the generation slab
+                slot = ev[3]
+                gen = ev[4]
+                free_slots.append(slot)
+                if gens[slot] != gen:
+                    continue           # cancelled: skip, don't count
+                gens[slot] = gen + 1
+                sched.now = t
+                ev[5]()
+                acct = self.accounting   # timers may toggle/reset accounting
+            n += 1
+            if max_events is not None and n >= max_events:
+                break
+        if sched.now < until < _INF:
+            sched.now = until
+        sched.events += n
+        return n
+
+    def _run_fast(self, until: float, max_events: Optional[int]) -> int:
+        """Flattened-mode loop: only K_DELIVER + K_CALL events exist."""
+        sched = self.sched
+        heap = sched._heap
+        pop = heapq.heappop
+        push = heapq.heappush
+        nodes = self.nodes
+        cpu_free = self.cpu_free
+        cpu_busy = self._cpu_busy
+        msgs_in = self._msgs_in
+        gens = sched._gen
+        free_slots = sched._free
+        nsrv = self.n_servers
+        acct = self.accounting
+        n = 0
+        while heap:
+            ev = pop(heap)
+            t = ev[0]
+            if t > until:
+                push(heap, ev)
+                break
+            if ev[2] == K_DELIVER:
+                # reserve the receiver CPU slot now (arrival order) and run
+                # the handler at the service-completion time
+                dst = ev[3]
+                node = nodes[dst]
+                sched.now = t
+                if node is not None and not node.crashed:
+                    if dst < nsrv:
+                        c = ev[5]
+                        free = cpu_free[dst]
+                        start = t if t > free else free
+                        done = start + c
+                        cpu_free[dst] = done
+                        cpu_busy[dst] += c
+                        sched.now = done
+                    msg = ev[4]
+                    if acct:
+                        msgs_in[dst] += 1
+                    try:
+                        d = node._dispatch
+                    except AttributeError:
+                        node.deliver(msg)   # duck-typed node (runtime layer)
+                    else:
+                        h = d.get(msg.__class__)
+                        if h is None:
+                            h = node._bind_handler(msg.__class__)
+                        h(msg)
+            else:  # K_CALL
+                slot = ev[3]
+                gen = ev[4]
+                free_slots.append(slot)
+                if gens[slot] != gen:
+                    continue
+                gens[slot] = gen + 1
+                sched.now = t
+                ev[5]()
+                acct = self.accounting
+            n += 1
+            if max_events is not None and n >= max_events:
+                break
+        if sched.now < until < _INF:
+            sched.now = until
+        sched.events += n
+        return n
 
     # -------------------------------------------------------------- stats
+    def _materialize(self) -> None:
+        """Fold the deferred send log into per-node counts + flight pairs."""
+        log = self._send_log
+        if not log:
+            return
+        out = self._msgs_out
+        f = self._flight
+        fget = f.get
+        for k in log:
+            out[k >> 20] += 1
+            f[k] = fget(k, 0) + 1
+        log.clear()
+
+    @property
+    def msgs_out(self) -> np.ndarray:
+        self._materialize()
+        return np.asarray(self._msgs_out, dtype=np.int64)
+
+    @property
+    def msgs_in(self) -> np.ndarray:
+        return np.asarray(self._msgs_in, dtype=np.int64)
+
+    @property
+    def flight_matrix(self) -> np.ndarray:
+        self._materialize()
+        cap = self._cap
+        m = np.zeros((cap, cap), dtype=np.int64)
+        for k, v in self._flight.items():
+            m[k >> 20, k & 0xFFFFF] = v
+        return m
+
+    @property
+    def cpu_busy(self) -> dict:
+        return {i: b for i, b in enumerate(self._cpu_busy)
+                if self.nodes[i] is not None}
+
     def reset_stats(self) -> None:
-        self.msgs_out[:] = 0
-        self.msgs_in[:] = 0
-        self.flight_matrix[:] = 0
-        for k in self.cpu_busy:
-            self.cpu_busy[k] = 0.0
+        cap = self._cap
+        self._send_log.clear()
+        self._msgs_out[:] = [0] * cap
+        self._msgs_in[:] = [0] * cap
+        self._flight.clear()
+        self._cpu_busy[:] = [0.0] * cap
 
     def message_load(self, node_id: int) -> int:
-        return int(self.msgs_out[node_id] + self.msgs_in[node_id])
+        self._materialize()
+        return self._msgs_out[node_id] + self._msgs_in[node_id]

@@ -1,6 +1,7 @@
 """Node runtime: mailbox dispatch, timers, crash/recover, KV state machine."""
 from __future__ import annotations
 
+from functools import partial
 from typing import Dict, Optional
 
 from .events import Scheduler
@@ -26,7 +27,12 @@ class KVStore:
 
 
 class Node:
-    """Base class: protocol nodes subclass and add ``on_<MsgType>`` handlers."""
+    """Base class: protocol nodes subclass and add ``on_<MsgType>`` handlers.
+
+    Handler dispatch is cached per message class in ``_dispatch`` — the fused
+    engine loop (network.Network._run) calls the bound handler directly,
+    skipping the per-message ``getattr("on_" + kind)`` of the seed engine.
+    """
 
     def __init__(self, node_id: int, net: Network, sched: Scheduler):
         self.id = node_id
@@ -35,19 +41,30 @@ class Node:
         self.crashed = False
         self.store = KVStore()
         self.applied_log: list = []   # sequence of (slot/inst, command) applied
+        self._dispatch: dict = {}     # msg class -> bound on_* handler
+        # bound fast path: self.send(dst, msg) == net.send(self.id, dst, msg)
+        self.send = partial(net.send, node_id)
         net.register(node_id, self)
 
     # ------------------------------------------------------------ transport
-    def send(self, dst: int, msg: Msg) -> None:
-        self.net.send(self.id, dst, msg)
+    def _bind_handler(self, cls):
+        name = getattr(cls, "_kind_name", None) or cls.__name__
+        h = getattr(self, "on_" + name, None)
+        if h is None:
+            raise RuntimeError(f"{type(self).__name__} has no handler for {name}")
+        self._dispatch[cls] = h
+        return h
 
     def deliver(self, msg: Msg) -> None:
+        """Seed-compatible entry point (used by refengine and tests); the
+        fused loop inlines the crash check and dispatch instead."""
         if self.crashed:
             return
-        handler = getattr(self, "on_" + msg.kind, None)
-        if handler is None:
-            raise RuntimeError(f"{type(self).__name__} has no handler for {msg.kind}")
-        handler(msg)
+        cls = msg.__class__
+        h = self._dispatch.get(cls)
+        if h is None:
+            h = self._bind_handler(cls)
+        h(msg)
 
     # ------------------------------------------------------------ timers
     def set_timer(self, delay: float, fn) -> int:

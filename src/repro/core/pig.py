@@ -26,8 +26,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence
 
-from .messages import (Msg, P1b, P2b, PigAggregate, PigFanout, PigRelayed,
-                       PigReply)
+from .messages import (Msg, P1b, P2a, P2b, PigAggregate, PigFanout,
+                       PigRelayed, PigReply)
 
 
 # --------------------------------------------------------------------------
@@ -45,18 +45,28 @@ class PigConfig:
 
 
 class DirectComm:
-    """Classic Paxos communication: leader <-> every follower directly."""
+    """Classic Paxos communication: leader <-> every follower directly.
+
+    Comm interface note: every comm strategy exposes ``_pending_sup``
+    (slot -> pig round with batched late votes); PaxosNode._learn_commit
+    peeks at it to skip the ``note_committed_up_to`` call on the commit hot
+    path when no supplements are pending.  DirectComm never queues any.
+    """
 
     name = "direct"
 
     def __init__(self, node, peers: Sequence[int]):
         self.node = node
         self.peers = [p for p in peers if p != node.id]
+        self._pending_sup: Dict[int, int] = {}   # always empty (see above)
 
     # leader side -----------------------------------------------------------
     def broadcast(self, make_msg: Callable[[], Msg], round_key=None) -> list:
+        # one shared instance: receivers never mutate messages, and the
+        # network stamps the same .src on every send (cost computed once)
+        m = make_msg()
         for p in self.peers:
-            self.node.send(p, make_msg())
+            self.node.send(p, m)
         return []
 
     # follower side ---------------------------------------------------------
@@ -84,6 +94,7 @@ class PigComm:
         self.cfg = cfg
         self.all_nodes = list(peers)
         self._groups_cache: Dict[int, List[List[int]]] = {}
+        self._peers_cache: Dict[tuple, tuple] = {}   # (leader, gi) -> (peers, expect)
         self._pig_seq = node.id << 40
         # relay-side aggregation state: pig_id -> dict
         self._agg: Dict[int, dict] = {}
@@ -185,31 +196,49 @@ class PigComm:
         return None
 
     # ---------------------------------------------------------------- relay
+    def _group_peers(self, leader: int, gi: int) -> tuple:
+        """(peers, expect-set) for relay duty, cached per (leader, group).
+        The expect set is shared across rounds — aggregation never mutates
+        it (only reads / set-unions)."""
+        key = (leader, gi)
+        pe = self._peers_cache.get(key)
+        if pe is None:
+            groups = self.groups_for(leader)   # groups relative to the leader
+            group = groups[gi] if gi < len(groups) else []
+            peers = [p for p in group if p != self.node.id]
+            pe = self._peers_cache.setdefault(key, (peers, set(peers)))
+        return pe
+
     def on_PigFanout(self, msg: PigFanout) -> None:
         node = self.node
-        gi = msg.group
-        groups = self.groups_for(msg.src)   # groups relative to the leader
-        group = groups[gi] if gi < len(groups) else []
-        peers = [p for p in group if p != node.id]
+        peers, expect = self._group_peers(msg.src, msg.group)
         st = {
             "replies": [],
             "voters": set(),
             "required": msg.required,
             "leader": msg.src,
-            "group": gi,
-            "expect": set(peers),
+            "group": msg.group,
+            "expect": expect,
             "done": False,
             "timer": None,
+            # flush threshold: min(required, group size incl. the relay)
+            "thresh": min(msg.required, len(peers) + 1),
         }
         self._agg[msg.pig_id] = st
-        # 1) act as a regular follower on the inner message
-        my_reply = node.process_inner(msg.inner)
+        # 1) act as a regular follower on the inner message (common case
+        #    dispatched inline: P2a accept, skipping the process_inner frame)
+        inner = msg.inner
+        my_reply = (node._accept(inner) if inner.__class__ is P2a
+                    else node.process_inner(inner))
         if my_reply is not None:
             self._accumulate(msg.pig_id, node.id, my_reply)
-        # 2) re-transmit to the rest of the group
-        for p in peers:
-            node.send(p, PigRelayed(pig_id=msg.pig_id, relay=node.id,
-                                    inner=msg.inner))
+        # 2) re-transmit to the rest of the group (one shared wrapper:
+        #    identical payload per peer, receivers don't mutate it)
+        if peers:
+            relayed = PigRelayed(pig_id=msg.pig_id, relay=node.id,
+                                 inner=msg.inner)
+            for p in peers:
+                node.send(p, relayed)
         # 3) arm the relay timeout T_r (§3.4)
         st["timer"] = node.set_timer(self.cfg.relay_timeout,
                                      lambda: self._flush(msg.pig_id, timeout=True))
@@ -217,13 +246,30 @@ class PigComm:
 
     # ---------------------------------------------------------------- follower
     def on_PigRelayed(self, msg: PigRelayed) -> None:
-        reply = self.node.process_inner(msg.inner)
+        node = self.node
+        inner = msg.inner
+        reply = (node._accept(inner) if inner.__class__ is P2a
+                 else node.process_inner(inner))
         if reply is not None:
-            self.node.send(msg.relay, PigReply(pig_id=msg.pig_id, inner=reply))
+            node.send(msg.relay, PigReply(pig_id=msg.pig_id, inner=reply))
 
     def on_PigReply(self, msg: PigReply) -> None:
-        self._accumulate(msg.pig_id, msg.src, msg.inner)
-        self._maybe_flush(msg.pig_id)
+        # fused accumulate + flush check (the per-reply hot path)
+        pig_id = msg.pig_id
+        st = self._agg.get(pig_id)
+        if st is None:
+            return
+        reply = msg.inner
+        if st["done"]:
+            self._queue_late_vote(pig_id, st, msg.src, reply)
+            return
+        st["voters"].add(msg.src)
+        st["replies"].append(reply)
+        if reply.ok is False:
+            # reject short-circuit (§3.2, footnote 1)
+            self._flush(pig_id, reject=True)
+        elif len(st["voters"]) >= st["thresh"]:
+            self._flush(pig_id)
 
     # ---------------------------------------------------------------- agg
     def _accumulate(self, pig_id: int, voter: int, reply: Msg) -> None:
@@ -235,8 +281,9 @@ class PigComm:
             return
         st["voters"].add(voter)
         st["replies"].append(reply)
-        # reject short-circuit: don't wait for aggregation (§3.2, footnote 1)
-        if getattr(reply, "ok", True) is False:
+        # reject short-circuit: don't wait for aggregation (§3.2, footnote 1).
+        # process_inner only yields P1b/P2b replies, so .ok always exists.
+        if reply.ok is False:
             self._flush(pig_id, reject=True)
 
     def _queue_late_vote(self, pig_id: int, st: dict, voter: int,
@@ -296,9 +343,7 @@ class PigComm:
         st = self._agg.get(pig_id)
         if st is None or st["done"]:
             return
-        # group size = peers + the relay itself
-        full = len(st["expect"]) + 1
-        if len(st["voters"]) >= min(st["required"], full):
+        if len(st["voters"]) >= st["thresh"]:
             self._flush(pig_id)
 
     def _flush(self, pig_id: int, timeout: bool = False, reject: bool = False) -> None:
@@ -309,9 +354,16 @@ class PigComm:
         if st["timer"] is not None:
             self.node.cancel_timer(st["timer"])
         replies: List[Msg] = st["replies"]
-        oks = [r for r in replies if getattr(r, "ok", True)]
-        rejects = [r for r in replies if not getattr(r, "ok", True)]
-        missing = tuple(sorted((st["expect"] | {self.node.id}) - st["voters"]))
+        voters = st["voters"]
+        if not timeout and not reject and len(voters) > len(st["expect"]):
+            # fast path: full group voted, nothing missing, no rejects
+            oks = replies
+            rejects = []
+            missing = ()
+        else:
+            oks = [r for r in replies if getattr(r, "ok", True)]
+            rejects = [r for r in replies if not getattr(r, "ok", True)]
+            missing = tuple(sorted((st["expect"] | {self.node.id}) - voters))
         proto = replies[0] if replies else None
         agg = PigAggregate(
             pig_id=pig_id,
@@ -345,6 +397,8 @@ class PigComm:
 class _P1Aggregate(PigAggregate):
     """PigAggregate that additionally carries P1b bodies (value recovery)."""
 
+    _kind_name = "PigAggregate"   # dispatch as the base type (see Msg.kind)
+
     def __init__(self, base: PigAggregate, p1bs: List[P1b]):
         super().__init__(pig_id=base.pig_id, group=base.group,
                          ballot=base.ballot, slot=base.slot, acks=base.acks,
@@ -352,10 +406,6 @@ class _P1Aggregate(PigAggregate):
                          timed_out=base.timed_out,
                          reject=base.reject, reject_ballot=base.reject_ballot)
         self.p1bs = p1bs
-
-    @property
-    def kind(self) -> str:  # dispatch as the base type
-        return "PigAggregate"
 
     def wire_size(self) -> int:
         return super().wire_size() + sum(m.wire_size() for m in self.p1bs)

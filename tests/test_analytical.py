@@ -1,6 +1,8 @@
 """Property tests (hypothesis) for the analytical model + JAX MC simulator."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")   # optional dev dep (requirements-dev.txt)
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

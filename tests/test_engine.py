@@ -1,0 +1,141 @@
+"""Engine invariants guarding the slab scheduler / fused network loop:
+tie-break determinism, generation-counter timer cancellation, message-count
+conservation, and safety on a seeded 25-node PigPaxos run."""
+import numpy as np
+import pytest
+
+from repro.core import Cluster, PigConfig, agreement_ok
+from repro.core.events import Scheduler
+
+
+# ----------------------------------------------------------------- scheduler
+def test_same_time_events_fire_in_schedule_order():
+    s = Scheduler(seed=0)
+    fired = []
+    s.at(1.0, lambda: fired.append("a"))
+    s.at(1.0, lambda: fired.append("b"))
+    s.at(0.5, lambda: fired.append("early"))
+    s.at(1.0, lambda: fired.append("c"))
+    n = s.run()
+    assert n == 4
+    assert fired == ["early", "a", "b", "c"]   # FIFO among equal timestamps
+    assert s.now == 1.0
+
+
+def test_run_until_is_inclusive_and_advances_now():
+    s = Scheduler(seed=0)
+    fired = []
+    s.at(1.0, lambda: fired.append(1))
+    s.at(2.0, lambda: fired.append(2))
+    assert s.run(until=1.0) == 1            # t == until executes
+    assert fired == [1]
+    assert s.now == 1.0
+    assert s.run(until=1.5) == 0
+    assert s.now == 1.5                     # idle time still advances
+    assert s.run(until=3.0) == 1
+    assert s.idle()
+
+
+def test_timer_cancellation_semantics():
+    s = Scheduler(seed=0)
+    fired = []
+    tid = s.at(1.0, lambda: fired.append("cancelled"))
+    s.at(1.0, lambda: fired.append("kept"))
+    s.cancel(tid)
+    s.cancel(tid)                           # double-cancel is a no-op
+    n = s.run()
+    assert fired == ["kept"]
+    assert n == 1                           # cancelled events are not counted
+    # cancel after fire is a no-op (generation already advanced)
+    tid2 = s.at(2.0, lambda: fired.append("late"))
+    s.run()
+    s.cancel(tid2)
+    assert fired == ["kept", "late"]
+
+
+def test_timer_slab_is_bounded_under_churn():
+    """Generation counters recycle slots: memory is bounded by the peak
+    number of outstanding timers, unlike the seed's unbounded cancel set."""
+    s = Scheduler(seed=0)
+    for i in range(10_000):
+        tid = s.at(float(i), lambda: None)
+        if i % 2 == 0:
+            s.cancel(tid)
+        s.run(until=float(i))
+    assert len(s._gen) < 64                 # slots recycled, not accumulated
+    assert len(s._heap) <= 1
+
+
+def test_deterministic_across_identical_runs():
+    def trace(engine):
+        c = Cluster("pigpaxos", 9, pig=PigConfig(n_groups=3), seed=5,
+                    engine=engine)
+        st = c.measure(duration=0.3, warmup=0.1, clients=10)
+        logs = [[(s_, cmd.client_id, cmd.seq) for s_, cmd in nd.applied_log]
+                for nd in c.nodes]
+        return logs, st.committed, c.sched.events
+    assert trace("exact") == trace("exact")
+    assert trace("fast") == trace("fast")
+
+
+# ------------------------------------------------------------- conservation
+@pytest.mark.parametrize("engine", ["exact", "fast"])
+def test_message_count_conservation(engine):
+    """Every send is accounted at both endpoints once delivered: with no
+    failures and a drained network, sum(msgs_out) == sum(msgs_in)."""
+    c = Cluster("pigpaxos", 9, pig=PigConfig(n_groups=3), seed=3,
+                engine=engine)
+    c.add_clients(10, stop_at=0.4)
+    c.sched.run(until=float("inf"))         # drain everything
+    assert c.sched.idle()
+    out = c.net.msgs_out
+    inn = c.net.msgs_in
+    assert out.sum() == inn.sum()
+    assert out.sum() > 10_000               # the run actually did work
+    # flight matrix row/col sums match the per-node counters
+    fl = c.net.flight_matrix
+    np.testing.assert_array_equal(fl.sum(axis=1), out)
+
+
+def test_conservation_accounts_partition_drops():
+    """Messages dropped by a partition are counted out but never in."""
+    c = Cluster("paxos", 5, seed=3, engine="exact")
+    c.partition_at(0, 3, 0.0)
+    c.add_clients(5, stop_at=0.3)
+    c.sched.run(until=float("inf"))
+    out, inn = c.net.msgs_out, c.net.msgs_in
+    dropped = int(c.net.flight_matrix[0, 3] + c.net.flight_matrix[3, 0])
+    assert dropped > 0
+    assert out.sum() - inn.sum() == dropped
+
+
+# ------------------------------------------------------------------ safety
+def test_agreement_on_seeded_25_node_pigpaxos():
+    c = Cluster("pigpaxos", 25, pig=PigConfig(n_groups=5, prc=1), seed=42,
+                engine="exact")
+    st = c.measure(duration=0.4, warmup=0.1, clients=30)
+    assert st.throughput > 2000
+    for nd in c.nodes:
+        if getattr(nd, "is_leader", False) and not nd.crashed:
+            nd.flush_commits()
+    c.run(c.sched.now + 0.5)
+    assert agreement_ok(c)
+    states = [nd.store.data for nd in c.nodes]
+    assert all(s == states[0] for s in states)
+
+
+def test_stats_identical_between_deferred_and_materialized_reads():
+    """Reading stats mid-run (forcing materialization) must not change the
+    final counters."""
+    c1 = Cluster("pigpaxos", 9, pig=PigConfig(n_groups=3), seed=9,
+                 engine="exact")
+    c1.add_clients(8, stop_at=0.3)
+    c1.sched.run(until=0.15)
+    _ = c1.net.msgs_out, c1.net.flight_matrix    # force mid-run materialize
+    c1.sched.run(until=float("inf"))
+    c2 = Cluster("pigpaxos", 9, pig=PigConfig(n_groups=3), seed=9,
+                 engine="exact")
+    c2.add_clients(8, stop_at=0.3)
+    c2.sched.run(until=float("inf"))
+    np.testing.assert_array_equal(c1.net.msgs_out, c2.net.msgs_out)
+    np.testing.assert_array_equal(c1.net.flight_matrix, c2.net.flight_matrix)
