@@ -1,42 +1,15 @@
-"""Shared benchmark helpers: throughput/latency measurement on the DES."""
+"""Shared benchmark row/timing helpers.
+
+Cluster measurement and the offered-load ("max throughput") sweep moved to
+``repro.experiments.runner`` — the single implementation of the paper's
+methodology, shared by every registry scenario.  The CSV row contract lives
+in ``repro.experiments.report.csv_row``; ``row`` here is the framework
+benches' alias for it."""
 from __future__ import annotations
 
 import time
 
-from repro.core import Cluster, PigConfig, WorkloadConfig
-
-
-def measure(proto: str, n: int, pig=None, clients: int = 60,
-            duration: float = 0.6, warmup: float = 0.3, seed: int = 2,
-            workload=None, failures=(), leader_timeout: float = 50e-3,
-            topo=None, engine: str = "exact"):
-    c = Cluster(proto, n, pig=pig, seed=seed, topo=topo,
-                leader_timeout=leader_timeout, engine=engine)
-    for nid, t in failures:
-        c.crash_at(nid, t)
-    st = c.measure(duration=duration, warmup=warmup, clients=clients,
-                   workload=workload)
-    return st, c
-
-
-def max_throughput(proto: str, n: int, pig=None, client_grid=(20, 60, 120),
-                   duration: float = 0.5, warmup: float = 0.25, seed: int = 2,
-                   workload=None, engine: str = "exact"):
-    """The paper's 'maximum throughput' methodology: sweep offered load
-    (client count) and report the best sustained rate."""
-    best = None
-    for k in client_grid:
-        st, _ = measure(proto, n, pig=pig, clients=k, duration=duration,
-                        warmup=warmup, seed=seed, workload=workload,
-                        engine=engine)
-        if best is None or st.throughput > best.throughput:
-            best = st
-    return best
-
-
-def row(name: str, wall_s: float, calls: int, derived: str) -> str:
-    us = wall_s * 1e6 / max(calls, 1)
-    return f"{name},{us:.1f},{derived}"
+from repro.experiments.report import csv_row as row  # noqa: F401
 
 
 class Timer:

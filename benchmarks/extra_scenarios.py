@@ -1,0 +1,16 @@
+"""Post-paper scenario families enabled by the generalized workload layer:
+
+- ``zipf``     — Zipf-skewed PigPaxos (key popularity skew vs uniform);
+- ``openloop`` — open-loop Poisson fig9 variant (offered load independent
+  of completion rate);
+- ``conflict`` — EPaxos conflict-rate sweeps at N in {25, 49}.
+
+All are data-only entries in ``repro.experiments.catalog``; this module is
+the ``run.py --only`` shim."""
+from repro.experiments import report
+
+FAMILIES = ["zipf", "openloop", "conflict"]
+
+
+def run(quick: bool = True):
+    return report.family_rows(FAMILIES, quick=quick)

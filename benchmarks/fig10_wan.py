@@ -1,28 +1,11 @@
 """Fig 10: 15-node WAN (Virginia/California/Oregon), per-region relay groups,
-leader + clients in Virginia."""
-from repro.core import PigConfig, wan_topology
+leader + clients in Virginia.
 
-from .common import Timer, measure, row
+Scenarios: ``repro.experiments.catalog`` family ``fig10``."""
+from repro.experiments import report
 
-
-def _topo():
-    # one-way ms between regions (VA, CA, OR)
-    return wan_topology([5, 5, 5], [[0.15, 31, 35],
-                                    [31, 0.15, 11],
-                                    [35, 11, 0.15]])
+FAMILIES = ["fig10"]
 
 
 def run(quick: bool = True):
-    out = []
-    groups = [[1, 2, 3, 4], [5, 6, 7, 8, 9], [10, 11, 12, 13, 14]]
-    dur = 0.8 if quick else 2.0
-    for proto, pig in (("paxos", None),
-                       ("pigpaxos", PigConfig(n_groups=3, groups=groups, prc=1))):
-        for k in ((20, 120) if quick else (10, 40, 120, 200)):
-            with Timer() as t:
-                st, _ = measure(proto, 15, pig=pig, clients=k, duration=dur,
-                                topo=_topo(), leader_timeout=400e-3)
-            out.append(row(f"fig10/{proto}/clients={k}", t.dt, st.count,
-                           f"tput={st.throughput:.0f}req/s "
-                           f"median={st.median_ms:.1f}ms"))
-    return out
+    return report.family_rows(FAMILIES, quick=quick)

@@ -1,26 +1,11 @@
 """Fig 11: 5-node cluster; PigPaxos R=1 (single-relay majority optimization)
-and R=2 vs Paxos vs EPaxos."""
-from repro.core import PigConfig
+and R=2 vs Paxos vs EPaxos.
 
-from .common import Timer, max_throughput, row
+Scenarios: ``repro.experiments.catalog`` family ``fig11``."""
+from repro.experiments import report
+
+FAMILIES = ["fig11"]
 
 
 def run(quick: bool = True):
-    out = []
-    grid = (40, 120) if quick else (20, 60, 120)
-    dur = 0.4 if quick else 1.0
-    res = {}
-    for label, proto, pig in (
-            ("paxos", "paxos", None),
-            ("epaxos", "epaxos", None),
-            ("pig_R1", "pigpaxos", PigConfig(n_groups=1, single_group_majority=True)),
-            ("pig_R2", "pigpaxos", PigConfig(n_groups=2))):
-        with Timer() as t:
-            st = max_throughput(proto, 5, pig=pig, client_grid=grid, duration=dur)
-        res[label] = st.throughput
-        out.append(row(f"fig11/{label}", t.dt, st.count,
-                       f"tput={st.throughput:.0f}req/s median={st.median_ms:.2f}ms"))
-    out.append(row("fig11/summary", 0, 1,
-                   f"R1_beats_all={res['pig_R1'] >= max(res.values()) - 1} "
-                   f"(paper: R=1 outperforms all at N=5)"))
-    return out
+    return report.family_rows(FAMILIES, quick=quick)

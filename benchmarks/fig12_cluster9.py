@@ -1,24 +1,10 @@
-"""Fig 12: 9-node cluster with R=2 and R=3 vs Paxos."""
-from repro.core import PigConfig
+"""Fig 12: 9-node cluster with R=2 and R=3 vs Paxos.
 
-from .common import Timer, max_throughput, row
+Scenarios: ``repro.experiments.catalog`` family ``fig12``."""
+from repro.experiments import report
+
+FAMILIES = ["fig12"]
 
 
 def run(quick: bool = True):
-    out = []
-    grid = (40, 120) if quick else (20, 60, 120)
-    dur = 0.4 if quick else 1.0
-    res = {}
-    for label, proto, pig in (
-            ("paxos", "paxos", None),
-            ("pig_R2", "pigpaxos", PigConfig(n_groups=2, prc=1)),
-            ("pig_R3", "pigpaxos", PigConfig(n_groups=3, prc=1))):
-        with Timer() as t:
-            st = max_throughput(proto, 9, pig=pig, client_grid=grid, duration=dur)
-        res[label] = st.throughput
-        out.append(row(f"fig12/{label}", t.dt, st.count,
-                       f"tput={st.throughput:.0f}req/s median={st.median_ms:.2f}ms"))
-    gain = (res["pig_R2"] / res["paxos"] - 1) * 100
-    out.append(row("fig12/summary", 0, 1,
-                   f"R2_gain_over_paxos={gain:.0f}% (paper: ~57%)"))
-    return out
+    return report.family_rows(FAMILIES, quick=quick)

@@ -1,31 +1,11 @@
 """Fig 13: max throughput vs payload size (8..1280 bytes), write-only
-workload; PigPaxos R=3 vs Paxos; absolute + normalized."""
-from repro.core import PigConfig, WorkloadConfig
+workload; PigPaxos R=3 vs Paxos; absolute + normalized.
 
-from .common import Timer, max_throughput, row
+Scenarios: ``repro.experiments.catalog`` family ``fig13``."""
+from repro.experiments import report
+
+FAMILIES = ["fig13"]
 
 
 def run(quick: bool = True):
-    out = []
-    sizes = (8, 256, 1280) if quick else (8, 64, 256, 512, 1024, 1280)
-    grid = (120,) if quick else (60, 150)
-    base = {}
-    for proto, pig in (("paxos", None), ("pigpaxos", PigConfig(n_groups=3, prc=1))):
-        tputs = {}
-        for s in sizes:
-            wl = WorkloadConfig(payload_bytes=s, write_fraction=1.0)
-            with Timer() as t:
-                st = max_throughput(proto, 25, pig=pig, client_grid=grid,
-                                    duration=0.4 if quick else 1.0, workload=wl)
-            tputs[s] = st.throughput
-            out.append(row(f"fig13/{proto}/payload={s}", t.dt, st.count,
-                           f"tput={st.throughput:.0f}req/s"))
-        mx = max(tputs.values())
-        for s in sizes:
-            out.append(row(f"fig13/{proto}/norm/payload={s}", 0, 1,
-                           f"normalized={tputs[s]/mx:.3f} (paper: >0.86)"))
-        base[proto] = tputs
-    r = min(base["pigpaxos"][s] / base["paxos"][s] for s in sizes)
-    out.append(row("fig13/summary", 0, 1,
-                   f"min_pig_over_paxos={r:.1f}x (paper: ~3x at all sizes)"))
-    return out
+    return report.family_rows(FAMILIES, quick=quick)

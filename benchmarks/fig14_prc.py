@@ -1,21 +1,11 @@
 """Fig 14: steady-state median/IQR latency vs partial-response-collection
-level, R=1 vs R=3, 25 nodes, fixed moderate load."""
-from repro.core import PigConfig
+level, R=1 vs R=3, 25 nodes, fixed moderate load.
 
-from .common import Timer, measure, row
+Scenarios: ``repro.experiments.catalog`` family ``fig14``."""
+from repro.experiments import report
+
+FAMILIES = ["fig14"]
 
 
 def run(quick: bool = True):
-    out = []
-    dur = 0.6 if quick else 2.0
-    for r in (1, 3):
-        for prc in (0, 1, 2):
-            pig = PigConfig(n_groups=r, prc=prc,
-                            single_group_majority=False)
-            with Timer() as t:
-                st, _ = measure("pigpaxos", 25, pig=pig, clients=18,
-                                duration=dur)
-            out.append(row(f"fig14/R={r}/PRC={prc}", t.dt, st.count,
-                           f"median={st.median_ms:.2f}ms "
-                           f"IQR=[{st.p25_ms:.2f},{st.p75_ms:.2f}]ms"))
-    return out
+    return report.family_rows(FAMILIES, quick=quick)

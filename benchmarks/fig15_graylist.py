@@ -3,34 +3,13 @@
 Uses the §4.2 group shape (f+1 / f) where the faulty group is REQUIRED for
 majority — the configuration in which the paper's failure mechanisms
 (relay-wait timeout; dead node picked as relay) are visible.  Paper claim:
-PRC + gray lists ~ fault-free median."""
-from repro.core import PigConfig
+PRC + gray lists ~ fault-free median.
 
-from .common import Timer, measure, row
+Scenarios: ``repro.experiments.catalog`` family ``fig15``."""
+from repro.experiments import report
+
+FAMILIES = ["fig15"]
 
 
 def run(quick: bool = True):
-    out = []
-    A = list(range(1, 14))
-    B = list(range(14, 25))
-    dur = 0.8 if quick else 2.0
-    base = None
-    for prc, gray in ((0, False), (1, False), (0, True), (1, True)):
-        pig = PigConfig(n_groups=2, groups=[A, B], prc=prc, use_gray_list=gray)
-        with Timer() as t:
-            st, _ = measure("pigpaxos", 25, pig=pig, clients=30, duration=dur,
-                            failures=[(7, 0.1)], seed=5)
-        out.append(row(f"fig15/PRC={prc}/gray={int(gray)}", t.dt, st.count,
-                       f"median={st.median_ms:.2f}ms "
-                       f"IQR=[{st.p25_ms:.2f},{st.p75_ms:.2f}]ms "
-                       f"tput={st.throughput:.0f}"))
-        if prc == 1 and gray:
-            base = st.median_ms
-    with Timer() as t:
-        st0, _ = measure("pigpaxos", 25,
-                         pig=PigConfig(n_groups=2, groups=[A, B]),
-                         clients=30, duration=dur, seed=5)
-    out.append(row("fig15/fault_free", t.dt, st0.count,
-                   f"median={st0.median_ms:.2f}ms; "
-                   f"prc+gray within {abs(base-st0.median_ms):.2f}ms of fault-free"))
-    return out
+    return report.family_rows(FAMILIES, quick=quick)

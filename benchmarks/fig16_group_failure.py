@@ -1,28 +1,13 @@
 """Fig 16: throughput timeline with one of 3 relay groups faulty (several
 nodes crashed mid-run), 25 nodes, relay timeout 50ms, no extra optimizations.
-Paper: max throughput declines only ~3%."""
-import numpy as np
+Paper: max throughput declines only ~3%.
 
-from repro.core import Cluster, PigConfig
+Scenarios: ``repro.experiments.catalog`` family ``fig16`` (the timeline
+comes from the runner's ``collect=("timeline",)`` extra)."""
+from repro.experiments import report
 
-from .common import Timer, row
+FAMILIES = ["fig16"]
 
 
 def run(quick: bool = True):
-    pig = PigConfig(n_groups=3, relay_timeout=50e-3)
-    c = Cluster("pigpaxos", 25, pig=pig, seed=9)
-    # group 2 (nodes 3,6,9,...) partially fails at t=0.8
-    fail_at = 0.8
-    for nid in (3, 6, 9):
-        c.crash_at(nid, fail_at)
-    with Timer() as t:
-        st = c.measure(duration=1.2 if quick else 3.0, warmup=0.3, clients=60)
-    lat = [(tt, l) for cl in c.clients for (tt, l) in cl.latencies]
-    pre = [1 for (tt, _) in lat if 0.3 <= tt < fail_at]
-    post = [1 for (tt, _) in lat if fail_at <= tt < fail_at + 0.5]
-    tput_pre = len(pre) / (fail_at - 0.3)
-    tput_post = len(post) / 0.5
-    drop = (1 - tput_post / max(tput_pre, 1)) * 100
-    return [row("fig16/group_failure", t.dt, st.count,
-                f"tput_before={tput_pre:.0f} tput_during={tput_post:.0f} "
-                f"drop={drop:.1f}% (paper: ~3%)")]
+    return report.family_rows(FAMILIES, quick=quick)

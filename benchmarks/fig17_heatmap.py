@@ -1,31 +1,12 @@
 """Fig 17: in-flight message heatmap, 9-node Paxos vs PigPaxos(R=3).
-Prints per-node totals + max cell; full matrix saved to artifacts/."""
-import json
-import os
+Prints per-node totals + max cell; full matrix saved to artifacts/.
 
-import numpy as np
+Scenarios: ``repro.experiments.catalog`` family ``fig17`` (matrices come
+from the runner's ``collect=("flight",)`` extra)."""
+from repro.experiments import report
 
-from repro.core import PigConfig
-
-from .common import Timer, measure, row
+FAMILIES = ["fig17"]
 
 
 def run(quick: bool = True):
-    out = []
-    os.makedirs("artifacts", exist_ok=True)
-    mats = {}
-    for proto, pig in (("paxos", None), ("pigpaxos", PigConfig(n_groups=3))):
-        with Timer() as t:
-            st, c = measure(proto, 9, pig=pig, clients=15,
-                            duration=0.5 if quick else 1.5)
-        m = st.flight.astype(float) / max(st.committed, 1)
-        mats[proto] = m.tolist()
-        leader_share = (m[0].sum() + m[:, 0].sum()) / m.sum()
-        out.append(row(f"fig17/{proto}", t.dt, st.count,
-                       f"leader_traffic_share={leader_share:.2f} "
-                       f"max_cell={m.max():.2f}msg/op"))
-    with open("artifacts/fig17_heatmap.json", "w") as f:
-        json.dump(mats, f)
-    out.append(row("fig17/summary", 0, 1,
-                   "pigpaxos spreads load: see artifacts/fig17_heatmap.json"))
-    return out
+    return report.family_rows(FAMILIES, quick=quick)

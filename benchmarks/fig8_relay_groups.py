@@ -1,53 +1,15 @@
 """Fig 8: max throughput vs number of relay groups, rotating vs static
 relays, 25-node cluster.  Reproduces: rotating => R=1 best; static => sqrt(N)
-best (and catastrophically worse at small R).
+best (and catastrophically worse at small R).  Also carries the beyond-paper
+N in {25, 49, 101} scale sweep on the fast engine.
 
-Extended beyond the paper: the same relay-group sweep at N in {25, 49, 101}
-(the paper's testbed stopped at 25 nodes) on the flattened fast engine —
-large-N scaling regimes comparable to Compartmentalized Paxos / HT-Paxos
-evaluations, reachable since the engine overhaul."""
-import math
+Scenarios live in ``repro.experiments.catalog`` (family ``fig8``); run.py reads FAMILIES
+and routes them through the shared suite pass; run() is the direct-import
+entry (serial, no shared pool)."""
+from repro.experiments import report
 
-from repro.core import PigConfig
-
-from .common import Timer, max_throughput, row
+FAMILIES = ["fig8"]
 
 
 def run(quick: bool = True):
-    out = []
-    rs = (1, 2, 3, 5) if quick else (1, 2, 3, 4, 5, 6, 8)
-    grid = (40, 120) if quick else (20, 60, 120)
-    dur = 0.4 if quick else 1.0
-    results = {}
-    for rotate in (True, False):
-        for r in rs:
-            pig = PigConfig(n_groups=r, prc=1, rotate_relays=rotate,
-                            single_group_majority=(r == 1 and rotate))
-            with Timer() as t:
-                st = max_throughput("pigpaxos", 25, pig=pig, client_grid=grid,
-                                    duration=dur)
-            label = "rotating" if rotate else "static"
-            results[(rotate, r)] = st.throughput
-            out.append(row(f"fig8/{label}/R={r}", t.dt, st.count,
-                           f"tput={st.throughput:.0f}req/s median={st.median_ms:.2f}ms"))
-    rot = {r: results[(True, r)] for r in rs}
-    stat = {r: results[(False, r)] for r in rs}
-    best_rot = min(rot, key=lambda r: -rot[r])
-    best_stat = min(stat, key=lambda r: -stat[r])
-    out.append(row("fig8/summary", 0, 1,
-                   f"best_R_rotating={best_rot} best_R_static={best_stat} "
-                   f"(paper: 1 and ~sqrt(N)=5)"))
-
-    # ---- scale sweep: N in {25, 49, 101}, R in {3, ~sqrt(N)} ----
-    sweep_dur = 0.3 if quick else 0.6
-    for n in (25, 49, 101):
-        for r in sorted({3, int(round(math.sqrt(n)))}):
-            pig = PigConfig(n_groups=r, prc=1)
-            with Timer() as t:
-                st = max_throughput("pigpaxos", n, pig=pig,
-                                    client_grid=(60,) if quick else (60, 120),
-                                    duration=sweep_dur, engine="fast")
-            out.append(row(f"fig8/scale/N={n}/R={r}", t.dt, st.count,
-                           f"tput={st.throughput:.0f}req/s "
-                           f"median={st.median_ms:.2f}ms"))
-    return out
+    return report.family_rows(FAMILIES, quick=quick)

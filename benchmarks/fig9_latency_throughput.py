@@ -1,32 +1,11 @@
-"""Fig 9: latency vs throughput, 25-node cluster, Paxos vs EPaxos vs
-PigPaxos(R=3).  Paper: Paxos saturates ~2k, EPaxos ~3k, PigPaxos >7k req/s."""
-from repro.core import PigConfig
-from repro.core.jaxsim import saturation_point
+"""Fig 9: latency vs throughput curves, 25-node cluster, Paxos vs EPaxos vs
+PigPaxos(R=3).  Paper: Paxos saturates ~2k, EPaxos ~3k, PigPaxos >7k req/s.
 
-from .common import Timer, measure, row
+Scenarios: ``repro.experiments.catalog`` family ``fig9``."""
+from repro.experiments import report
+
+FAMILIES = ["fig9"]
 
 
 def run(quick: bool = True):
-    out = []
-    grid = (10, 40, 120) if quick else (5, 10, 20, 40, 80, 120)
-    dur = 0.4 if quick else 1.0
-    sat = {}
-    for proto, pig in (("paxos", None),
-                       ("epaxos", None),
-                       ("pigpaxos", PigConfig(n_groups=3, prc=1))):
-        best = 0.0
-        for k in grid:
-            with Timer() as t:
-                st, _ = measure(proto, 25, pig=pig, clients=k, duration=dur)
-            best = max(best, st.throughput)
-            out.append(row(f"fig9/{proto}/clients={k}", t.dt, st.count,
-                           f"tput={st.throughput:.0f}req/s "
-                           f"median={st.median_ms:.2f}ms p99={st.p99_ms:.2f}ms"))
-        sat[proto] = best
-    ratio = sat["pigpaxos"] / max(sat["paxos"], 1)
-    out.append(row("fig9/summary", 0, 1,
-                   f"paxos={sat['paxos']:.0f} epaxos={sat['epaxos']:.0f} "
-                   f"pigpaxos={sat['pigpaxos']:.0f} pig/paxos={ratio:.1f}x "
-                   f"(paper >3x); queueing-model paxos="
-                   f"{saturation_point(25, 24, protocol='paxos'):.0f}"))
-    return out
+    return report.family_rows(FAMILIES, quick=quick)

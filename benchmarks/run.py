@@ -1,7 +1,23 @@
-"""Benchmark driver: one module per paper table/figure + framework benches.
-Prints ``name,us_per_call,derived`` CSV rows.  --full for longer windows;
---json PATH additionally persists all rows (plus the engine events/sec
-numbers from sim_engine_bench's BENCH_sim.json) for the perf trajectory."""
+"""Benchmark driver: scenario families run through the experiment registry
+(``repro.experiments``); framework benches stay one module each.
+
+Prints ``name,us_per_call,derived`` CSV rows (the perf-trajectory contract).
+
+- ``--full``          paper-length measurement windows
+- ``--only M1,M2``    restrict to specific modules (legacy entry points)
+- ``--filter GLOBS``  comma-separated fnmatch globs over *scenario* names
+                      (e.g. ``'fig8/rotating/*,fig9/paxos'``; a bare family
+                      name matches the whole family).  Skips the
+                      non-scenario modules entirely.
+- ``--parallel [N]``  run scenario units ((scenario, clients, seed) triples)
+                      in an N-process pool (no N: one per CPU).  The DES is
+                      single-threaded, so scenarios x seeds scale ~linearly
+                      with cores.
+- ``--list-scenarios``  print every registry entry and exit
+- ``--json PATH``     persist all rows + the full experiments artifact
+                      (per-seed replicates, summary stats) + the engine
+                      events/sec numbers from BENCH_sim.json
+"""
 import argparse
 import importlib
 import json
@@ -22,6 +38,7 @@ MODULES = [
     "fig15_graylist",
     "fig16_group_failure",
     "fig17_heatmap",
+    "extra_scenarios",
     "serialization_cost",
     "analytical_sweep",
     "sim_engine_bench",
@@ -29,6 +46,19 @@ MODULES = [
     "kernel_bench",
     "roofline",
 ]
+
+# A module that declares FAMILIES = [...] is a scenario-registry shim: its
+# families' units all run in ONE suite pass (shared --parallel pool), then
+# each module slot formats its families' legacy rows.  The mapping lives in
+# the modules themselves — this driver just reads it.
+
+
+def _scenario_families(module_name: str):
+    try:
+        mod = importlib.import_module(f"benchmarks.{module_name}")
+    except Exception:   # noqa: BLE001  (unknown module: reported at run time)
+        return None
+    return getattr(mod, "FAMILIES", None)
 
 
 def _parse_row(line: str) -> dict:
@@ -44,19 +74,74 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--filter", default=None, metavar="GLOBS",
+                    help="comma-separated scenario-name globs; scenario "
+                         "families only (framework benches are skipped)")
+    ap.add_argument("--parallel", nargs="?", const=0, default=None, type=int,
+                    metavar="N", help="pool size for scenario units "
+                                      "(no value: one per CPU)")
+    ap.add_argument("--list-scenarios", action="store_true")
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="write all rows (+ engine stats) to a BENCH json")
+                    help="write all rows (+ artifact + engine stats) to a "
+                         "BENCH json")
     args = ap.parse_args()
+
+    from repro import experiments
+
+    if args.list_scenarios:
+        for name in experiments.names():
+            sc = experiments.get(name)
+            print(f"{name}  [{sc.protocol} n={sc.n} grid={sc.grid_mode} "
+                  f"engine={sc.engine}]")
+        return
+
+    processes = args.parallel
+    if processes == 0:
+        processes = os.cpu_count() or 1
+    processes = processes or 0
+
     mods = MODULES if not args.only else args.only.split(",")
+    mod_families = {m: _scenario_families(m) for m in mods}
+    if args.filter:
+        mods = [m for m in mods if mod_families[m]]
+    quick = not args.full
+
     print("name,us_per_call,derived")
     t00 = time.time()
     failures = 0
     rows = []
+    artifact = None
+
+    # one suite pass over every selected scenario unit (shared pool)
+    fams = [f for m in mods for f in (mod_families[m] or [])]
+    if fams:
+        t0 = time.time()
+        try:
+            artifact = experiments.run_families(
+                fams, quick=quick, processes=processes,
+                filter_expr=args.filter)
+            n_units = sum(len(sa["units"]) for sa in artifact["scenarios"])
+            print(f"# scenario suite: {len(artifact['scenarios'])} scenarios"
+                  f", {n_units} units, processes={processes}, "
+                  f"{time.time()-t0:.1f}s wall", flush=True)
+        except Exception as e:   # noqa: BLE001
+            failures += 1
+            line = f"scenario_suite,0,ERROR: {type(e).__name__}: {e}"
+            rows.append(_parse_row(line))
+            print(line, flush=True)
+
     for m in mods:
         t0 = time.time()
         try:
-            mod = importlib.import_module(f"benchmarks.{m}")
-            for line in mod.run(quick=not args.full):
+            if mod_families[m]:
+                if artifact is None:
+                    continue   # suite itself failed; already reported
+                lines = experiments.report.rows_for_artifact(
+                    artifact, mod_families[m])
+            else:
+                mod = importlib.import_module(f"benchmarks.{m}")
+                lines = mod.run(quick=quick)
+            for line in lines:
                 rows.append(_parse_row(line))
                 print(line, flush=True)
         except Exception as e:   # noqa: BLE001
@@ -70,6 +155,8 @@ def main() -> None:
     if args.json:
         payload = {"rows": rows, "total_s": round(total, 1),
                    "failures": failures, "full": bool(args.full)}
+        if artifact is not None:
+            payload["experiments"] = artifact
         # fold in the engine events/sec trajectory if the engine bench ran
         try:
             from benchmarks.sim_engine_bench import BENCH_PATH

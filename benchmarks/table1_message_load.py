@@ -1,25 +1,11 @@
 """Table 1: message load at leader/followers, 25-node cluster — analytical
-formulas validated against DES-measured counts."""
-from repro.core import Cluster, PigConfig, analytical
+formulas validated against DES-measured counts (asserted in the summarizer).
 
-from .common import Timer, row
+Scenarios: ``repro.experiments.catalog`` family ``table1``."""
+from repro.experiments import report
+
+FAMILIES = ["table1"]
 
 
 def run(quick: bool = True):
-    out = []
-    with Timer() as t:
-        rows = analytical.load_table(25)
-        # validate two representative rows against the simulator
-        for r in (1, 3):
-            c = Cluster("pigpaxos", 25, pig=PigConfig(n_groups=r), seed=7)
-            st = c.measure(duration=0.4 if quick else 1.0, warmup=0.2,
-                           clients=20)
-            ml = st.messages_per_op(0)
-            mf = sum(st.messages_per_op(i) for i in range(1, 25)) / 24
-            ana = next(x for x in rows if x["R"] == r)
-            assert abs(ml - ana["M_l"]) < 0.2, (ml, ana)
-            assert abs(mf - ana["M_f"]) < 0.2, (mf, ana)
-    for x in rows:
-        out.append(row(f"table1/R={x['R']}", t.dt, 1,
-                       f"M_l={x['M_l']} M_f={x['M_f']} ratio={x['ratio']}"))
-    return out
+    return report.family_rows(FAMILIES, quick=quick)

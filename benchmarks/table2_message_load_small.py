@@ -1,12 +1,11 @@
-"""Table 2: message load in a small 5-node cluster."""
-from repro.core import analytical
+"""Table 2: message load in a small 5-node cluster — analytical formulas
+validated against DES-measured counts (asserted in the summarizer).
 
-from .common import Timer, row
+Scenarios: ``repro.experiments.catalog`` family ``table2``."""
+from repro.experiments import report
+
+FAMILIES = ["table2"]
 
 
 def run(quick: bool = True):
-    with Timer() as t:
-        rows = analytical.load_table(5)
-    return [row(f"table2/R={x['R']}", t.dt, 1,
-                f"M_l={x['M_l']} M_f={x['M_f']} ratio={x['ratio']}")
-            for x in rows]
+    return report.family_rows(FAMILIES, quick=quick)

@@ -26,6 +26,50 @@ class WorkloadConfig:
     n_keys: int = 1000
     payload_bytes: int = 8
     write_fraction: float = 0.5   # paper: even reads/writes, both replicated
+    # --- key popularity -------------------------------------------------
+    # "uniform"  — every key equally likely (the paper's YCSB-like setup)
+    # "zipfian"  — YCSB-style skew: P(rank k) ∝ 1/k^theta
+    # "conflict" — hot-spot model for EPaxos conflict sweeps: key 0 with
+    #              probability conflict_rate, else a uniform non-zero key
+    key_dist: str = "uniform"
+    zipf_theta: float = 0.99
+    conflict_rate: float = 0.0
+    # --- arrival process ------------------------------------------------
+    # "closed"  — one outstanding op per client, next op starts on reply
+    # "poisson" — open loop: ops arrive at rate_hz per client regardless
+    #             of replies (up to max_outstanding in flight)
+    arrival: str = "closed"
+    rate_hz: float = 200.0
+    max_outstanding: int = 64
+    # --- payload distribution -------------------------------------------
+    # When payload_choices is set, each put draws its size from the mix
+    # (weights default to uniform over the choices).
+    payload_choices: Optional[tuple] = None
+    payload_weights: Optional[tuple] = None
+
+    def __post_init__(self):
+        # scenarios are declarative data: a typo must fail loudly, not run a
+        # mislabeled uniform/closed workload with green CI
+        if self.key_dist not in ("uniform", "zipfian", "conflict"):
+            raise ValueError(f"unknown key_dist {self.key_dist!r}")
+        if self.arrival not in ("closed", "poisson"):
+            raise ValueError(f"unknown arrival {self.arrival!r}")
+
+
+_zipf_cdf_cache: Dict[tuple, np.ndarray] = {}
+
+
+def zipf_cdf(n_keys: int, theta: float) -> np.ndarray:
+    """Cumulative distribution of a Zipf(theta) law over ranks 1..n_keys
+    (rank 1 == key 0).  Cached: building it is O(n_keys), sampling O(log n)."""
+    key = (n_keys, float(theta))
+    cdf = _zipf_cdf_cache.get(key)
+    if cdf is None:
+        p = np.arange(1, n_keys + 1, dtype=np.float64) ** -float(theta)
+        cdf = np.cumsum(p / p.sum())
+        cdf[-1] = 1.0
+        _zipf_cdf_cache[key] = cdf
+    return cdf
 
 
 class Client:
@@ -44,6 +88,17 @@ class Client:
         self.crashed = False
         self.latencies: List[tuple] = []   # (completion_time, latency)
         self.payload = bytes(workload.payload_bytes)
+        self._key_cdf = (zipf_cdf(workload.n_keys, workload.zipf_theta)
+                         if workload.key_dist == "zipfian" else None)
+        if workload.payload_choices:
+            self._payloads = [bytes(s) for s in workload.payload_choices]
+            w = np.asarray(workload.payload_weights
+                           or [1.0] * len(self._payloads), dtype=np.float64)
+            self._payload_cdf = np.cumsum(w / w.sum())
+            self._payload_cdf[-1] = 1.0   # cumsum can round below 1.0
+        else:
+            self._payloads = None
+            self._payload_cdf = None
         # fused-loop dispatch table (see network.Network._run)
         self._dispatch = {ClientReply: self.deliver}
         cluster.net.register(self.net_id, self)
@@ -54,16 +109,37 @@ class Client:
     def start(self) -> None:
         self._issue()
 
+    # ------------------------------------------------------------ workload
+    def _pick_key(self, rng) -> int:
+        wl = self.wl
+        if self._key_cdf is not None:
+            return int(np.searchsorted(self._key_cdf, rng.random(), side="right"))
+        if wl.key_dist == "conflict":
+            if rng.random() < wl.conflict_rate:
+                return 0
+            return 1 + int(rng.integers(wl.n_keys - 1))
+        return int(rng.integers(wl.n_keys))
+
+    def _pick_payload(self, rng) -> bytes:
+        if self._payloads is None:
+            return self.payload
+        return self._payloads[int(np.searchsorted(self._payload_cdf,
+                                                  rng.random(), side="right"))]
+
+    def _make_command(self, seq: int) -> Command:
+        rng = self.cluster.sched.rng
+        op = "put" if rng.random() < self.wl.write_fraction else "get"
+        return Command(client_id=self.id, seq=seq, op=op,
+                       key=self._pick_key(rng),
+                       value=self._pick_payload(rng) if op == "put" else None)
+
+    # ------------------------------------------------------------ protocol
     def _issue(self) -> None:
         sched = self.cluster.sched
         if sched.now >= self.stop_at:
             return
-        rng = sched.rng
         self.seq += 1
-        op = "put" if rng.random() < self.wl.write_fraction else "get"
-        cmd = Command(client_id=self.id, seq=self.seq, op=op,
-                      key=int(rng.integers(self.wl.n_keys)),
-                      value=self.payload if op == "put" else None)
+        cmd = self._make_command(self.seq)
         self.sent_at = sched.now
         self.cluster.net.send(self.net_id, self.pick_target(), ClientRequest(cmd=cmd))
 
@@ -83,6 +159,59 @@ class Client:
             return
         self.seq -= 1
         self._issue()
+
+
+class OpenLoopClient(Client):
+    """Open-loop client: ops arrive as a Poisson process at ``rate_hz``
+    independent of replies, so offered load does not collapse when the
+    system slows down — the saturation-probe regime the closed-loop paper
+    setup cannot express.  At most ``max_outstanding`` ops are in flight;
+    arrivals beyond that are shed (standard open-loop overload guard)."""
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.outstanding: Dict[int, tuple] = {}   # seq -> (sent_at, cmd)
+        self.shed = 0
+
+    def start(self) -> None:
+        self._arrival()
+
+    def _arrival(self) -> None:
+        sched = self.cluster.sched
+        if sched.now >= self.stop_at:
+            return
+        rng = sched.rng
+        if len(self.outstanding) < self.wl.max_outstanding:
+            self.seq += 1
+            cmd = self._make_command(self.seq)
+            self.outstanding[self.seq] = (sched.now, cmd)
+            self.cluster.net.send(self.net_id, self.pick_target(),
+                                  ClientRequest(cmd=cmd))
+        else:
+            self.shed += 1
+        sched.after(rng.exponential(1.0 / self.wl.rate_hz), self._arrival)
+
+    def deliver(self, msg: ClientReply) -> None:
+        entry = self.outstanding.get(msg.seq)
+        if entry is None:
+            return   # stale duplicate
+        sched = self.cluster.sched
+        if not msg.ok:
+            seq = msg.seq
+            sched.after(5e-3, lambda: self._retry_seq(seq))
+            return
+        del self.outstanding[msg.seq]
+        self.latencies.append((sched.now, sched.now - entry[0]))
+
+    def _retry_seq(self, seq: int) -> None:
+        entry = self.outstanding.get(seq)
+        if entry is None:
+            return
+        if self.cluster.sched.now >= self.stop_at:
+            del self.outstanding[seq]
+            return
+        self.cluster.net.send(self.net_id, self.pick_target(),
+                              ClientRequest(cmd=entry[1]))
 
 
 class Cluster:
@@ -141,13 +270,14 @@ class Cluster:
                     stop_at: float = float("inf"),
                     start_at: float = 20e-3) -> None:
         wl = workload or WorkloadConfig()
+        cls = OpenLoopClient if wl.arrival == "poisson" else Client
         rng = self.sched.rng
         for c in range(k):
             if self.protocol == "epaxos":
                 pick = lambda: int(rng.integers(self.n))
             else:
                 pick = lambda: self.leader_id
-            cl = Client(self, len(self.clients), pick, wl, stop_at)
+            cl = cls(self, len(self.clients), pick, wl, stop_at)
             self.clients.append(cl)
             # stagger client start to avoid a thundering herd at t0
             self.sched.at(start_at + 1e-4 * c, cl.start)

@@ -1,0 +1,17 @@
+"""Declarative experiment subsystem (see ISSUE 2 / ROADMAP).
+
+- ``scenario``  — the :class:`Scenario` spec: protocol, N, PigConfig,
+  topology, workload, failure schedule, client grid, seeds — pure data.
+- ``registry``  — name -> scenario, with ``--filter`` glob selection.
+- ``catalog``   — every paper reproduction (table1/2, fig8-17) plus the
+  post-paper ``zipf``/``openloop``/``conflict`` families as registry entries.
+- ``runner``    — process-parallel execution over (scenario, clients, seed)
+  units; one stable JSON artifact schema with per-seed replicates.
+- ``report``    — artifact -> the legacy ``name,us_per_call,derived`` rows
+  that ``benchmarks/run.py`` prints (perf-trajectory contract).
+"""
+from . import registry  # noqa: F401
+from .registry import get, names, families, register, select  # noqa: F401
+from .runner import ARTIFACT_SCHEMA, run_families, run_scenarios  # noqa: F401
+from .scenario import Scenario, build_topology  # noqa: F401
+from . import report  # noqa: F401

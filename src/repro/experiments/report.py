@@ -1,0 +1,431 @@
+"""Artifact -> legacy benchmark rows.
+
+``benchmarks/run.py`` (and the thin per-figure modules kept for ``--only``)
+print ``name,us_per_call,derived`` CSV rows; successive PRs diff those rows
+to track the perf trajectory.  This module maps the runner's JSON artifact
+back onto exactly those row names, and carries each figure's paper-claim
+summary (best-R comparison, saturation ratios, analytical-table validation,
+failure-transient drop, ...).
+
+Every summarizer degrades gracefully when ``--filter`` removed part of its
+family: rows are emitted for whatever scenarios ran, and cross-scenario
+summary rows are skipped when their inputs are missing.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional, Sequence
+
+from repro.core import analytical
+
+from . import registry, runner
+
+
+def csv_row(name: str, wall_s: float, calls: int, derived: str) -> str:
+    us = wall_s * 1e6 / max(calls, 1)
+    return f"{name},{us:.1f},{derived}"
+
+
+def ms(x) -> float:
+    """None (no completions in the window) -> nan, so rows degrade to
+    'median=nanms' instead of a TypeError killing the whole family."""
+    return float("nan") if x is None else x
+
+
+def _rep(art: dict) -> Optional[dict]:
+    """The representative replicate of a max-mode scenario (single-seed
+    scenarios: the best-over-grid unit; multi-seed: highest-throughput)."""
+    reps = art.get("replicates") or []
+    if not reps:
+        return None
+    return max(reps, key=lambda u: u["throughput"] or 0.0)
+
+
+def _wall(art: dict) -> float:
+    return art["summary"]["wall_s"]
+
+
+def _tput(art: dict) -> float:
+    return art["summary"]["throughput"]["mean"] or 0.0
+
+
+def _sat(art: dict) -> float:
+    """Saturation of a curve-mode scenario: best per-point mean throughput."""
+    pts = art.get("points") or []
+    return max((p["throughput"]["mean"] or 0.0 for p in pts), default=0.0)
+
+
+def _point_rows(art: dict, fmt) -> List[str]:
+    """One row per client-grid point of a curve-mode scenario; single-seed
+    points print the raw unit values (trajectory-stable), multi-seed points
+    print across-seed means."""
+    out = []
+    units_by_clients: Dict[int, List[dict]] = {}
+    for u in art["units"]:
+        units_by_clients.setdefault(u["clients"], []).append(u)
+    for p in art.get("points", []):
+        us = units_by_clients.get(p["clients"], [])
+        wall = sum(u["wall_s"] for u in us)
+        count = sum(u["count"] for u in us)
+        out.append(fmt(p, us, wall, count))
+    return out
+
+
+# ------------------------------------------------------------------ tables
+def _table_rows(arts: Dict[str, dict], n: int, family: str,
+                tol: float = 0.2) -> List[str]:
+    rows = analytical.load_table(n)
+    wall = sum(_wall(a) for a in arts.values())
+    # validate the analytic table against DES-measured per-node counts for
+    # every representative R that actually ran
+    for name, art in arts.items():
+        r = int(name.rsplit("=", 1)[1])
+        rep = _rep(art)
+        if rep is None or "extras" not in rep:
+            continue
+        ana = next(x for x in rows if x["R"] == r)
+        ml = rep["extras"]["leader_msgs_per_op"]
+        mf = rep["extras"]["follower_msgs_per_op"]
+        assert abs(ml - ana["M_l"]) < tol, (name, ml, ana)
+        assert abs(mf - ana["M_f"]) < tol, (name, mf, ana)
+    return [csv_row(f"{family}/R={x['R']}", wall, 1,
+                    f"M_l={x['M_l']} M_f={x['M_f']} ratio={x['ratio']}")
+            for x in rows]
+
+
+def _table1(arts, quick):
+    return _table_rows(arts, 25, "table1")
+
+
+def _table2(arts, quick):
+    return _table_rows(arts, 5, "table2")
+
+
+# ------------------------------------------------------------------- fig 8
+def _fig8(arts, quick):
+    out = []
+    results = {}
+    for name, art in arts.items():
+        rep = _rep(art)
+        if rep is None:
+            continue
+        if name.startswith("fig8/scale/"):
+            out.append(csv_row(name, _wall(art), rep["count"],
+                               f"tput={rep['throughput']:.0f}req/s "
+                               f"median={ms(rep['median_ms']):.2f}ms"))
+        else:
+            _, label, rtag = name.split("/")
+            results[(label, int(rtag[2:]))] = rep["throughput"]
+            out.append(csv_row(name, _wall(art), rep["count"],
+                               f"tput={rep['throughput']:.0f}req/s "
+                               f"median={ms(rep['median_ms']):.2f}ms"))
+    rot = {r: t for (lbl, r), t in results.items() if lbl == "rotating"}
+    stat = {r: t for (lbl, r), t in results.items() if lbl == "static"}
+    if rot and stat:
+        out.append(csv_row(
+            "fig8/summary", 0, 1,
+            f"best_R_rotating={max(rot, key=rot.get)} "
+            f"best_R_static={max(stat, key=stat.get)} "
+            f"(paper: 1 and ~sqrt(N)=5)"))
+    return out
+
+
+# ------------------------------------------------------------------- fig 9
+def _fig9(arts, quick):
+    out = []
+    sat = {}
+    for name, art in arts.items():
+        proto = name.split("/")[1]
+        def fmt(p, us, wall, count, proto=proto):
+            return csv_row(f"fig9/{proto}/clients={p['clients']}", wall, count,
+                           f"tput={ms(p['throughput']['mean']):.0f}req/s "
+                           f"median={ms(p['median_ms']['mean']):.2f}ms "
+                           f"p99={ms(p['p99_ms']['mean']):.2f}ms")
+        out.extend(_point_rows(art, fmt))
+        sat[proto] = _sat(art)
+    if {"paxos", "epaxos", "pigpaxos"} <= set(sat):
+        ratio = sat["pigpaxos"] / max(sat["paxos"], 1)
+        try:
+            from repro.core.jaxsim import saturation_point
+            model = f"{saturation_point(25, 24, protocol='paxos'):.0f}"
+        except Exception:   # noqa: BLE001  (jax optional for the model row)
+            model = "n/a"
+        out.append(csv_row(
+            "fig9/summary", 0, 1,
+            f"paxos={sat['paxos']:.0f} epaxos={sat['epaxos']:.0f} "
+            f"pigpaxos={sat['pigpaxos']:.0f} pig/paxos={ratio:.1f}x "
+            f"(paper >3x); queueing-model paxos={model}"))
+    return out
+
+
+# ------------------------------------------------------------------ fig 10
+def _fig10(arts, quick):
+    out = []
+    for name, art in arts.items():
+        proto = name.split("/")[1]
+        def fmt(p, us, wall, count, proto=proto):
+            return csv_row(f"fig10/{proto}/clients={p['clients']}", wall, count,
+                           f"tput={ms(p['throughput']['mean']):.0f}req/s "
+                           f"median={ms(p['median_ms']['mean']):.1f}ms")
+        out.extend(_point_rows(art, fmt))
+    return out
+
+
+# ------------------------------------------------------------- figs 11/12
+def _bar_family(arts, family, summary):
+    out = []
+    res = {}
+    for name, art in arts.items():
+        rep = _rep(art)
+        if rep is None:
+            continue
+        res[name.split("/")[1]] = rep["throughput"]
+        out.append(csv_row(name, _wall(art), rep["count"],
+                           f"tput={rep['throughput']:.0f}req/s "
+                           f"median={ms(rep['median_ms']):.2f}ms"))
+    s = summary(res)
+    if s:
+        out.append(csv_row(f"{family}/summary", 0, 1, s))
+    return out
+
+
+def _fig11(arts, quick):
+    def summary(res):
+        if "pig_R1" not in res or len(res) < 4:
+            return None
+        return (f"R1_beats_all={res['pig_R1'] >= max(res.values()) - 1} "
+                f"(paper: R=1 outperforms all at N=5)")
+    return _bar_family(arts, "fig11", summary)
+
+
+def _fig12(arts, quick):
+    def summary(res):
+        if "pig_R2" not in res or "paxos" not in res:
+            return None
+        gain = (res["pig_R2"] / res["paxos"] - 1) * 100
+        return f"R2_gain_over_paxos={gain:.0f}% (paper: ~57%)"
+    return _bar_family(arts, "fig12", summary)
+
+
+# ------------------------------------------------------------------ fig 13
+def _fig13(arts, quick):
+    out = []
+    tputs: Dict[str, Dict[int, float]] = {}
+    for name, art in arts.items():
+        rep = _rep(art)
+        if rep is None:
+            continue
+        _, proto, stag = name.split("/")
+        size = int(stag.split("=")[1])
+        tputs.setdefault(proto, {})[size] = rep["throughput"]
+        out.append(csv_row(name, _wall(art), rep["count"],
+                           f"tput={rep['throughput']:.0f}req/s"))
+    for proto, by_size in tputs.items():
+        mx = max(by_size.values())
+        for s in sorted(by_size):
+            out.append(csv_row(f"fig13/{proto}/norm/payload={s}", 0, 1,
+                               f"normalized={by_size[s]/mx:.3f} (paper: >0.86)"))
+    if "paxos" in tputs and "pigpaxos" in tputs:
+        shared = set(tputs["paxos"]) & set(tputs["pigpaxos"])
+        if shared:
+            r = min(tputs["pigpaxos"][s] / tputs["paxos"][s] for s in shared)
+            out.append(csv_row("fig13/summary", 0, 1,
+                               f"min_pig_over_paxos={r:.1f}x "
+                               f"(paper: ~3x at all sizes)"))
+    return out
+
+
+# ------------------------------------------------------------- figs 14/15
+def _iqr_row(name, art):
+    rep = _rep(art)
+    if rep is None:
+        return None
+    return csv_row(name, _wall(art), rep["count"],
+                   f"median={ms(rep['median_ms']):.2f}ms "
+                   f"IQR=[{ms(rep['p25_ms']):.2f},{ms(rep['p75_ms']):.2f}]ms")
+
+
+def _fig14(arts, quick):
+    return [r for name, art in arts.items()
+            if (r := _iqr_row(name, art)) is not None]
+
+
+def _fig15(arts, quick):
+    out = []
+    base = None
+    for name, art in arts.items():
+        if name == "fig15/fault_free":
+            continue
+        rep = _rep(art)
+        if rep is None:
+            continue
+        out.append(csv_row(name, _wall(art), rep["count"],
+                           f"median={ms(rep['median_ms']):.2f}ms "
+                           f"IQR=[{ms(rep['p25_ms']):.2f},{ms(rep['p75_ms']):.2f}]ms "
+                           f"tput={rep['throughput']:.0f}"))
+        if name == "fig15/PRC=1/gray=1":
+            base = rep["median_ms"]
+    ff = arts.get("fig15/fault_free")
+    rep0 = _rep(ff) if ff else None
+    if rep0 is not None:
+        gap = (f"; prc+gray within "
+               f"{abs(ms(base) - ms(rep0['median_ms'])):.2f}ms "
+               f"of fault-free" if base is not None else "")
+        out.append(csv_row("fig15/fault_free", _wall(ff), rep0["count"],
+                           f"median={ms(rep0['median_ms']):.2f}ms{gap}"))
+    return out
+
+
+# ------------------------------------------------------------------ fig 16
+def _fig16(arts, quick):
+    art = arts.get("fig16/group_failure")
+    rep = _rep(art) if art else None
+    if rep is None or "extras" not in rep:
+        return []
+    sc = registry.get("fig16/group_failure")
+    fail_at = min(ev[-1] for ev in sc.failures)
+    warmup = rep["warmup_s"]
+    tl = rep["extras"]["timeline"]
+    b = tl["bucket_s"]
+    counts = tl["counts"]
+    # round(): 0.3/0.05 is 5.999... in floats; int() would leak a warmup
+    # bucket into the pre-failure window
+    pre = sum(counts[round(warmup / b):round(fail_at / b)])
+    post = sum(counts[round(fail_at / b):round((fail_at + 0.5) / b)])
+    tput_pre = pre / (fail_at - warmup)
+    tput_post = post / 0.5
+    drop = (1 - tput_post / max(tput_pre, 1)) * 100
+    return [csv_row("fig16/group_failure", _wall(art), rep["count"],
+                    f"tput_before={tput_pre:.0f} tput_during={tput_post:.0f} "
+                    f"drop={drop:.1f}% (paper: ~3%)")]
+
+
+# ------------------------------------------------------------------ fig 17
+def _fig17(arts, quick):
+    out = []
+    mats = {}
+    for name, art in arts.items():
+        rep = _rep(art)
+        if rep is None or "extras" not in rep:
+            continue
+        proto = name.split("/")[1]
+        m = rep["extras"]["flight_per_op"]
+        mats[proto] = m
+        total = sum(sum(r) for r in m)
+        leader = sum(m[0]) + sum(r[0] for r in m)
+        mx = max(v for r in m for v in r)
+        out.append(csv_row(name, _wall(art), rep["count"],
+                           f"leader_traffic_share={leader/max(total, 1e-9):.2f} "
+                           f"max_cell={mx:.2f}msg/op"))
+    if mats:
+        os.makedirs("artifacts", exist_ok=True)
+        with open("artifacts/fig17_heatmap.json", "w") as f:
+            json.dump(mats, f)
+        out.append(csv_row("fig17/summary", 0, 1,
+                           "pigpaxos spreads load: see "
+                           "artifacts/fig17_heatmap.json"))
+    return out
+
+
+# ----------------------------------------------------- post-paper families
+def _mean_std_row(name, art):
+    s = art["summary"]
+    t = s["throughput"]
+    rep = _rep(art)
+    if rep is None:
+        return None
+    return csv_row(name, _wall(art), rep["count"],
+                   f"tput={ms(t['mean']):.0f}req/s std={t['std'] or 0:.0f} "
+                   f"seeds={t['n']} median={ms(s['median_ms']['mean']):.2f}ms")
+
+
+def _zipf(arts, quick):
+    out = [r for name, art in sorted(arts.items())
+           if (r := _mean_std_row(name, art)) is not None]
+    tp = {n: _tput(a) for n, a in arts.items() if _tput(a)}
+    if len(tp) >= 2:
+        spread = max(tp.values()) / max(min(tp.values()), 1)
+        out.append(csv_row("zipf/summary", 0, 1,
+                           f"max_over_min_tput={spread:.2f}x across theta "
+                           f"(keys never route in Pig: expect ~1.0x)"))
+    return out
+
+
+def _openloop(arts, quick):
+    out = []
+    sat = {}
+    for name, art in arts.items():
+        proto = name.split("/")[1]
+        rate = (art["spec"].get("workload") or {}).get("rate_hz", 0.0)
+        def fmt(p, us, wall, count, proto=proto, rate=rate):
+            offered = p["clients"] * rate
+            return csv_row(
+                f"openloop/{proto}/clients={p['clients']}", wall, count,
+                f"offered={offered:.0f}req/s "
+                f"achieved={ms(p['throughput']['mean']):.0f}req/s "
+                f"median={ms(p['median_ms']['mean']):.2f}ms "
+                f"p99={ms(p['p99_ms']['mean']):.2f}ms")
+        out.extend(_point_rows(art, fmt))
+        sat[proto] = _sat(art)
+    if len(sat) >= 2:
+        parts = " ".join(f"{p}={t:.0f}" for p, t in sorted(sat.items()))
+        out.append(csv_row("openloop/summary", 0, 1,
+                           f"open-loop saturation: {parts} req/s"))
+    return out
+
+
+def _conflict(arts, quick):
+    out = [r for name, art in sorted(arts.items())
+           if (r := _mean_std_row(name, art)) is not None]
+    by_n: Dict[str, Dict[float, float]] = {}
+    for name, art in arts.items():
+        _, ntag, ctag = name.split("/")
+        by_n.setdefault(ntag, {})[float(ctag.split("=")[1])] = _tput(art)
+    for ntag, cs in sorted(by_n.items()):
+        if 0.0 in cs and max(cs) > 0.0:
+            hi = cs[max(cs)]
+            out.append(csv_row(f"conflict/summary/{ntag}", 0, 1,
+                               f"tput_at_c={max(cs)}: {hi:.0f}req/s = "
+                               f"{hi / max(cs[0.0], 1):.2f}x of conflict-free"))
+    return out
+
+
+SUMMARIZERS = {
+    "table1": _table1, "table2": _table2,
+    "fig8": _fig8, "fig9": _fig9, "fig10": _fig10, "fig11": _fig11,
+    "fig12": _fig12, "fig13": _fig13, "fig14": _fig14, "fig15": _fig15,
+    "fig16": _fig16, "fig17": _fig17,
+    "zipf": _zipf, "openloop": _openloop, "conflict": _conflict,
+}
+
+
+def rows_for_artifact(artifact: dict,
+                      families: Optional[Sequence[str]] = None) -> List[str]:
+    """Legacy CSV rows for the scenario families present in ``artifact``
+    (optionally restricted/ordered by ``families``)."""
+    by_family: Dict[str, Dict[str, dict]] = {}
+    order: List[str] = []
+    for sa in artifact["scenarios"]:
+        fam = sa["family"]
+        if fam not in by_family:
+            by_family[fam] = {}
+            order.append(fam)
+        by_family[fam][sa["name"]] = sa
+    out = []
+    for fam in (families if families is not None else order):
+        if fam in by_family and fam in SUMMARIZERS:
+            out.extend(SUMMARIZERS[fam](by_family[fam], artifact["quick"]))
+    return out
+
+
+def family_rows(families: Sequence[str], quick: bool = True,
+                processes: int = 0, filter_expr: Optional[str] = None,
+                artifact: Optional[dict] = None) -> List[str]:
+    """Run the given families through the registry runner (or reuse a
+    pre-computed suite ``artifact``) and return their legacy CSV rows."""
+    if artifact is None:
+        artifact = runner.run_families(families, quick=quick,
+                                       processes=processes,
+                                       filter_expr=filter_expr)
+    return rows_for_artifact(artifact, families)

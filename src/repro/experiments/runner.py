@@ -1,0 +1,205 @@
+"""Process-parallel scenario runner.
+
+The DES is single-threaded Python, so a suite of scenarios x client-grid
+points x seeds is embarrassingly parallel: each (scenario, clients, seed)
+triple is one independent simulation, farmed out to a ``multiprocessing``
+pool (``processes > 1``) or run inline (``processes in (0, 1)``).
+
+Every run emits the same artifact schema (``schema`` = ``ARTIFACT_SCHEMA``):
+
+.. code-block:: python
+
+    {"schema": "repro-experiments/v1", "quick": bool, "processes": int,
+     "wall_s": float,
+     "scenarios": [
+        {"name": "fig8/rotating/R=1", "family": "fig8", "grid_mode": "max",
+         "spec": {...},                      # full declarative Scenario
+         "units": [ {clients, seed, throughput, median_ms, ...}, ... ],
+         "replicates": [ ... ],              # one best-over-grid unit per seed
+         "points": [ ... ],                  # curve mode: per-grid aggregates
+         "summary": {"throughput": {mean, std, min, max, n}, ...}},
+        ...]}
+
+``units`` are the raw per-(clients, seed) measurements; ``replicates`` are
+the per-seed results after applying the grid policy (the paper's
+max-throughput methodology folds the offered-load sweep here — the single
+shared implementation of what ``benchmarks/common.max_throughput`` and
+fig9's inline loop used to duplicate).
+"""
+from __future__ import annotations
+
+import math
+import multiprocessing
+import time
+from typing import Dict, List, Optional, Sequence
+
+from repro.core import Cluster
+
+from .scenario import Scenario, build_topology
+
+ARTIFACT_SCHEMA = "repro-experiments/v1"
+TIMELINE_BUCKET_S = 0.05
+
+
+def _f(x) -> Optional[float]:
+    """JSON-safe float: NaN/inf -> None, else rounded."""
+    x = float(x)
+    if math.isnan(x) or math.isinf(x):
+        return None
+    return round(x, 6)
+
+
+def _run_unit(payload) -> dict:
+    """One independent DES run.  Top-level so it pickles for pool workers."""
+    sc, clients, seed, duration, warmup = payload
+    t0 = time.time()
+    c = Cluster(sc.protocol, sc.n, pig=sc.pig, seed=seed,
+                topo=build_topology(sc.topo),
+                leader_timeout=sc.leader_timeout, engine=sc.engine)
+    for ev in sc.failures:
+        kind = ev[0]
+        if kind == "crash":
+            c.crash_at(ev[1], ev[2])
+        elif kind == "recover":
+            c.recover_at(ev[1], ev[2])
+        elif kind == "partition":
+            c.partition_at(ev[1], ev[2], ev[3])
+        else:
+            raise ValueError(f"unknown failure event {ev!r}")
+    st = c.measure(duration=duration, warmup=warmup, clients=clients,
+                   workload=sc.workload)
+    unit = {
+        "scenario": sc.name, "clients": clients, "seed": seed,
+        "duration_s": duration, "warmup_s": warmup,
+        "throughput": _f(st.throughput), "mean_ms": _f(st.mean_ms),
+        "median_ms": _f(st.median_ms), "p25_ms": _f(st.p25_ms),
+        "p75_ms": _f(st.p75_ms), "p99_ms": _f(st.p99_ms),
+        "count": st.count, "committed": st.committed,
+        "wall_s": round(time.time() - t0, 3),
+    }
+    extras = {}
+    if "per_node_msgs" in sc.collect:
+        extras["leader_msgs_per_op"] = _f(st.messages_per_op(0))
+        extras["follower_msgs_per_op"] = _f(
+            sum(st.messages_per_op(i) for i in range(1, sc.n)) / (sc.n - 1))
+    if "flight" in sc.collect:
+        m = st.flight.astype(float) / max(st.committed, 1)
+        extras["flight_per_op"] = [[_f(v) for v in r] for r in m.tolist()]
+    if "timeline" in sc.collect:
+        # completion counts per fixed virtual-time bucket (from t=0), for
+        # throughput-over-time views (e.g. fig16's failure transient)
+        end = warmup + duration
+        counts = [0] * (int(end / TIMELINE_BUCKET_S) + 1)
+        for cl in c.clients:
+            for (t, _lat) in cl.latencies:
+                b = int(t / TIMELINE_BUCKET_S)
+                if b < len(counts):
+                    counts[b] += 1
+        extras["timeline"] = {"bucket_s": TIMELINE_BUCKET_S, "counts": counts}
+    if extras:
+        unit["extras"] = extras
+    return unit
+
+
+def _unit_cost_estimate(payload) -> float:
+    sc, clients, _seed, duration, warmup = payload
+    # epaxos dependency graphs make its events much heavier than (pig)paxos
+    proto_w = 4.0 if sc.protocol == "epaxos" else 1.0
+    return (warmup + duration) * sc.n * clients * proto_w
+
+
+def _agg(values: Sequence[float]) -> dict:
+    vals = [v for v in values if v is not None]
+    if not vals:
+        return {"mean": None, "std": None, "min": None, "max": None, "n": 0}
+    mean = sum(vals) / len(vals)
+    var = sum((v - mean) ** 2 for v in vals) / len(vals)
+    return {"mean": _f(mean), "std": _f(math.sqrt(var)),
+            "min": _f(min(vals)), "max": _f(max(vals)), "n": len(vals)}
+
+
+def _scenario_artifact(sc: Scenario, units: List[dict], quick: bool) -> dict:
+    art = {"name": sc.name, "family": sc.family, "grid_mode": sc.grid_mode,
+           "quick": quick, "spec": sc.spec_dict(), "units": units}
+    # per-seed replicates: apply the grid policy within each seed
+    by_seed: Dict[int, List[dict]] = {}
+    for u in units:
+        by_seed.setdefault(u["seed"], []).append(u)
+    if sc.grid_mode == "max":
+        reps = [max(us, key=lambda u: u["throughput"] or 0.0)
+                for us in by_seed.values()]
+    else:
+        reps = units
+    art["replicates"] = reps
+    if sc.grid_mode == "curve":
+        by_clients: Dict[int, List[dict]] = {}
+        for u in units:
+            by_clients.setdefault(u["clients"], []).append(u)
+        art["points"] = [
+            {"clients": k,
+             "throughput": _agg([u["throughput"] for u in us]),
+             "median_ms": _agg([u["median_ms"] for u in us]),
+             "p99_ms": _agg([u["p99_ms"] for u in us])}
+            for k, us in sorted(by_clients.items())]
+    art["summary"] = {
+        "throughput": _agg([u["throughput"] for u in reps]),
+        "median_ms": _agg([u["median_ms"] for u in reps]),
+        "p99_ms": _agg([u["p99_ms"] for u in reps]),
+        "committed": sum(u["committed"] for u in units),
+        "wall_s": round(sum(u["wall_s"] for u in units), 3),
+    }
+    return art
+
+
+def run_scenarios(scenarios: Sequence[Scenario], quick: bool = True,
+                  processes: int = 0,
+                  ignore_quick_skip: bool = False) -> dict:
+    """Run a suite of scenarios; return the suite artifact.
+
+    ``processes``: 0/1 -> inline (deterministic ordering, easy debugging);
+    N > 1 -> a pool of N workers over all units of all scenarios at once,
+    so a wide scenario cannot serialize the tail of the suite.
+
+    ``ignore_quick_skip``: run ``quick_skip`` scenarios anyway — set when
+    the caller selected scenarios explicitly (``--filter``), so an explicit
+    selection can never degrade to a silent green no-op.
+    """
+    active = [sc for sc in scenarios
+              if ignore_quick_skip or not (quick and sc.quick_skip)]
+    payloads = []
+    for sc in active:
+        rs = sc.resolve(quick)
+        for (k, s) in rs.units():
+            payloads.append((sc, k, s, rs.duration, rs.warmup))
+    t0 = time.time()
+    if processes and processes > 1 and len(payloads) > 1:
+        # longest-processing-time-first: schedule the expensive units early
+        # so the pool tail is short (simulated work ~ duration x n x load);
+        # results are un-sorted afterwards so the artifact is identical to
+        # a serial run
+        order = sorted(range(len(payloads)), reverse=True,
+                       key=lambda i: _unit_cost_estimate(payloads[i]))
+        with multiprocessing.get_context().Pool(processes) as pool:
+            res = pool.map(_run_unit, [payloads[i] for i in order],
+                           chunksize=1)
+        results = [None] * len(payloads)
+        for i, r in zip(order, res):
+            results[i] = r
+    else:
+        results = [_run_unit(p) for p in payloads]
+    by_name: Dict[str, List[dict]] = {}
+    for u in results:
+        by_name.setdefault(u["scenario"], []).append(u)
+    return {"schema": ARTIFACT_SCHEMA, "quick": quick,
+            "processes": int(processes or 0),
+            "wall_s": round(time.time() - t0, 3),
+            "scenarios": [_scenario_artifact(sc, by_name.get(sc.name, []), quick)
+                          for sc in active]}
+
+
+def run_families(families: Sequence[str], quick: bool = True,
+                 processes: int = 0, filter_expr: Optional[str] = None) -> dict:
+    from . import registry
+    return run_scenarios(registry.select(filter_expr, families_subset=families),
+                         quick=quick, processes=processes,
+                         ignore_quick_skip=bool(filter_expr))

@@ -1,0 +1,121 @@
+"""Declarative experiment specs.
+
+A :class:`Scenario` is pure data: protocol, cluster size, Pig configuration,
+topology, workload shape, failure schedule, offered-load grid, and seeds.
+The runner (``runner.py``) turns one scenario into ``len(clients) x
+len(seeds)`` independent DES runs — the unit of process-level parallelism —
+and folds them into one JSON-stable artifact with per-seed replicates.
+
+Scenarios are registered in ``registry.py`` (the paper reproductions live in
+``catalog.py``); adding a new experiment regime is a ~10-line registry entry,
+not a new benchmark script.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+from repro.core import PigConfig, Topology, WorkloadConfig, wan_topology
+
+# Failure schedule entries (all times are virtual seconds):
+#   ("crash", node_id, t)        — node stops responding at t
+#   ("recover", node_id, t)      — node comes back at t
+#   ("partition", a, b, t)       — link a<->b cut at t
+FailureEvent = Tuple
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One declarative experiment: everything the runner needs, as data."""
+
+    name: str                                # "<family>/<config...>" path
+    protocol: str                            # "paxos" | "pigpaxos" | "epaxos"
+    n: int
+    pig: Optional[PigConfig] = None
+    workload: Optional[WorkloadConfig] = None
+    topo: Optional[dict] = None              # {"kind": "wan", "nodes_per_region": [...], "oneway_ms": [[...]]}
+    failures: Tuple[FailureEvent, ...] = ()
+    clients: Tuple[int, ...] = (60,)         # offered-load grid (client counts)
+    # "max"   — the paper's max-throughput methodology: per seed, sweep the
+    #           grid and keep the best sustained rate (one replicate/seed)
+    # "curve" — latency-vs-throughput curves: report every grid point
+    grid_mode: str = "max"
+    seeds: Tuple[int, ...] = (2,)
+    duration: float = 0.6
+    warmup: float = 0.3
+    engine: str = "exact"                    # "exact" | "fast" | "ref"
+    leader_timeout: float = 50e-3
+    collect: Tuple[str, ...] = ()            # extras: "per_node_msgs" | "flight" | "timeline"
+    # quick-mode overrides (None -> use the full-mode value / skip nothing)
+    quick_clients: Optional[Tuple[int, ...]] = None
+    quick_duration: Optional[float] = None
+    quick_warmup: Optional[float] = None
+    quick_seeds: Optional[Tuple[int, ...]] = None
+    quick_skip: bool = False                 # drop entirely in quick mode
+
+    @property
+    def family(self) -> str:
+        return self.name.split("/", 1)[0]
+
+    def resolve(self, quick: bool) -> "ResolvedScenario":
+        if quick:
+            return ResolvedScenario(
+                scenario=self,
+                clients=self.quick_clients or self.clients,
+                seeds=self.quick_seeds or self.seeds,
+                duration=self.quick_duration or self.duration,
+                warmup=self.quick_warmup if self.quick_warmup is not None
+                else self.warmup)
+        return ResolvedScenario(scenario=self, clients=self.clients,
+                                seeds=self.seeds, duration=self.duration,
+                                warmup=self.warmup)
+
+    def build_topology(self) -> Optional[Topology]:
+        return build_topology(self.topo)
+
+    def spec_dict(self) -> dict:
+        """JSON-ready copy of the full spec (recorded in the artifact)."""
+        d = dataclasses.asdict(self)
+        return _jsonify(d)
+
+
+@dataclass(frozen=True)
+class ResolvedScenario:
+    """A scenario with quick/full knobs applied — what the runner executes."""
+    scenario: Scenario
+    clients: Tuple[int, ...]
+    seeds: Tuple[int, ...]
+    duration: float
+    warmup: float
+
+    def units(self):
+        """The independent work units: one DES run per (clients, seed)."""
+        for k in self.clients:
+            for s in self.seeds:
+                yield (k, s)
+
+
+def build_topology(spec: Optional[dict]) -> Optional[Topology]:
+    """Materialize a declarative topology spec (kept as a plain dict so
+    scenarios stay picklable and JSON-serializable)."""
+    if spec is None:
+        return None
+    kind = spec.get("kind", "lan")
+    if kind == "wan":
+        return wan_topology(list(spec["nodes_per_region"]),
+                            [list(r) for r in spec["oneway_ms"]])
+    if kind == "lan":
+        kw = {k: spec[k] for k in ("base_latency", "jitter") if k in spec}
+        return Topology(n=spec["n"], **kw)
+    raise ValueError(f"unknown topology kind {kind!r}")
+
+
+def _jsonify(x):
+    if isinstance(x, dict):
+        return {k: _jsonify(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonify(v) for v in x]
+    if isinstance(x, bytes):
+        return len(x)            # payload bytes: record the size only
+    return x

@@ -1,0 +1,175 @@
+"""Experiment-subsystem tests: registry integrity, scenario resolution,
+runner artifact schema (serial and process-parallel), grid policies, and the
+legacy-row report layer."""
+import json
+
+import pytest
+
+from repro import experiments
+from repro.experiments import report, runner
+from repro.experiments.scenario import Scenario, build_topology
+
+
+# ------------------------------------------------------------------ registry
+def test_catalog_covers_all_paper_reproductions():
+    fams = set(experiments.families())
+    assert {"table1", "table2", "fig8", "fig9", "fig10", "fig11", "fig12",
+            "fig13", "fig14", "fig15", "fig16", "fig17"} <= fams
+    # the post-paper data-only families
+    assert {"zipf", "openloop", "conflict"} <= fams
+
+
+def test_every_family_has_a_summarizer():
+    for fam in experiments.families():
+        assert fam in report.SUMMARIZERS, fam
+
+
+def test_registry_names_unique_and_specs_serializable():
+    names = experiments.names()
+    assert len(names) == len(set(names))
+    for name in names:
+        spec = experiments.get(name).spec_dict()
+        json.dumps(spec)   # must be JSON-clean
+        assert spec["name"] == name
+
+
+def test_register_rejects_duplicates():
+    sc = experiments.get("fig11/paxos")
+    with pytest.raises(ValueError):
+        experiments.register(sc)
+
+
+def test_select_filter_semantics():
+    assert [s.name for s in experiments.select("fig11/pig_*")] == \
+        ["fig11/pig_R1", "fig11/pig_R2"]
+    # a bare family name matches the whole family
+    assert {s.family for s in experiments.select("fig16")} == {"fig16"}
+    # comma-separated globs union
+    got = {s.name for s in experiments.select("fig16,fig11/paxos")}
+    assert got == {"fig16/group_failure", "fig11/paxos"}
+    # families_subset restricts
+    assert all(s.family == "fig9"
+               for s in experiments.select(None, families_subset=["fig9"]))
+    # a pattern matching nothing must fail loudly (CI smoke protection),
+    # naming the dead pattern
+    with pytest.raises(ValueError, match="fig11/renamed"):
+        experiments.select("fig16,fig11/renamed")
+
+
+def test_quick_resolution_and_skip():
+    sc = experiments.get("fig8/rotating/R=1")
+    rq = sc.resolve(quick=True)
+    rf = sc.resolve(quick=False)
+    assert rq.clients == sc.quick_clients
+    assert rf.clients == sc.clients
+    assert rq.duration < rf.duration
+    assert experiments.get("fig8/rotating/R=8").quick_skip
+    skipped = runner.run_scenarios([experiments.get("fig8/rotating/R=8")],
+                                   quick=True)
+    assert skipped["scenarios"] == []
+    # ...but an explicit --filter selection overrides quick_skip: an
+    # explicitly requested scenario must never be a silent green no-op
+    forced = runner.run_families(["fig8"], quick=True,
+                                 filter_expr="fig8/rotating/R=8")
+    assert [s["name"] for s in forced["scenarios"]] == ["fig8/rotating/R=8"]
+    assert forced["scenarios"][0]["units"]
+
+
+def test_wan_topology_spec_builds():
+    sc = experiments.get("fig10/pigpaxos")
+    topo = sc.build_topology()
+    assert topo.n == 15
+    assert build_topology(None) is None
+    with pytest.raises(ValueError):
+        build_topology({"kind": "ring"})
+
+
+# ------------------------------------------------------------------- runner
+_TINY = Scenario(name="t/max", protocol="pigpaxos", n=5, clients=(4, 8),
+                 seeds=(1, 2), duration=0.15, warmup=0.05)
+_TINY_CURVE = Scenario(name="t/curve", protocol="paxos", n=3,
+                       grid_mode="curve", clients=(3, 6), seeds=(1,),
+                       duration=0.15, warmup=0.05)
+
+
+def test_runner_artifact_schema_and_replicates():
+    art = runner.run_scenarios([_TINY, _TINY_CURVE], quick=False)
+    assert art["schema"] == runner.ARTIFACT_SCHEMA
+    json.dumps(art)
+    by_name = {s["name"]: s for s in art["scenarios"]}
+    tm = by_name["t/max"]
+    # 2 clients x 2 seeds = 4 units; max grid policy -> 1 replicate per seed
+    assert len(tm["units"]) == 4
+    assert len(tm["replicates"]) == 2
+    assert {u["seed"] for u in tm["replicates"]} == {1, 2}
+    for rep in tm["replicates"]:
+        per_seed = [u for u in tm["units"] if u["seed"] == rep["seed"]]
+        assert rep["throughput"] == max(u["throughput"] for u in per_seed)
+    s = tm["summary"]["throughput"]
+    assert s["n"] == 2 and s["min"] <= s["mean"] <= s["max"]
+    # curve mode: per-grid-point aggregates
+    tc = by_name["t/curve"]
+    assert [p["clients"] for p in tc["points"]] == [3, 6]
+    assert len(tc["replicates"]) == len(tc["units"]) == 2
+
+
+def test_runner_parallel_matches_serial():
+    """The DES is deterministic per (scenario, clients, seed) unit, so a
+    process pool must produce identical measurements to the inline path."""
+    serial = runner.run_scenarios([_TINY], quick=False, processes=0)
+    par = runner.run_scenarios([_TINY], quick=False, processes=2)
+    strip = lambda art: [
+        {k: v for k, v in u.items() if k != "wall_s"}
+        for s in art["scenarios"] for u in s["units"]]
+    assert strip(serial) == strip(par)
+    assert par["processes"] == 2
+
+
+def test_runner_failure_schedule_applied():
+    sc = Scenario(name="t/crash", protocol="pigpaxos", n=5,
+                  failures=(("crash", 3, 0.05),),
+                  clients=(4,), seeds=(1,), duration=0.2, warmup=0.05)
+    art = runner.run_scenarios([sc], quick=False)
+    rep = art["scenarios"][0]["replicates"][0]
+    assert rep["committed"] > 0   # cluster survives the crash
+
+
+def test_runner_collect_extras():
+    sc = Scenario(name="t/extras", protocol="pigpaxos", n=5,
+                  clients=(4,), seeds=(1,), duration=0.2, warmup=0.05,
+                  collect=("per_node_msgs", "flight", "timeline"))
+    art = runner.run_scenarios([sc], quick=False)
+    ex = art["scenarios"][0]["units"][0]["extras"]
+    assert ex["leader_msgs_per_op"] > 0
+    assert len(ex["flight_per_op"]) == 5
+    assert sum(ex["timeline"]["counts"]) > 0
+
+
+# ------------------------------------------------------------------- report
+def test_report_rows_preserve_legacy_contract():
+    art = runner.run_scenarios(
+        [experiments.get("fig11/paxos"), experiments.get("fig11/epaxos"),
+         experiments.get("fig11/pig_R1"), experiments.get("fig11/pig_R2")],
+        quick=True)
+    rows = report.rows_for_artifact(art)
+    names = [r.split(",", 1)[0] for r in rows]
+    assert names == ["fig11/paxos", "fig11/epaxos", "fig11/pig_R1",
+                     "fig11/pig_R2", "fig11/summary"]
+    for r in rows:
+        name, us, derived = r.split(",", 2)
+        float(us)
+        assert derived
+
+
+def test_report_degrades_gracefully_under_filter():
+    """A partial family (as produced by --filter) emits rows for what ran
+    and skips cross-scenario summary rows."""
+    art = runner.run_scenarios([experiments.get("fig11/paxos")], quick=True)
+    rows = report.rows_for_artifact(art)
+    assert [r.split(",", 1)[0] for r in rows] == ["fig11/paxos"]
+
+
+def test_family_rows_end_to_end():
+    rows = report.family_rows(["fig16"], quick=True)
+    assert rows and rows[0].startswith("fig16/group_failure,")
+    assert "drop=" in rows[0]

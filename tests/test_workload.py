@@ -1,0 +1,195 @@
+"""Workload-layer tests: Zipfian key skew, open-loop Poisson arrivals,
+conflict (hot-key) workloads, mixed payloads, and WAN topology geometry."""
+import numpy as np
+import pytest
+
+from repro.core import (Cluster, OpenLoopClient, PigConfig, Topology,
+                        WorkloadConfig, wan_topology, zipf_cdf)
+
+
+# ----------------------------------------------------------------- zipfian
+def test_zipf_cdf_shape():
+    cdf = zipf_cdf(1000, 0.99)
+    assert cdf.shape == (1000,)
+    assert cdf[-1] == 1.0
+    assert np.all(np.diff(cdf) > 0)
+    # rank-1 mass dominates rank-2 by ~2^theta
+    p1, p2 = cdf[0], cdf[1] - cdf[0]
+    assert p1 / p2 == pytest.approx(2 ** 0.99, rel=1e-6)
+
+
+def _key_histogram(workload, n_ops=4000, proto="paxos"):
+    c = Cluster(proto, 5, seed=3)
+    c.add_clients(8, workload, stop_at=10.0)
+    c.run(until=10.0)
+    keys = [cmd.key for _s, cmd in c.nodes[0].applied_log]
+    assert len(keys) >= n_ops
+    return np.bincount(keys[:n_ops], minlength=workload.n_keys)
+
+
+def test_zipfian_key_frequency_sanity():
+    """Observed key frequencies must follow the Zipf law: the hottest key is
+    rank 0, and the head holds far more mass than under uniform draws."""
+    wl = WorkloadConfig(key_dist="zipfian", zipf_theta=0.99, n_keys=100)
+    hist = _key_histogram(wl)
+    assert int(np.argmax(hist)) == 0
+    n_ops = hist.sum()
+    cdf = zipf_cdf(100, 0.99)
+    # top-10 mass matches the analytic head probability within noise
+    expect_head = cdf[9]
+    got_head = hist[:10].sum() / n_ops
+    assert got_head == pytest.approx(expect_head, abs=0.05)
+    # and is far above the uniform head mass (0.10)
+    assert got_head > 0.4
+
+
+def test_uniform_keys_stay_uniform():
+    wl = WorkloadConfig(key_dist="uniform", n_keys=100)
+    hist = _key_histogram(wl)
+    assert hist[:10].sum() / hist.sum() == pytest.approx(0.10, abs=0.04)
+
+
+# ---------------------------------------------------------------- conflict
+def test_conflict_workload_hot_key_rate():
+    wl = WorkloadConfig(key_dist="conflict", conflict_rate=0.3, n_keys=100)
+    hist = _key_histogram(wl)
+    assert hist[0] / hist.sum() == pytest.approx(0.3, abs=0.05)
+    # non-hot keys exclude key 0 and stay roughly uniform
+    assert hist[1:].min() >= 0
+
+
+def test_conflict_workload_epaxos_agreement():
+    """EPaxos orders only *interfering* commands; under a hot-key workload
+    every replica must apply the same-key (conflicting) commands in the
+    same order, even though cross-key order may differ."""
+    wl = WorkloadConfig(key_dist="conflict", conflict_rate=0.5)
+    c = Cluster("epaxos", 5, seed=4)
+    c.add_clients(6, wl, stop_at=0.4)
+    c.run(until=0.6)
+    per_key = []
+    for nd in c.nodes:
+        d = {}
+        for _s, cmd in nd.applied_log:
+            d.setdefault(cmd.key, []).append((cmd.client_id, cmd.seq))
+        per_key.append(d)
+    keys = set().union(*per_key)
+    assert 0 in keys   # the hot key saw traffic
+    for k in keys:
+        seqs = [d.get(k, []) for d in per_key]
+        ref = max(seqs, key=len)
+        assert all(s == ref[:len(s)] for s in seqs), k
+    assert sum(nd.committed_count for nd in c.nodes) > 0
+
+
+# ------------------------------------------------------------- open loop
+def _openloop_run(seed, rate=150.0, protocol="pigpaxos"):
+    wl = WorkloadConfig(arrival="poisson", rate_hz=rate)
+    c = Cluster(protocol, 5, pig=PigConfig(n_groups=2), seed=seed)
+    st = c.measure(duration=0.4, warmup=0.1, clients=6, workload=wl)
+    arrivals = sorted(t - lat for cl in c.clients for (t, lat) in cl.latencies)
+    return st, arrivals, c
+
+
+def test_openloop_clients_are_used():
+    _, _, c = _openloop_run(1)
+    assert all(isinstance(cl, OpenLoopClient) for cl in c.clients)
+
+
+def test_openloop_poisson_interarrival_determinism_per_seed():
+    """Same seed -> bit-identical arrival process and results; different
+    seed -> a different draw."""
+    st_a, arr_a, _ = _openloop_run(7)
+    st_b, arr_b, _ = _openloop_run(7)
+    st_c, arr_c, _ = _openloop_run(8)
+    assert arr_a == arr_b
+    assert st_a.throughput == st_b.throughput
+    assert st_a.median_ms == st_b.median_ms
+    assert arr_a != arr_c
+
+
+def test_openloop_offered_load_is_met_below_saturation():
+    """6 clients x 150 req/s = 900 req/s offered — far below a 5-node
+    PigPaxos deployment's capacity, so achieved ~= offered."""
+    st, _, _ = _openloop_run(2)
+    assert st.throughput == pytest.approx(900, rel=0.15)
+
+
+def test_openloop_interarrival_is_exponential_like():
+    """Mean inter-arrival per client ~= 1/rate (CV ~ 1 for exponential)."""
+    _, _, c = _openloop_run(3, rate=400.0)
+    cl = max(c.clients, key=lambda cl: len(cl.latencies))
+    arr = sorted(t - lat for (t, lat) in cl.latencies)
+    gaps = np.diff(arr)
+    assert len(gaps) > 30
+    assert gaps.mean() == pytest.approx(1 / 400.0, rel=0.35)
+    cv = gaps.std() / gaps.mean()
+    assert 0.6 < cv < 1.4
+
+
+# ---------------------------------------------------------- mixed payloads
+def test_mixed_payload_distribution():
+    wl = WorkloadConfig(write_fraction=1.0, n_keys=10,
+                        payload_choices=(8, 1024),
+                        payload_weights=(0.75, 0.25))
+    c = Cluster("paxos", 3, seed=5)
+    c.add_clients(4, wl, stop_at=0.5)
+    c.run(until=0.7)
+    sizes = [len(cmd.value) for _s, cmd in c.nodes[0].applied_log]
+    assert set(sizes) <= {8, 1024}
+    frac_small = sizes.count(8) / len(sizes)
+    assert frac_small == pytest.approx(0.75, abs=0.08)
+
+
+def test_workload_config_rejects_unknown_modes():
+    with pytest.raises(ValueError):
+        WorkloadConfig(key_dist="zipf")       # typo of "zipfian"
+    with pytest.raises(ValueError):
+        WorkloadConfig(arrival="open")        # typo of "poisson"
+
+
+def test_payload_cdf_terminal_clamp():
+    # 7 uniform weights: cumsum rounds below 1.0 without the clamp
+    wl = WorkloadConfig(payload_choices=(8, 64, 256, 512, 1024, 1280, 2048))
+    c = Cluster("paxos", 3, seed=6)
+    from repro.core.cluster import Client
+    cl = Client(c, 0, lambda: 0, wl, stop_at=0.0)
+    assert cl._payload_cdf[-1] == 1.0
+    class _One:                                    # rng.random() -> max float < 1
+        def random(self):
+            return 1.0 - 2**-53
+    assert len(cl._pick_payload(_One())) == 2048   # last choice, no IndexError
+
+
+# ------------------------------------------------------------ wan topology
+def test_wan_topology_symmetry_and_diagonal():
+    ms = [[0.15, 31, 35], [31, 0.15, 11], [35, 11, 0.15]]
+    topo = wan_topology([2, 2, 2], ms)
+    assert topo.n == 6
+    assert topo.region_of == [0, 0, 1, 1, 2, 2]
+    lat = topo.region_latency
+    # symmetric cross-region latencies; intra-region (diagonal) is LAN-fast
+    np.testing.assert_allclose(lat, lat.T)
+    assert np.all(np.diag(lat) < 1e-3)
+    assert np.all(lat[~np.eye(3, dtype=bool)] > np.diag(lat).max())
+    # seconds, not milliseconds
+    np.testing.assert_allclose(lat, np.asarray(ms) * 1e-3)
+
+
+def test_wan_latency_sampling_matches_regions():
+    ms = [[0.15, 31, 35], [31, 0.15, 11], [35, 11, 0.15]]
+    topo = wan_topology([2, 2, 2], ms)
+    rng = np.random.default_rng(0)
+    # node 0 (region 0) -> node 4 (region 2): base 35ms + jitter
+    samples = [topo.latency(rng, 0, 4) for _ in range(200)]
+    assert min(samples) >= 35e-3
+    assert np.mean(samples) == pytest.approx(35e-3 + topo.jitter, rel=0.2)
+    # clients (ids >= n) are co-located with region 0
+    s_client = [topo.latency(rng, topo.n + 3, 4) for _ in range(200)]
+    assert min(s_client) >= 35e-3
+
+
+def test_lan_topology_latency_positive():
+    topo = Topology(n=3)
+    rng = np.random.default_rng(1)
+    s = [topo.latency(rng, 0, 1) for _ in range(100)]
+    assert min(s) >= topo.base_latency
