@@ -3,13 +3,17 @@
 - ``zipf``     — Zipf-skewed PigPaxos (key popularity skew vs uniform);
 - ``openloop`` — open-loop Poisson fig9 variant (offered load independent
   of completion rate);
-- ``conflict`` — EPaxos conflict-rate sweeps at N in {25, 49}.
+- ``conflict`` — EPaxos conflict-rate sweeps at N in {25, 49};
+- ``wan``      — the fig10 three-region WAN scaled to N in {25, 49, 101},
+  run on both the fast DES engine and the batch backend (cross-check);
+- ``scale``    — batch-backend headroom grids: N up to 1025 and
+  64-128-seed replicate sweeps, one jitted call per scenario.
 
 All are data-only entries in ``repro.experiments.catalog``; this module is
 the ``run.py --only`` shim."""
 from repro.experiments import report
 
-FAMILIES = ["zipf", "openloop", "conflict"]
+FAMILIES = ["zipf", "openloop", "conflict", "wan", "scale"]
 
 
 def run(quick: bool = True):

@@ -42,6 +42,7 @@ MODULES = [
     "serialization_cost",
     "analytical_sweep",
     "sim_engine_bench",
+    "vectorsim_bench",
     "collective_schedules",
     "kernel_bench",
     "roofline",
@@ -81,6 +82,10 @@ def main() -> None:
                     metavar="N", help="pool size for scenario units "
                                       "(no value: one per CPU)")
     ap.add_argument("--list-scenarios", action="store_true")
+    ap.add_argument("--backend", default=None, choices=("des", "batch"),
+                    help="override the simulation backend: 'batch' runs "
+                         "every batch-eligible scenario's whole grid as one "
+                         "jitted vectorsim call; 'des' forces the DES")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write all rows (+ artifact + engine stats) to a "
                          "BENCH json")
@@ -119,7 +124,7 @@ def main() -> None:
         try:
             artifact = experiments.run_families(
                 fams, quick=quick, processes=processes,
-                filter_expr=args.filter)
+                filter_expr=args.filter, backend_override=args.backend)
             n_units = sum(len(sa["units"]) for sa in artifact["scenarios"])
             print(f"# scenario suite: {len(artifact['scenarios'])} scenarios"
                   f", {n_units} units, processes={processes}, "

@@ -12,6 +12,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from .quorums import fast_quorum
+
 
 def leader_messages(r: int) -> float:
     """Messages handled by the leader per request, client I/O included."""
@@ -28,6 +30,16 @@ def relay_messages(n: int, r: int) -> float:
     1 fanout in + 1 aggregate out + round trip with each group peer."""
     g = (n - 1) / r
     return 2 + 2 * (g - 1)
+
+
+def epaxos_messages(n: int) -> float:
+    """Per-node messages/request on the EPaxos conflict-free fast path,
+    client I/O included (all nodes symmetric, §5.3): PreAccept + reply with
+    the fast quorum (each message counted at both endpoints), the commit
+    broadcast to the other N-1 replicas, and the client request/reply pair
+    at the command leader — averaged over the N replicas."""
+    fq = fast_quorum(n)
+    return (2.0 * (fq - 1) * 2 + (n - 1) * 2 + 2) / n
 
 
 def total_messages_per_round(n: int) -> int:

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .analytical import epaxos_messages
+
 
 # ---------------------------------------------------------------- Monte Carlo
 @functools.partial(jax.jit, static_argnames=("n", "r", "rounds", "rotating"))
@@ -100,8 +102,7 @@ def latency_curve(offered: jnp.ndarray, n: int, r: int,
         visits_l = m_l
         visits_f = m_f
     else:  # epaxos (conflict-free fast path), all nodes symmetric
-        fq = (3 * n) // 4 + (1 if (3 * n) % 4 else 0)
-        m_f = (2.0 * (fq - 1) * 2 + (n - 1) * 2 + 2) / n
+        m_f = epaxos_messages(n)
         m_l = m_f
         hops = 4
         visits_l = visits_f = m_f
@@ -126,6 +127,5 @@ def saturation_point(n: int, r: int, cpu_per_msg: float = 10e-6,
     elif protocol == "pigpaxos":
         m = max(2.0 * r + 2.0, 2.0 * (n - r - 1) / (n - 1) + 2.0)
     else:
-        fq = (3 * n) // 4 + (1 if (3 * n) % 4 else 0)
-        m = (2.0 * (fq - 1) * 2 + (n - 1) * 2 + 2) / n
+        m = epaxos_messages(n)
     return 1.0 / (m * cpu_per_msg)

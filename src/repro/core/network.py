@@ -55,15 +55,17 @@ class Topology:
     region_latency: Optional[np.ndarray] = None   # one-way seconds
 
     def latency(self, rng: np.random.Generator, src: int, dst: int) -> float:
-        if self.region_of is not None:
-            # endpoints >= n are clients: co-located with the leader's
-            # region (region 0), as in the paper's WAN setup (§5.3)
-            rs = self.region_of[src] if src < self.n else 0
-            rd = self.region_of[dst] if dst < self.n else 0
-            base = float(self.region_latency[rs][rd])
-        else:
-            base = self.base_latency
-        return base + rng.exponential(self.jitter)
+        return self.base_between(src, dst) + rng.exponential(self.jitter)
+
+    def base_between(self, src: int, dst: int) -> float:
+        """Deterministic part of :meth:`latency` (no jitter draw).
+        Endpoints >= n are clients: co-located with the leader's region
+        (region 0), as in the paper's WAN setup (§5.3)."""
+        if self.region_of is None:
+            return self.base_latency
+        rs = self.region_of[src] if src < self.n else 0
+        rd = self.region_of[dst] if dst < self.n else 0
+        return float(self.region_latency[rs][rd])
 
 
 def wan_topology(nodes_per_region: list[int], oneway_ms: list[list[float]]) -> Topology:
@@ -104,6 +106,25 @@ class Network:
         self._fixed = self.cost._fixed           # class -> constant cpu cost
         self.partitioned: set[Tuple[int, int]] = set()
         self.accounting = True
+        # fast-path jitter presampling: one rng call per hop is ~15% of the
+        # flattened loop, so draw Exp(jitter) in blocks and hand out plain
+        # Python floats.  The fast path is already not bit-identical to the
+        # exact engine, so consuming the RNG in blocks is fair game (the
+        # exact engine keeps its per-hop draws — golden traces depend on it).
+        self._jitter_block: list = []
+        self._jitter_idx = 0
+
+    _JITTER_BLOCK = 4096
+
+    def _next_jitter(self, rng, scale: float) -> float:
+        i = self._jitter_idx
+        block = self._jitter_block
+        if i >= len(block):
+            block = rng.exponential(scale, self._JITTER_BLOCK).tolist()
+            self._jitter_block = block
+            i = 0
+        self._jitter_idx = i + 1
+        return block[i]
 
     def register(self, node_id: int, node) -> None:
         if node_id >= self._cap:
@@ -180,7 +201,10 @@ class Network:
             done = now
         if self.partitioned and (src, dst) in self.partitioned:
             return
-        arrive = done + self.topo.latency(sched.rng, src, dst)
+        topo = self.topo
+        base = (topo.base_latency if topo.region_of is None
+                else topo.base_between(src, dst))
+        arrive = done + base + self._next_jitter(sched.rng, topo.jitter)
         sched._seq = seq = sched._seq + 1
         heapq.heappush(sched._heap, (arrive, seq, K_DELIVER, dst, msg, c, None))
 

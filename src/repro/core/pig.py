@@ -44,6 +44,38 @@ class PigConfig:
     groups: Optional[List[List[int]]] = None   # explicit (e.g. per-region, §5.3)
 
 
+def partition_followers(members: Sequence[int], r: int) -> List[List[int]]:
+    """Round-robin partition of the followers into ``r`` relay groups —
+    THE cluster-wide static partition (§3.2), shared by the DES comm layer
+    and the batched backend (``core.vectorsim``)."""
+    r = max(1, min(r, len(members)))
+    out: List[List[int]] = [[] for _ in range(r)]
+    for i, m in enumerate(members):
+        out[i % r].append(m)
+    return out
+
+
+def required_per_group(groups: List[List[int]], n: int, prc: int,
+                       single_group_majority: bool) -> List[int]:
+    """PRC thresholds q_i = n_i - PRC, subject to the paper's §4.1
+    constraint sum(q_i) >= majority - 1 (the leader votes for itself);
+    violating it would let a single crashed group block liveness.
+    ``single_group_majority`` is the §4.3 R == 1 global-majority shortcut.
+    Shared by PigComm and the batched backend (``core.vectorsim``)."""
+    maj = n // 2 + 1
+    if single_group_majority and len(groups) == 1:
+        return [min(len(groups[0]), maj - 1)]     # §4.3: global majority
+    req = [max(1, len(g) - prc) for g in groups]
+    i = 0
+    while sum(req) < maj - 1:
+        if req[i % len(req)] < len(groups[i % len(req)]):
+            req[i % len(req)] += 1
+        i += 1
+        if i > 4 * len(req):       # all groups already at n_i
+            break
+    return req
+
+
 class DirectComm:
     """Classic Paxos communication: leader <-> every follower directly.
 
@@ -103,13 +135,7 @@ class PigComm:
         self._pending_sup: Dict[int, int] = {}   # slot -> pig_id (late votes)
         self.gray: Dict[int, float] = {}     # node -> expiry time (§4.2)
 
-    @staticmethod
-    def _partition(members: Sequence[int], r: int) -> List[List[int]]:
-        r = max(1, min(r, len(members)))
-        out: List[List[int]] = [[] for _ in range(r)]
-        for i, m in enumerate(members):
-            out[i % r].append(m)
-        return out
+    _partition = staticmethod(partition_followers)
 
     def groups_for(self, leader: int) -> List[List[int]]:
         """Relay groups are a cluster-wide static partition of the *followers*
@@ -142,21 +168,8 @@ class PigComm:
         return candidates[int(rng.integers(len(candidates)))]
 
     def _required_per_group(self, groups: List[List[int]]) -> List[int]:
-        """PRC thresholds q_i = n_i - PRC, subject to the paper's §4.1
-        constraint sum(q_i) >= majority - 1 (the leader votes for itself);
-        violating it would let a single crashed group block liveness."""
-        maj = len(self.all_nodes) // 2 + 1
-        if self.cfg.single_group_majority and len(groups) == 1:
-            return [min(len(groups[0]), maj - 1)]     # §4.3: global majority
-        req = [max(1, len(g) - self.cfg.prc) for g in groups]
-        i = 0
-        while sum(req) < maj - 1:
-            if req[i % len(req)] < len(groups[i % len(req)]):
-                req[i % len(req)] += 1
-            i += 1
-            if i > 4 * len(req):       # all groups already at n_i
-                break
-        return req
+        return required_per_group(groups, len(self.all_nodes), self.cfg.prc,
+                                  self.cfg.single_group_majority)
 
     def broadcast(self, make_msg: Callable[[], Msg], round_key=None) -> list:
         """Start one Pig round per relay group.  Returns the pig ids used,

@@ -4,9 +4,12 @@
   topology, workload, failure schedule, client grid, seeds — pure data.
 - ``registry``  — name -> scenario, with ``--filter`` glob selection.
 - ``catalog``   — every paper reproduction (table1/2, fig8-17) plus the
-  post-paper ``zipf``/``openloop``/``conflict`` families as registry entries.
+  post-paper ``zipf``/``openloop``/``conflict``/``wan``/``scale`` families
+  as registry entries.
 - ``runner``    — process-parallel execution over (scenario, clients, seed)
   units; one stable JSON artifact schema with per-seed replicates.
+  ``backend="batch"`` scenarios run their whole grid as ONE jitted call on
+  ``repro.core.vectorsim`` instead of entering the pool.
 - ``report``    — artifact -> the legacy ``name,us_per_call,derived`` rows
   that ``benchmarks/run.py`` prints (perf-trajectory contract).
 """

@@ -20,19 +20,21 @@ from .scenario import Scenario
 # --------------------------------------------------------------- tables 1/2
 # Analytical message-load tables, each validated against DES-measured
 # per-node message counts at representative R (the asserts live in report.py).
+# batch_ok: the batch backend reproduces the same per-node loads, so the
+# Eq. 1-3 cross-check runs on either backend (--backend batch).
 for r in (1, 3):
     register(Scenario(
         name=f"table1/validate/R={r}", protocol="pigpaxos", n=25,
         pig=PigConfig(n_groups=r), clients=(20,), seeds=(7,),
         duration=1.0, warmup=0.2, quick_duration=0.4,
-        collect=("per_node_msgs",)))
+        batch_ok=True, collect=("per_node_msgs",)))
 
 for r in (1, 2):
     register(Scenario(
         name=f"table2/validate/R={r}", protocol="pigpaxos", n=5,
         pig=PigConfig(n_groups=r), clients=(20,), seeds=(7,),
         duration=1.0, warmup=0.2, quick_duration=0.4,
-        collect=("per_node_msgs",)))
+        batch_ok=True, collect=("per_node_msgs",)))
 
 # ------------------------------------------------------------------- fig 8
 # Max throughput vs number of relay groups, rotating vs static, 25 nodes.
@@ -45,7 +47,7 @@ for rotate in (True, False):
                           single_group_majority=(r == 1 and rotate)),
             clients=(20, 60, 120), quick_clients=(40, 120),
             duration=1.0, quick_duration=0.4, warmup=0.25,
-            quick_skip=(r in (4, 6, 8))))
+            batch_ok=True, quick_skip=(r in (4, 6, 8))))
 
 # Beyond the paper: the same relay-group sweep at N in {25, 49, 101} on the
 # flattened fast engine (the paper's testbed stopped at 25 nodes).
@@ -55,7 +57,8 @@ for n in (25, 49, 101):
             name=f"fig8/scale/N={n}/R={r}", protocol="pigpaxos", n=n,
             pig=PigConfig(n_groups=r, prc=1), engine="fast",
             clients=(60, 120), quick_clients=(60,),
-            duration=0.6, quick_duration=0.3, warmup=0.25))
+            duration=0.6, quick_duration=0.3, warmup=0.25,
+            batch_ok=True))
 
 # ------------------------------------------------------------------- fig 9
 # Latency vs throughput curves, 25 nodes, Paxos vs EPaxos vs PigPaxos(R=3).
@@ -169,20 +172,23 @@ for proto, pig in (("paxos", None), ("pigpaxos", PigConfig(n_groups=3))):
 # Zipf-skewed PigPaxos: YCSB-style key popularity skew at N=25, R=3.  The
 # paper only evaluates uniform keys; skew stresses nothing in Pig's relay
 # layer (keys never route), so throughput should be flat across theta —
-# a falsifiable no-op check the summarizer reports.
+# a falsifiable no-op check the summarizer reports.  batch_ok because keys
+# are performance-neutral in (Pig)Paxos — but note the batch backend makes
+# the flatness exact by construction (it never samples keys), so the
+# *falsifiable* version of this check is the DES run.
 for theta in (0.6, 0.9, 0.99, 1.2):
     register(Scenario(
         name=f"zipf/pigpaxos/theta={theta}", protocol="pigpaxos", n=25,
         pig=PigConfig(n_groups=3, prc=1),
         workload=WorkloadConfig(key_dist="zipfian", zipf_theta=theta),
         clients=(60,), seeds=(1, 2, 3),
-        duration=0.8, quick_duration=0.3))
+        duration=0.8, quick_duration=0.3, batch_ok=True))
 register(Scenario(
     name="zipf/pigpaxos/uniform", protocol="pigpaxos", n=25,
     pig=PigConfig(n_groups=3, prc=1),
     workload=WorkloadConfig(key_dist="uniform"),
     clients=(60,), seeds=(1, 2, 3),
-    duration=0.8, quick_duration=0.3))
+    duration=0.8, quick_duration=0.3, batch_ok=True))
 
 # Open-loop Poisson fig9 variant: offered load fixed at clients x 100 req/s
 # regardless of completion rate — latency blows up past saturation instead
@@ -208,3 +214,59 @@ for n, engine in ((25, "exact"), (49, "fast")):
             workload=WorkloadConfig(key_dist="conflict", conflict_rate=c),
             clients=(40,), seeds=(1, 2, 3), quick_seeds=(1, 2),
             duration=0.8, quick_duration=0.3))
+
+# WAN sweeps at N in {25, 49, 101} (ROADMAP open item from PR 1): the fig10
+# three-region topology scaled up, per-region relay groups (paper §5.3).
+# Each size runs twice — on the fast DES engine and on the batch backend —
+# so the wan summarizer doubles as a DES<->batch cross-check at WAN scale.
+
+
+def _wan_scaled(n: int):
+    """N nodes over 3 regions (fig10 latencies), per-region groups."""
+    per = [n - 2 * (n // 3), n // 3, n // 3]
+    spec = {"kind": "wan", "nodes_per_region": per,
+            "oneway_ms": _WAN3["oneway_ms"]}
+    bounds = [0, per[0], per[0] + per[1], n]
+    groups = [list(range(bounds[i], bounds[i + 1])) for i in range(3)]
+    return spec, groups
+
+
+for n in (25, 49, 101):
+    spec, groups = _wan_scaled(n)
+    for backend in ("des", "batch"):
+        register(Scenario(
+            name=f"wan/N={n}" + ("/batch" if backend == "batch" else ""),
+            protocol="pigpaxos", n=n,
+            pig=PigConfig(n_groups=3, groups=groups, prc=1),
+            topo=spec, engine="fast", backend=backend, batch_ok=True,
+            leader_timeout=400e-3,
+            clients=(40, 120), quick_clients=(40,),
+            seeds=(2, 3) if backend == "des" else tuple(range(16)),
+            quick_seeds=(2,) if backend == "des" else (0, 1, 2, 3),
+            duration=2.0, quick_duration=0.8, warmup=0.5,
+            quick_skip=(n == 101 and backend == "des")))
+
+# ======================================================================
+# Batch-backend headroom: grids the DES cannot touch (one jitted call per
+# scenario; N up to 1025 and hundreds of seed replicates per point).
+# ======================================================================
+for n, r, nseeds, qseeds in ((257, 16, 128, 8), (1025, 32, 24, 4)):
+    register(Scenario(
+        name=f"scale/batch/N={n}/R={r}", protocol="pigpaxos", n=n,
+        pig=PigConfig(n_groups=r, prc=1), backend="batch", batch_ok=True,
+        clients=(60, 120), quick_clients=(60,),
+        seeds=tuple(range(nseeds)), quick_seeds=tuple(range(qseeds)),
+        duration=0.5, quick_duration=0.25, warmup=0.25,
+        quick_skip=(n == 1025)))
+# the paper-grade relay-group sweep with hundreds of replicates per R:
+# 7 R values x 3 client counts x 64 seeds = 1344 cells, one compiled call
+# per scenario (~seconds each on the batch backend)
+for r in (1, 2, 3, 5, 8, 12, 24):
+    register(Scenario(
+        name=f"scale/batch/replicates/R={r}", protocol="pigpaxos", n=25,
+        pig=PigConfig(n_groups=r, prc=1,
+                      single_group_majority=(r == 1)),
+        backend="batch", batch_ok=True,
+        clients=(20, 60, 120), quick_clients=(60,),
+        seeds=tuple(range(64)), quick_seeds=tuple(range(8)),
+        duration=0.5, quick_duration=0.25, warmup=0.25))

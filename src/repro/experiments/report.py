@@ -375,6 +375,53 @@ def _openloop(arts, quick):
     return out
 
 
+def _wan(arts, quick):
+    """WAN at N in {25,49,101}: per-size rows for both backends plus the
+    DES<->batch cross-check ratio on the sizes where both ran."""
+    out = [r for name, art in sorted(arts.items())
+           if (r := _mean_std_row(name, art)) is not None]
+    by_n: Dict[str, Dict[str, float]] = {}
+    med: Dict[str, Dict[str, float]] = {}
+    for name, art in arts.items():
+        ntag = name.split("/")[1]
+        backend = art.get("backend", "des")
+        by_n.setdefault(ntag, {})[backend] = _tput(art)
+        m = art["summary"]["median_ms"]["mean"]
+        if m is not None:
+            med.setdefault(ntag, {})[backend] = m
+    for ntag, t in sorted(by_n.items()):
+        if {"des", "batch"} <= set(t) and t["des"]:
+            mr = (med.get(ntag, {}).get("batch", 0)
+                  / max(med.get(ntag, {}).get("des", 1) or 1, 1e-9))
+            out.append(csv_row(
+                f"wan/{ntag}/xcheck", 0, 1,
+                f"batch/des tput={t['batch'] / t['des']:.2f}x "
+                f"median={mr:.2f}x (expect ~1.0x both)"))
+    return out
+
+
+def _scale(arts, quick):
+    """Batch-backend headroom sweeps: throughput vs the Eq. 1 leader bound
+    (1 / (2R+2) c) — the bound the paper's 25-node testbed could not probe."""
+    out = []
+    for name, art in sorted(arts.items()):
+        row = _mean_std_row(name, art)
+        if row is None:
+            continue
+        out.append(row)
+        spec = art.get("spec") or {}
+        r = (spec.get("pig") or {}).get("n_groups")
+        if r and _tput(art):
+            from repro.core.messages import CostModel
+            bound = 1.0 / (analytical.leader_messages(r) * CostModel.base)
+            out.append(csv_row(
+                f"{name}/vs_bound", 0, 1,
+                f"tput={_tput(art):.0f} = "
+                f"{_tput(art) / bound:.2f}x of Eq.1 leader bound "
+                f"({bound:.0f} req/s at R={r})"))
+    return out
+
+
 def _conflict(arts, quick):
     out = [r for name, art in sorted(arts.items())
            if (r := _mean_std_row(name, art)) is not None]
@@ -397,6 +444,7 @@ SUMMARIZERS = {
     "fig12": _fig12, "fig13": _fig13, "fig14": _fig14, "fig15": _fig15,
     "fig16": _fig16, "fig17": _fig17,
     "zipf": _zipf, "openloop": _openloop, "conflict": _conflict,
+    "wan": _wan, "scale": _scale,
 }
 
 

@@ -28,6 +28,7 @@ fig9's inline loop used to duplicate).
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 import multiprocessing
 import time
@@ -101,6 +102,42 @@ def _run_unit(payload) -> dict:
     return unit
 
 
+def _run_batch_scenario(sc: Scenario, rs) -> List[dict]:
+    """One batch-backend scenario: the whole clients x seeds grid in ONE
+    jitted vectorsim call.  Returns unit dicts in ``rs.units()`` order with
+    the same schema as the DES path (wall_s is the amortized grid wall)."""
+    from repro.core import vectorsim
+
+    t0 = time.time()
+    raw = vectorsim.simulate_scenario(
+        sc.protocol, sc.n, pig=sc.pig, topo=build_topology(sc.topo),
+        workload=sc.workload, clients=rs.clients, seeds=rs.seeds,
+        duration=rs.duration, warmup=rs.warmup,
+        leader_timeout=sc.leader_timeout)
+    wall = time.time() - t0
+    units = []
+    for u in raw:
+        unit = {
+            "scenario": sc.name, "clients": u["clients"], "seed": u["seed"],
+            "duration_s": rs.duration, "warmup_s": rs.warmup,
+            "throughput": _f(u["throughput"]), "mean_ms": _f(u["mean_ms"]),
+            "median_ms": _f(u["median_ms"]), "p25_ms": _f(u["p25_ms"]),
+            "p75_ms": _f(u["p75_ms"]), "p99_ms": _f(u["p99_ms"]),
+            "count": u["count"], "committed": u["committed"],
+            "wall_s": round(wall / max(len(raw), 1), 4),
+            "backend": "batch",
+            "retry_risk": u["retry_risk"],
+            "exhausted": u["exhausted"],
+        }
+        if "per_node_msgs" in sc.collect:
+            unit["extras"] = {
+                "leader_msgs_per_op": _f(u["leader_msgs_per_op"]),
+                "follower_msgs_per_op": _f(u["follower_msgs_per_op"]),
+            }
+        units.append(unit)
+    return units
+
+
 def _unit_cost_estimate(payload) -> float:
     sc, clients, _seed, duration, warmup = payload
     # epaxos dependency graphs make its events much heavier than (pig)paxos
@@ -120,7 +157,8 @@ def _agg(values: Sequence[float]) -> dict:
 
 def _scenario_artifact(sc: Scenario, units: List[dict], quick: bool) -> dict:
     art = {"name": sc.name, "family": sc.family, "grid_mode": sc.grid_mode,
-           "quick": quick, "spec": sc.spec_dict(), "units": units}
+           "quick": quick, "backend": sc.backend, "spec": sc.spec_dict(),
+           "units": units}
     # per-seed replicates: apply the grid policy within each seed
     by_seed: Dict[int, List[dict]] = {}
     for u in units:
@@ -153,25 +191,45 @@ def _scenario_artifact(sc: Scenario, units: List[dict], quick: bool) -> dict:
 
 def run_scenarios(scenarios: Sequence[Scenario], quick: bool = True,
                   processes: int = 0,
-                  ignore_quick_skip: bool = False) -> dict:
+                  ignore_quick_skip: bool = False,
+                  backend_override: Optional[str] = None) -> dict:
     """Run a suite of scenarios; return the suite artifact.
 
     ``processes``: 0/1 -> inline (deterministic ordering, easy debugging);
     N > 1 -> a pool of N workers over all units of all scenarios at once,
-    so a wide scenario cannot serialize the tail of the suite.
+    so a wide scenario cannot serialize the tail of the suite.  Scenarios
+    with ``backend="batch"`` never enter the pool: each one's entire
+    clients x seeds grid is ONE jitted call on the vectorized backend.
 
     ``ignore_quick_skip``: run ``quick_skip`` scenarios anyway — set when
     the caller selected scenarios explicitly (``--filter``), so an explicit
     selection can never degrade to a silent green no-op.
+
+    ``backend_override="batch"`` switches every ``batch_ok`` scenario to
+    the batch backend (DES <-> batch cross-checks on identical grids);
+    ``"des"`` forces everything onto the DES.
     """
     active = [sc for sc in scenarios
               if ignore_quick_skip or not (quick and sc.quick_skip)]
+    if backend_override == "batch":
+        active = [dataclasses.replace(sc, backend="batch", collect=tuple(
+            c for c in sc.collect if c == "per_node_msgs"))
+            if sc.batch_ok else sc for sc in active]
+    elif backend_override == "des":
+        active = [dataclasses.replace(sc, backend="des") if
+                  sc.backend == "batch" else sc for sc in active]
+    elif backend_override is not None:
+        raise ValueError(f"unknown backend override {backend_override!r}")
+    t0 = time.time()     # suite wall includes the batch-backend calls below
     payloads = []
+    batch_units: Dict[str, List[dict]] = {}
     for sc in active:
         rs = sc.resolve(quick)
+        if sc.backend == "batch":
+            batch_units[sc.name] = _run_batch_scenario(sc, rs)
+            continue
         for (k, s) in rs.units():
             payloads.append((sc, k, s, rs.duration, rs.warmup))
-    t0 = time.time()
     if processes and processes > 1 and len(payloads) > 1:
         # longest-processing-time-first: schedule the expensive units early
         # so the pool tail is short (simulated work ~ duration x n x load);
@@ -187,7 +245,7 @@ def run_scenarios(scenarios: Sequence[Scenario], quick: bool = True,
             results[i] = r
     else:
         results = [_run_unit(p) for p in payloads]
-    by_name: Dict[str, List[dict]] = {}
+    by_name: Dict[str, List[dict]] = dict(batch_units)
     for u in results:
         by_name.setdefault(u["scenario"], []).append(u)
     return {"schema": ARTIFACT_SCHEMA, "quick": quick,
@@ -198,8 +256,10 @@ def run_scenarios(scenarios: Sequence[Scenario], quick: bool = True,
 
 
 def run_families(families: Sequence[str], quick: bool = True,
-                 processes: int = 0, filter_expr: Optional[str] = None) -> dict:
+                 processes: int = 0, filter_expr: Optional[str] = None,
+                 backend_override: Optional[str] = None) -> dict:
     from . import registry
     return run_scenarios(registry.select(filter_expr, families_subset=families),
                          quick=quick, processes=processes,
-                         ignore_quick_skip=bool(filter_expr))
+                         ignore_quick_skip=bool(filter_expr),
+                         backend_override=backend_override)

@@ -5,6 +5,8 @@ topology, workload shape, failure schedule, offered-load grid, and seeds.
 The runner (``runner.py``) turns one scenario into ``len(clients) x
 len(seeds)`` independent DES runs — the unit of process-level parallelism —
 and folds them into one JSON-stable artifact with per-seed replicates.
+Scenarios with ``backend="batch"`` instead run their entire grid as ONE
+jitted call on the vectorized backend (``repro.core.vectorsim``).
 
 Scenarios are registered in ``registry.py`` (the paper reproductions live in
 ``catalog.py``); adding a new experiment regime is a ~10-line registry entry,
@@ -45,6 +47,13 @@ class Scenario:
     duration: float = 0.6
     warmup: float = 0.3
     engine: str = "exact"                    # "exact" | "fast" | "ref"
+    # "des"   — one Cluster run per (clients, seed) unit (pool-parallel)
+    # "batch" — the whole clients x seeds grid is ONE jitted vectorsim call
+    backend: str = "des"
+    # marks scenarios whose model assumptions the batch backend satisfies
+    # (closed loop, no failures, no timeline/flight collection) — the runner
+    # can switch these to "batch" wholesale via backend_override
+    batch_ok: bool = False
     leader_timeout: float = 50e-3
     collect: Tuple[str, ...] = ()            # extras: "per_node_msgs" | "flight" | "timeline"
     # quick-mode overrides (None -> use the full-mode value / skip nothing)
@@ -53,6 +62,16 @@ class Scenario:
     quick_warmup: Optional[float] = None
     quick_seeds: Optional[Tuple[int, ...]] = None
     quick_skip: bool = False                 # drop entirely in quick mode
+
+    def __post_init__(self):
+        if self.backend not in ("des", "batch"):
+            raise ValueError(f"unknown backend {self.backend!r}")
+        if self.backend == "batch":
+            bad = [c for c in self.collect if c != "per_node_msgs"]
+            if bad or self.failures:
+                raise ValueError(
+                    "batch backend supports neither failure schedules nor "
+                    f"{bad or 'timeline/flight'} collection — use the DES")
 
     @property
     def family(self) -> str:

@@ -97,3 +97,22 @@ def test_saturation_ordering_matches_paper():
     paxos = saturation_point(25, 24, protocol="paxos")
     pig = saturation_point(25, 3, protocol="pigpaxos")
     assert pig > 3 * paxos    # ">3 folds improved throughput" (abstract)
+
+
+# -------------------------------------------------- EPaxos fast-quorum dedupe
+def test_epaxos_messages_pins_both_jaxsim_call_sites():
+    """analytical.epaxos_messages is THE fast-quorum message-load formula;
+    both jaxsim call sites (latency_curve, saturation_point) must agree
+    with it exactly."""
+    import jax.numpy as jnp
+    for n in (5, 9, 25, 49):
+        m = analytical.epaxos_messages(n)
+        # saturation_point(n, ..) == 1 / (m * cpu_per_msg)
+        cpu = 10e-6
+        assert saturation_point(n, 1, cpu_per_msg=cpu, protocol="epaxos") \
+            == pytest.approx(1.0 / (m * cpu))
+        # latency_curve's per-node utilization == offered * m * cpu
+        out = latency_curve(jnp.asarray([100.0]), n=n, r=1,
+                            cpu_per_msg=cpu, protocol="epaxos")
+        assert float(np.asarray(out["rho_follower"])[0]) \
+            == pytest.approx(100.0 * m * cpu, rel=1e-5)

@@ -1,0 +1,207 @@
+"""Batch-backend tests: DES<->batch tolerance on overlapping grid points,
+message loads vs Eq. 1-3, bit-determinism under a fixed PRNGKey, and the
+single-compilation guarantee across a grid (no per-cell retrace)."""
+import numpy as np
+import pytest
+
+pytest.importorskip("jax")
+
+from repro.core import Cluster, PigConfig, analytical, wan_topology
+from repro.core import vectorsim as vs
+from repro.core.pig import PigComm
+from repro.experiments import runner
+from repro.experiments.scenario import Scenario
+
+DUR, WARM = 0.4, 0.2
+SEEDS = (1, 2)
+
+
+def _des_mean(protocol, n, pig, clients, topo=None, engine="fast"):
+    t, m = [], []
+    for s in SEEDS:
+        c = Cluster(protocol, n, pig=pig, seed=s, engine=engine, topo=topo)
+        st = c.measure(duration=DUR, warmup=WARM, clients=clients)
+        t.append(st.throughput)
+        m.append(st.median_ms)
+    return float(np.mean(t)), float(np.mean(m))
+
+
+def _batch_mean(units, clients):
+    us = [u for u in units if u["clients"] == clients]
+    return (float(np.mean([u["throughput"] for u in us])),
+            float(np.mean([u["median_ms"] for u in us])))
+
+
+# ------------------------------------------------------- DES <-> batch
+def test_pigpaxos_matches_fast_engine_within_tolerance():
+    pig = PigConfig(n_groups=3, prc=1)
+    units = vs.simulate_scenario("pigpaxos", 25, pig=pig, clients=(20, 60),
+                                 seeds=SEEDS, duration=DUR, warmup=WARM)
+    for k in (20, 60):
+        dt, dm = _des_mean("pigpaxos", 25, pig, k)
+        bt, bm = _batch_mean(units, k)
+        assert bt == pytest.approx(dt, rel=0.10), (k, dt, bt)
+        assert bm == pytest.approx(dm, rel=0.10), (k, dm, bm)
+
+
+def test_paxos_matches_fast_engine_within_tolerance():
+    units = vs.simulate_scenario("paxos", 25, clients=(40,), seeds=SEEDS,
+                                 duration=DUR, warmup=WARM)
+    dt, dm = _des_mean("paxos", 25, None, 40)
+    bt, bm = _batch_mean(units, 40)
+    assert bt == pytest.approx(dt, rel=0.10)
+    assert bm == pytest.approx(dm, rel=0.10)
+
+
+def test_epaxos_matches_fast_engine():
+    # the symmetric random-leader kernel is a coarser fit (conflict-free
+    # fast path only): hold it to 12% throughput / 15% median
+    units = vs.simulate_scenario("epaxos", 25, clients=(40,), seeds=SEEDS,
+                                 duration=DUR, warmup=WARM)
+    dt, dm = _des_mean("epaxos", 25, None, 40)
+    bt, bm = _batch_mean(units, 40)
+    assert bt == pytest.approx(dt, rel=0.12)
+    assert bm == pytest.approx(dm, rel=0.15)
+
+
+def test_wan_region_matrix_latency():
+    """Three-region WAN: commit needs a remote region, so the latency floor
+    is ~2x the 31ms one-way — and the batch backend matches the DES."""
+    topo = {"npr": [5, 5, 5],
+            "ms": [[0.15, 31, 35], [31, 0.15, 11], [35, 11, 0.15]]}
+    groups = [[1, 2, 3, 4], [5, 6, 7, 8, 9], [10, 11, 12, 13, 14]]
+    pig = PigConfig(n_groups=3, groups=groups, prc=1)
+    units = vs.simulate_scenario(
+        "pigpaxos", 15, pig=pig,
+        topo=wan_topology(topo["npr"], topo["ms"]),
+        clients=(20,), seeds=SEEDS, duration=DUR, warmup=WARM,
+        leader_timeout=400e-3)
+    bt, bm = _batch_mean(units, 20)
+    assert 60.0 < bm < 70.0
+    assert bt > 0
+
+
+# ------------------------------------------------------------ Eq. 1-3
+def test_message_loads_match_analytical():
+    for r in (1, 3, 5):
+        units = vs.simulate_scenario(
+            "pigpaxos", 25, pig=PigConfig(n_groups=r), clients=(20,),
+            seeds=(7,), duration=0.3, warmup=0.15)
+        u = units[0]
+        assert u["leader_msgs_per_op"] == pytest.approx(
+            analytical.leader_messages(r), abs=0.25)
+        assert u["follower_msgs_per_op"] == pytest.approx(
+            analytical.follower_messages(25, r), abs=0.25)
+    u = vs.simulate_scenario("paxos", 25, clients=(20,), seeds=(7,),
+                             duration=0.3, warmup=0.15)[0]
+    assert u["leader_msgs_per_op"] == pytest.approx(2 * 24 + 2, abs=0.25)
+    assert u["follower_msgs_per_op"] == pytest.approx(2.0, abs=0.25)
+
+
+def test_required_per_group_shared_with_pigcomm():
+    """The batch backend and the DES comm layer consume the SAME §4.1
+    threshold implementation (pig.required_per_group) — and PigComm's
+    delegating method agrees with it."""
+    from repro.core.pig import partition_followers, required_per_group
+    assert vs.required_per_group is required_per_group
+    assert vs.partition_followers is partition_followers
+    for n, r, prc, sgm in ((25, 3, 1, False), (25, 8, 3, False),
+                           (25, 1, 0, True), (9, 2, 1, False)):
+        cfg = PigConfig(n_groups=r, prc=prc, single_group_majority=sgm)
+        pc = PigComm.__new__(PigComm)
+        pc.cfg = cfg
+        pc.all_nodes = list(range(n))
+        groups = partition_followers([i for i in range(1, n)], r)
+        assert PigComm._partition([i for i in range(1, n)], r) == groups
+        assert (required_per_group(groups, n, prc, sgm)
+                == pc._required_per_group(groups))
+
+
+# ------------------------------------------------------- determinism
+def test_bit_determinism_under_fixed_key():
+    kw = dict(pig=PigConfig(n_groups=3, prc=1), clients=(10, 20),
+              seeds=(0, 1), duration=0.15, warmup=0.05)
+    a = vs.simulate_scenario("pigpaxos", 25, **kw)
+    b = vs.simulate_scenario("pigpaxos", 25, **kw)
+    assert a == b  # bit-identical, not approx
+
+
+def test_seeds_differ():
+    units = vs.simulate_scenario("pigpaxos", 25,
+                                 pig=PigConfig(n_groups=3, prc=1),
+                                 clients=(20,), seeds=(0, 1),
+                                 duration=0.15, warmup=0.05)
+    assert units[0]["throughput"] != units[1]["throughput"]
+
+
+# ------------------------------------------------ compilation contract
+def test_single_compilation_across_grid():
+    """A whole multi-config grid is ONE trace, and re-running the same
+    shapes hits the jit cache (no per-cell retrace)."""
+    cfgs = [vs.build_config("pigpaxos", 9, pig=PigConfig(n_groups=2)),
+            vs.build_config("pigpaxos", 9, pig=PigConfig(n_groups=4))]
+    grid = [(ci, k, s) for ci in range(2) for k in (4, 8) for s in (0, 1, 2)]
+    before = vs.trace_counts()
+    out = vs.simulate_grid(cfgs, grid, 0.1, 0.05)
+    after = vs.trace_counts()
+    new = {k: v - before.get(k, 0) for k, v in after.items()
+           if v != before.get(k, 0)}
+    assert sum(new.values()) == 1, new          # one compile for 12 cells
+    assert not out["exhausted"].any()
+    out2 = vs.simulate_grid(cfgs, grid, 0.1, 0.05)
+    assert vs.trace_counts() == after           # cache hit on re-run
+    assert np.array_equal(out["throughput"], out2["throughput"])
+
+
+def test_exhausted_grid_retries_with_larger_budget():
+    cfg = vs.build_config("pigpaxos", 9, pig=PigConfig(n_groups=2))
+    out = vs.simulate_grid([cfg], [(0, 8, 0)], 0.2, 0.05, steps=32)
+    assert not out["exhausted"].any()
+    assert out["steps"][0] > 32                 # budget was doubled
+
+
+# ------------------------------------------------------ runner / spec
+def test_runner_batch_backend_artifact():
+    sc = Scenario(name="t/batch", protocol="pigpaxos", n=9,
+                  pig=PigConfig(n_groups=2), backend="batch",
+                  clients=(4, 8), seeds=(1, 2), duration=0.15, warmup=0.05)
+    art = runner.run_scenarios([sc], quick=False)
+    sa = art["scenarios"][0]
+    assert sa["backend"] == "batch"
+    assert len(sa["units"]) == 4
+    assert len(sa["replicates"]) == 2
+    for u in sa["units"]:
+        assert u["backend"] == "batch"
+        assert u["throughput"] > 0
+        assert "retry_risk" in u
+    assert sa["summary"]["throughput"]["mean"] > 0
+
+
+def test_backend_override_switches_batch_ok_scenarios():
+    des = Scenario(name="t/ovr", protocol="pigpaxos", n=9,
+                   pig=PigConfig(n_groups=2), batch_ok=True,
+                   clients=(4,), seeds=(1,), duration=0.15, warmup=0.05)
+    art = runner.run_scenarios([des], quick=False, backend_override="batch")
+    assert art["scenarios"][0]["backend"] == "batch"
+    # not batch_ok -> stays on the DES
+    des2 = Scenario(name="t/ovr2", protocol="pigpaxos", n=9,
+                    pig=PigConfig(n_groups=2),
+                    clients=(4,), seeds=(1,), duration=0.15, warmup=0.05)
+    art2 = runner.run_scenarios([des2], quick=False,
+                                backend_override="batch")
+    assert art2["scenarios"][0]["backend"] == "des"
+
+
+def test_batch_backend_rejects_unsupported_specs():
+    with pytest.raises(ValueError):
+        Scenario(name="t/bad1", protocol="pigpaxos", n=9, backend="batch",
+                 failures=(("crash", 3, 0.1),))
+    with pytest.raises(ValueError):
+        Scenario(name="t/bad2", protocol="pigpaxos", n=9, backend="batch",
+                 collect=("timeline",))
+    with pytest.raises(ValueError):
+        Scenario(name="t/bad3", protocol="pigpaxos", n=9, backend="nope")
+    from repro.core import WorkloadConfig
+    with pytest.raises(ValueError):
+        vs.build_config("pigpaxos", 9, pig=PigConfig(n_groups=2),
+                        workload=WorkloadConfig(arrival="poisson"))
