@@ -1,0 +1,19 @@
+"""Fault-injection scenario families (``repro.faults``):
+
+- ``avail`` — leader / relay crash-recover windows at N in {25, 49} with
+  the linearizability auditor on; reports the unavailability window and
+  throughput-dip depth, cross-checked between the exact/fast DES engines
+  and the batch backend's availability-mask runs.
+- ``storm`` — seeded randomized crash-recover storms (Poisson arrivals,
+  concurrency-capped) on pigpaxos/paxos/epaxos at N up to 101 on the fast
+  engine, audit always on.
+
+Scenarios: ``repro.experiments.catalog`` families ``avail`` and ``storm``.
+"""
+from repro.experiments import report
+
+FAMILIES = ["avail", "storm"]
+
+
+def run(quick: bool = True):
+    return report.family_rows(FAMILIES, quick=quick)

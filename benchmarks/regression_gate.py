@@ -1,0 +1,107 @@
+"""Per-scenario regression gate over ``repro-experiments/v1`` artifacts.
+
+Diffs one or more fresh BENCH JSONs (as written by ``benchmarks/run.py
+--json``, or a raw suite artifact) against the committed reference bounds in
+``benchmarks/reference_bounds.json`` and exits non-zero when a scenario's
+``summary.throughput.mean`` falls outside its [lo, hi] window — the CI
+workflow runs it after the scenario smoke, so a throughput regression (or
+an accidental 10x "improvement" from a broken measurement window) fails the
+build instead of drifting silently.
+
+The DES runs in virtual time, so quick-mode throughput is deterministic per
+seed; the bounds carry a ±25% margin only to absorb *intentional*
+model/engine retunes — bump the bounds in the same PR as the retune.
+
+Additionally, any audited scenario whose units report a consistency
+violation fails the gate regardless of throughput.
+
+Usage::
+
+    python -m benchmarks.regression_gate BENCH_scenarios.json [more.json...]
+        [--bounds benchmarks/reference_bounds.json]
+        [--write-bounds PATH]     # regenerate bounds (±25%) from the run
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_BOUNDS = os.path.join(os.path.dirname(__file__),
+                              "reference_bounds.json")
+MARGIN = 0.25
+
+
+def _scenarios(path: str) -> list:
+    with open(path) as f:
+        payload = json.load(f)
+    art = payload.get("experiments", payload)   # BENCH json or raw artifact
+    return art.get("scenarios", [])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("artifacts", nargs="+", metavar="BENCH_JSON")
+    ap.add_argument("--bounds", default=DEFAULT_BOUNDS)
+    ap.add_argument("--write-bounds", default=None, metavar="PATH")
+    args = ap.parse_args()
+
+    seen = {}
+    for path in args.artifacts:
+        for sa in _scenarios(path):
+            seen[sa["name"]] = sa
+
+    if args.write_bounds:
+        with open(args.bounds) as f:
+            ref = json.load(f)
+        for name in ref["bounds"]:
+            sa = seen.get(name)
+            if sa is None:
+                continue
+            mean = sa["summary"]["throughput"]["mean"]
+            ref["bounds"][name] = [round(mean * (1 - MARGIN)),
+                                   round(mean * (1 + MARGIN))]
+        with open(args.write_bounds, "w") as f:
+            json.dump(ref, f, indent=2)
+            f.write("\n")
+        print(f"wrote {args.write_bounds}")
+        return
+
+    with open(args.bounds) as f:
+        bounds = json.load(f)["bounds"]
+
+    failures = []
+    for name, (lo, hi) in sorted(bounds.items()):
+        sa = seen.get(name)
+        if sa is None:
+            failures.append(f"{name}: MISSING from the artifact(s) — the "
+                            f"gate must not silently shrink")
+            continue
+        mean = sa["summary"]["throughput"]["mean"]
+        ok = mean is not None and lo <= mean <= hi
+        status = "ok" if ok else "FAIL"
+        print(f"{status:4s} {name:40s} tput={mean if mean is not None else 'n/a':>10} "
+              f"bounds=[{lo}, {hi}]")
+        if not ok:
+            failures.append(f"{name}: throughput {mean} outside "
+                            f"[{lo}, {hi}]")
+    for name, sa in sorted(seen.items()):
+        bad = [u for u in sa.get("units", [])
+               if u.get("consistency") == "violation"]
+        if bad:
+            failures.append(
+                f"{name}: {len(bad)} unit(s) FAILED the linearizability "
+                f"audit: {bad[0].get('audit', {}).get('violations')}")
+
+    if failures:
+        print("\nREGRESSION GATE FAILED:", file=sys.stderr)
+        for f_ in failures:
+            print(f"  - {f_}", file=sys.stderr)
+        sys.exit(1)
+    print(f"\nregression gate passed: {len(bounds)} scenario bounds, "
+          f"{len(seen)} scenarios audited for consistency verdicts")
+
+
+if __name__ == "__main__":
+    main()

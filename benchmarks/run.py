@@ -38,6 +38,7 @@ MODULES = [
     "fig15_graylist",
     "fig16_group_failure",
     "fig17_heatmap",
+    "fault_scenarios",
     "extra_scenarios",
     "serialization_cost",
     "analytical_sweep",

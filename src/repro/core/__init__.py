@@ -3,7 +3,7 @@ deterministic discrete-event cluster runtime."""
 from .analytical import (follower_messages, leader_messages,
                          total_messages_per_round)  # noqa: F401
 from .cluster import (Client, Cluster, OpenLoopClient, Stats,  # noqa: F401
-                      WorkloadConfig, agreement_ok, zipf_cdf)
+                      TaggedBytes, WorkloadConfig, agreement_ok, zipf_cdf)
 from .epaxos import EPaxosNode  # noqa: F401
 from .events import Scheduler  # noqa: F401
 from .messages import Command, CostModel  # noqa: F401

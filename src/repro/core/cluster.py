@@ -46,6 +46,13 @@ class WorkloadConfig:
     # (weights default to uniform over the choices).
     payload_choices: Optional[tuple] = None
     payload_weights: Optional[tuple] = None
+    # --- fault tolerance -------------------------------------------------
+    # When set, a client that has waited this long for a reply re-sends the
+    # SAME command (same client_id/seq — the leader's at-most-once session
+    # dedup makes the retry safe) and keeps retrying until replied.  None
+    # (the paper's setup) = wait forever; required for availability
+    # scenarios, where requests sent to a crashed node are silently lost.
+    request_timeout: Optional[float] = None
 
     def __post_init__(self):
         # scenarios are declarative data: a typo must fail loudly, not run a
@@ -72,6 +79,18 @@ def zipf_cdf(n_keys: int, theta: float) -> np.ndarray:
     return cdf
 
 
+class TaggedBytes(bytes):
+    """A put payload carrying the writer's identity (client_id, seq) — the
+    write tag the consistency auditor (repro.faults.audit) matches against
+    read returns.  Behaves exactly like ``bytes`` on the wire (same length,
+    same costs); only history-recording runs allocate these."""
+
+    def __new__(cls, data: bytes, tag: tuple):
+        obj = super().__new__(cls, data)
+        obj.tag = tag
+        return obj
+
+
 class Client:
     """Closed-loop client: one outstanding op; next op starts on reply."""
 
@@ -87,6 +106,13 @@ class Client:
         self.sent_at = 0.0
         self.crashed = False
         self.latencies: List[tuple] = []   # (completion_time, latency)
+        # op history for the consistency auditor: dicts of
+        # {cid, seq, op, key, invoke, resp, ok, rtag, wtag} (audit.py)
+        self.history: Optional[List[dict]] = \
+            [] if cluster.record_history else None
+        self._hist_cur: Optional[dict] = None
+        self._last_cmd: Optional[Command] = None
+        self.retries = 0                   # timeout re-sends (fault metric)
         self.payload = bytes(workload.payload_bytes)
         self._key_cdf = (zipf_cdf(workload.n_keys, workload.zipf_theta)
                          if workload.key_dist == "zipfian" else None)
@@ -129,9 +155,11 @@ class Client:
     def _make_command(self, seq: int) -> Command:
         rng = self.cluster.sched.rng
         op = "put" if rng.random() < self.wl.write_fraction else "get"
+        value = self._pick_payload(rng) if op == "put" else None
+        if value is not None and self.history is not None:
+            value = TaggedBytes(value, (self.id, seq))
         return Command(client_id=self.id, seq=seq, op=op,
-                       key=self._pick_key(rng),
-                       value=self._pick_payload(rng) if op == "put" else None)
+                       key=self._pick_key(rng), value=value)
 
     # ------------------------------------------------------------ protocol
     def _issue(self) -> None:
@@ -140,8 +168,19 @@ class Client:
             return
         self.seq += 1
         cmd = self._make_command(self.seq)
+        self._last_cmd = cmd
         self.sent_at = sched.now
+        if self.history is not None:
+            self._hist_cur = cur = {
+                "cid": self.id, "seq": self.seq, "op": cmd.op,
+                "key": cmd.key, "invoke": sched.now, "resp": None,
+                "ok": False, "rtag": None,
+                "wtag": getattr(cmd.value, "tag", None)}
+            self.history.append(cur)
         self.cluster.net.send(self.net_id, self.pick_target(), ClientRequest(cmd=cmd))
+        if self.wl.request_timeout:
+            seq = self.seq
+            sched.after(self.wl.request_timeout, lambda: self._resend(seq))
 
     def deliver(self, msg: ClientReply) -> None:
         if msg.seq != self.seq:
@@ -151,14 +190,43 @@ class Client:
             # not leader / not elected yet: back off and retry the op
             sched.after(5e-3, self._retry)
             return
+        if self.history is not None:
+            cur = self._hist_cur
+            if cur is not None and cur["seq"] == msg.seq \
+                    and cur["resp"] is None:
+                cur["resp"] = sched.now
+                cur["ok"] = True
+                cur["rtag"] = getattr(msg.value, "tag", None)
         self.latencies.append((sched.now, sched.now - self.sent_at))
         self._issue()
 
     def _retry(self) -> None:
+        """Not-leader backoff path: re-send the SAME command.  Never
+        regenerate under an in-flight seq — with crash-recover plans the
+        original may already be proposed (and later committed via post-
+        recovery re-arm), and the replicas' (client_id, seq) session dedup
+        would conflate a regenerated command with it, acking the wrong
+        operation's result."""
         if self.cluster.sched.now >= self.stop_at:
             return
-        self.seq -= 1
-        self._issue()
+        self.cluster.net.send(self.net_id, self.pick_target(),
+                              ClientRequest(cmd=self._last_cmd))
+
+    def _resend(self, seq: int) -> None:
+        """Request-timeout path: re-send the SAME command (the replicas'
+        at-most-once session dedup absorbs duplicates) until replied."""
+        sched = self.cluster.sched
+        if (seq != self.seq or self._last_cmd is None
+                or self._last_cmd.seq != seq
+                or (self._hist_cur is not None
+                    and self._hist_cur["seq"] == seq
+                    and self._hist_cur["resp"] is not None)
+                or sched.now >= self.stop_at):
+            return
+        self.retries += 1
+        self.cluster.net.send(self.net_id, self.pick_target(),
+                              ClientRequest(cmd=self._last_cmd))
+        sched.after(self.wl.request_timeout, lambda: self._resend(seq))
 
 
 class OpenLoopClient(Client):
@@ -170,7 +238,7 @@ class OpenLoopClient(Client):
 
     def __init__(self, *args, **kwargs):
         super().__init__(*args, **kwargs)
-        self.outstanding: Dict[int, tuple] = {}   # seq -> (sent_at, cmd)
+        self.outstanding: Dict[int, tuple] = {}   # seq -> (sent_at, cmd, rec)
         self.shed = 0
 
     def start(self) -> None:
@@ -184,9 +252,20 @@ class OpenLoopClient(Client):
         if len(self.outstanding) < self.wl.max_outstanding:
             self.seq += 1
             cmd = self._make_command(self.seq)
-            self.outstanding[self.seq] = (sched.now, cmd)
+            rec = None
+            if self.history is not None:
+                rec = {"cid": self.id, "seq": self.seq, "op": cmd.op,
+                       "key": cmd.key, "invoke": sched.now, "resp": None,
+                       "ok": False, "rtag": None,
+                       "wtag": getattr(cmd.value, "tag", None)}
+                self.history.append(rec)
+            self.outstanding[self.seq] = (sched.now, cmd, rec)
             self.cluster.net.send(self.net_id, self.pick_target(),
                                   ClientRequest(cmd=cmd))
+            if self.wl.request_timeout:
+                seq = self.seq
+                sched.after(self.wl.request_timeout,
+                            lambda: self._timeout_seq(seq))
         else:
             self.shed += 1
         sched.after(rng.exponential(1.0 / self.wl.rate_hz), self._arrival)
@@ -201,6 +280,11 @@ class OpenLoopClient(Client):
             sched.after(5e-3, lambda: self._retry_seq(seq))
             return
         del self.outstanding[msg.seq]
+        rec = entry[2]
+        if rec is not None:
+            rec["resp"] = sched.now
+            rec["ok"] = True
+            rec["rtag"] = getattr(msg.value, "tag", None)
         self.latencies.append((sched.now, sched.now - entry[0]))
 
     def _retry_seq(self, seq: int) -> None:
@@ -213,6 +297,16 @@ class OpenLoopClient(Client):
         self.cluster.net.send(self.net_id, self.pick_target(),
                               ClientRequest(cmd=entry[1]))
 
+    def _timeout_seq(self, seq: int) -> None:
+        entry = self.outstanding.get(seq)
+        if entry is None or self.cluster.sched.now >= self.stop_at:
+            return
+        self.retries += 1
+        self.cluster.net.send(self.net_id, self.pick_target(),
+                              ClientRequest(cmd=entry[1]))
+        self.cluster.sched.after(self.wl.request_timeout,
+                                 lambda: self._timeout_seq(seq))
+
 
 class Cluster:
     """A protocol deployment + clients on one scheduler."""
@@ -220,7 +314,8 @@ class Cluster:
     def __init__(self, protocol: str, n: int, topo: Optional[Topology] = None,
                  pig: Optional[PigConfig] = None, seed: int = 0,
                  cost: Optional[CostModel] = None, leader_timeout: float = 50e-3,
-                 quorums=None, engine: str = "exact"):
+                 quorums=None, engine: str = "exact",
+                 record_history: bool = False):
         """``engine`` selects the simulation engine:
 
         * ``"exact"`` (default) — fused slab engine, trace-identical to the
@@ -229,10 +324,15 @@ class Cluster:
           stats preserved, traces not bit-identical (big-N sweeps);
         * ``"ref"``   — the seed engine kept verbatim in refengine.py
           (golden-trace baseline and speedup benchmarks).
+
+        ``record_history`` makes every client keep an invoke/response record
+        per operation (with tagged put values) for the consistency auditor
+        (``repro.faults.audit``); off by default — the hot path is untouched.
         """
         self.protocol = protocol
         self.n = n
         self.engine = engine
+        self.record_history = record_history
         self.topo = topo or Topology(n=n)
         if engine == "ref":
             # the verbatim seed stack: seed scheduler/network AND seed

@@ -50,6 +50,15 @@ class EPaxosNode(Node):
         # optimization: depend on the most recent conflict per replica)
         self.interf: Dict[int, Dict[int, tuple]] = {}
         self._pending_exec: list = []
+        # at-most-once execution: (client_id, seq) -> result.  A client
+        # timeout retry can create a second instance of the same command at
+        # a different command leader; both instances interfere (same key),
+        # so every replica executes them in the same relative order and
+        # makes the identical skip decision for the duplicate.  Keyed by the
+        # exact op id (not a per-client high-water mark) because EPaxos only
+        # orders *interfering* commands — a client's ops on different keys
+        # may execute in different relative orders on different replicas.
+        self._done_ops: Dict[tuple, Optional[bytes]] = {}
         self.committed_count = 0
 
     # ---------------------------------------------------------------- leader
@@ -239,10 +248,23 @@ class EPaxosNode(Node):
         inst = self.insts[inst_id]
         if inst.state == "executed":
             return
-        val = self.store.apply(inst.cmd)
-        self.applied_log.append((inst_id, inst.cmd))
+        cmd = inst.cmd
+        op_id = (cmd.client_id, cmd.seq)
+        done = self._done_ops
+        if op_id in done:
+            # duplicate instance of an already-executed op (client timeout
+            # retry): skip the apply, answer from the cached result
+            inst.state = "executed"
+            if inst.is_mine and inst.client_src >= 0:
+                self.send(inst.client_src,
+                          ClientReply(client_id=cmd.client_id, seq=cmd.seq,
+                                      ok=True, value=done[op_id]))
+            return
+        val = self.store.apply(cmd)
+        done[op_id] = val
+        self.applied_log.append((inst_id, cmd))
         inst.state = "executed"
         if inst.is_mine and inst.client_src >= 0:
             self.send(inst.client_src,
-                      ClientReply(client_id=inst.cmd.client_id,
-                                  seq=inst.cmd.seq, ok=True, value=val))
+                      ClientReply(client_id=cmd.client_id,
+                                  seq=cmd.seq, ok=True, value=val))

@@ -105,6 +105,13 @@ class Network:
         self._flight: dict = {}                  # (src<<20|dst) -> count
         self._fixed = self.cost._fixed           # class -> constant cpu cost
         self.partitioned: set[Tuple[int, int]] = set()
+        # per-node link degradation (gray/slow nodes, repro.faults):
+        # node -> (extra_latency_s, latency_factor, drop_prob), applied to
+        # every hop touching the node.  Mutated in place by degrade/restore
+        # so the fused loops' captured reference stays live (same pattern as
+        # ``partitioned``); the empty-dict truthiness check keeps the
+        # fault-free hot path unchanged.
+        self._degraded: dict = {}
         self.accounting = True
         # fast-path jitter presampling: one rng call per hop is ~15% of the
         # flattened loop, so draw Exp(jitter) in blocks and hand out plain
@@ -145,6 +152,39 @@ class Network:
     def heal(self, a: int, b: int) -> None:
         self.partitioned.discard((a, b))
         self.partitioned.discard((b, a))
+
+    def partition_oneway(self, a: int, b: int) -> None:
+        """Asymmetric cut: a's messages to b are lost, b -> a still flows."""
+        self.partitioned.add((a, b))
+
+    def heal_oneway(self, a: int, b: int) -> None:
+        self.partitioned.discard((a, b))
+
+    def degrade(self, node: int, extra_latency: float = 0.0,
+                factor: float = 1.0, drop_prob: float = 0.0) -> None:
+        """Gray/slow node (§4.2 failure model): every hop touching ``node``
+        pays ``latency * factor + extra_latency`` and is dropped with
+        probability ``drop_prob``.  One degradation state per node — a new
+        call replaces the previous one."""
+        self._degraded[node] = (float(extra_latency), float(factor),
+                                float(drop_prob))
+
+    def restore(self, node: int) -> None:
+        self._degraded.pop(node, None)
+
+    def _degraded_latency(self, src: int, dst: int, lat: float, rng) -> float:
+        """Latency for a hop with a degraded endpoint; -1.0 means dropped.
+        The drop draw consumes the sim RNG only on degraded hops."""
+        ds = self._degraded.get(src)
+        dd = self._degraded.get(dst)
+        drop = (ds[2] if ds else 0.0) + (dd[2] if dd else 0.0)
+        if drop > 0.0 and rng.random() < drop:
+            return -1.0
+        if ds is not None:
+            lat = lat * ds[1] + ds[0]
+        if dd is not None:
+            lat = lat * dd[1] + dd[0]
+        return lat
 
     # -------------------------------------------------------------- send
     def send(self, src: int, dst: int, msg: Msg) -> None:
@@ -204,7 +244,13 @@ class Network:
         topo = self.topo
         base = (topo.base_latency if topo.region_of is None
                 else topo.base_between(src, dst))
-        arrive = done + base + self._next_jitter(sched.rng, topo.jitter)
+        lat = base + self._next_jitter(sched.rng, topo.jitter)
+        deg = self._degraded
+        if deg and (src in deg or dst in deg):
+            lat = self._degraded_latency(src, dst, lat, sched.rng)
+            if lat < 0.0:
+                return                     # dropped by a lossy gray node
+        arrive = done + lat
         sched._seq = seq = sched._seq + 1
         heapq.heappush(sched._heap, (arrive, seq, K_DELIVER, dst, msg, c, None))
 
@@ -252,6 +298,7 @@ class Network:
         rng = sched.rng
         rng_exp = rng.exponential
         part = self.partitioned
+        deg = self._degraded
         acct = self.accounting
         n = 0
         while heap:
@@ -304,8 +351,16 @@ class Network:
                         lat = base + rng_exp(jitter)
                     else:
                         lat = topo.latency(rng, src, dst)
-                    sched._seq = seq = sched._seq + 1
-                    push(heap, (t + lat, seq, K_ARRIVE, src, dst, ev[5], ev[6]))
+                    if deg and (src in deg or dst in deg):
+                        lat = self._degraded_latency(src, dst, lat, rng)
+                        if lat >= 0.0:     # not dropped by a gray node
+                            sched._seq = seq = sched._seq + 1
+                            push(heap, (t + lat, seq, K_ARRIVE, src, dst,
+                                        ev[5], ev[6]))
+                    else:
+                        sched._seq = seq = sched._seq + 1
+                        push(heap, (t + lat, seq, K_ARRIVE, src, dst,
+                                    ev[5], ev[6]))
             else:  # K_CALL timer via the generation slab
                 slot = ev[3]
                 gen = ev[4]

@@ -90,6 +90,14 @@ class PaxosNode(Node):
         self._p1_accepted: Dict[int, tuple] = {}
         self._p1_timer: Optional[int] = None
         self._p1_max_ci: tuple = (-1, -1)
+        # at-most-once session state: client_id -> (last applied seq, result).
+        # Client request-timeout retries re-send the same (client_id, seq),
+        # which can legitimately get proposed in two slots (e.g. the original
+        # commits via post-crash value recovery after the retry was already
+        # proposed); the duplicate is skipped at apply time — identically on
+        # every replica, since the decision depends only on the shared log
+        # prefix — and answered from the cached result.
+        self._session: Dict[int, tuple] = {}
         # metrics
         self.committed_count = 0
 
@@ -136,6 +144,7 @@ class PaxosNode(Node):
         if max_ci > self.commit_index and ci_src >= 0:
             self._learn_commit(max_ci, ci_src)
         # re-propose uncommitted values found during phase-1 (§2.1)
+        pre_existing = sorted(self.log)   # local proposals surviving a crash
         slots = sorted(self._p1_accepted)
         for s in slots:
             _, cmd = self._p1_accepted[s]
@@ -145,6 +154,23 @@ class PaxosNode(Node):
             self._propose_at(s, cmd, client_src=-1)
         self.next_slot = max(self.next_slot, self.commit_index + 1,
                              max_ci + 1)
+        # re-arm uncommitted local proposals that survived a crash-recover:
+        # their slot timers died with the crash (set_timer suppresses fires
+        # on crashed nodes) and the phase-1 recovery above deliberately
+        # skips slots still present in self.log — without this, an in-flight
+        # slot at crash time would stall the contiguous-apply prefix forever.
+        # Only PRE-EXISTING entries re-arm (slots the recovery loop just
+        # proposed already broadcast); first-time elections have an empty
+        # log, so this is a no-op there.
+        for s in pre_existing:
+            entry = self.log[s]
+            if entry.committed or s <= self.commit_index:
+                continue
+            if entry.timer is not None:    # pre-crash timer may still pend
+                self.cancel_timer(entry.timer)
+            entry.voters = {self.id}       # stale-ballot votes don't count
+            self.accepted[s] = (self.ballot, entry.cmd)
+            self._send_p2a(s)
 
     def _step_down(self, higher: tuple) -> None:
         self.is_leader = False
@@ -215,19 +241,69 @@ class PaxosNode(Node):
         self.committed_count += 1
         self._advance()
 
+    def _apply_slot(self, s: int, cmd: Command) -> tuple:
+        """Apply one contiguously-committed slot with at-most-once session
+        dedup.  THE single apply path — every caller (_advance,
+        _learn_commit, on_CatchUpResp) must go through it, because the
+        auditor's replica-agreement check relies on all replicas making
+        byte-identical apply/skip decisions over the shared log prefix.
+
+        Returns ``(ack, val)``: ``ack`` is True when a waiting client
+        should be answered with ``val`` — either a fresh apply or an exact
+        duplicate (timeout retry) answered from the session cache; a stale
+        duplicate (seq below the session high-water mark) gets neither an
+        apply nor a reply."""
+        sess = self._session.get(cmd.client_id)
+        if sess is not None and cmd.seq <= sess[0]:
+            if cmd.seq == sess[0]:
+                return True, sess[1]       # duplicate: cached result
+            return False, None             # stale duplicate: drop
+        store = self.store                 # inline KVStore.apply (hot path)
+        store.applied_ops += 1
+        if cmd.op == "put":
+            store.data[cmd.key] = cmd.value
+            val = None
+        else:
+            val = store.data.get(cmd.key)
+        self._session[cmd.client_id] = (cmd.seq, val)
+        self.applied_log.append((s, cmd))
+        return True, val
+
     def _advance(self) -> None:
         """Apply contiguously committed slots; reply to waiting clients."""
         while (self.commit_index + 1) in self.committed:
             s = self.commit_index + 1
             cmd = self.committed[s]
-            val = self.store.apply(cmd)
-            self.applied_log.append((s, cmd))
             self.commit_index = s
+            ack, val = self._apply_slot(s, cmd)
             e = self.log.get(s)
-            if e is not None and e.client_src >= 0:
+            if ack and e is not None and e.client_src >= 0:
                 self.send(e.client_src,
                           ClientReply(client_id=cmd.client_id, seq=cmd.seq,
                                       ok=True, value=val))
+
+    # ============================================================== recovery
+    def recover(self) -> None:
+        """Node recovery with protocol semantics (the base class only clears
+        the crashed flag).  A recovered follower needs nothing — it catches
+        up through the commit_index piggybacked on later traffic.  A
+        recovered *leader* (the owner of the current ballot) must re-run
+        phase 1 with a fresh ballot: all its timers died while it was down
+        (``set_timer`` suppresses fires on crashed nodes), so without a
+        re-election every slot that was in flight at crash time — and hence
+        the contiguous-apply prefix — would stall forever.  ``_become_leader``
+        then re-proposes both phase-1-recovered values and the surviving
+        local log entries (client reply routing intact)."""
+        if not self.crashed:
+            return
+        super().recover()
+        # a CatchUpReq outstanding at crash time is lost (its response was
+        # dropped and the discard timer was suppressed while down): forget
+        # it so _learn_commit re-requests instead of wedging at that slot
+        self._catching_up.clear()
+        if self.ballot[1] == self.id:
+            self.is_leader = False
+            self.start_phase1()
 
     def flush_commits(self) -> None:
         """Idle-time commit propagation (harness use; P3 is normally
@@ -275,7 +351,6 @@ class PaxosNode(Node):
         comm = self.comm
         if comm._pending_sup:       # no-op unless supplements are pending
             comm.note_committed_up_to(ci)
-        store = self.store
         while self.commit_index < ci:
             s = self.commit_index + 1
             if s in self.committed:
@@ -291,12 +366,8 @@ class PaxosNode(Node):
                                    lambda s=s: self._catching_up.discard(s))
                 return
             self.committed.setdefault(s, cmd)
-            # inline KVStore.apply (result unused on the learn path)
-            store.applied_ops += 1
-            if cmd.op == "put":
-                store.data[cmd.key] = cmd.value
-            self.applied_log.append((s, cmd))
             self.commit_index = s
+            self._apply_slot(s, cmd)
 
     def on_CatchUpReq(self, msg: CatchUpReq) -> None:
         ent = {s: self.committed[s] for s in msg.slots if s in self.committed}
@@ -307,13 +378,13 @@ class PaxosNode(Node):
         for s, cmd in msg.entries.items():
             self.committed.setdefault(s, cmd)
             self._catching_up.discard(s)
-        # replay contiguous applies
+        # replay contiguous applies (shared apply path: caught-up replicas
+        # make identical apply decisions)
         while (self.commit_index + 1) in self.committed:
             s = self.commit_index + 1
             cmd = self.committed[s]
-            self.store.apply(cmd)
-            self.applied_log.append((s, cmd))
             self.commit_index = s
+            self._apply_slot(s, cmd)
 
     # ====================================================== direct handlers
     def on_P2a(self, msg: P2a) -> None:

@@ -31,11 +31,25 @@ direct-message costs); EPaxos gets its own symmetric kernel (random
 per-request command leader, PreAccept broadcast, fast-quorum commit,
 conflict-free fast path).
 
-Deliberately **not** modeled: failures/partitions, relay timeouts, late-vote
+**Fault masks** (``repro.faults.FaultPlan.to_masks``): deterministic
+crash/recover windows and whole-run gray/slow nodes are expressible as
+time-varying per-node availability masks — a hop arriving at a down node is
+*deferred* to the window's end (the node drains its backlog at recovery),
+relays are sampled among the currently-up group members (matching the DES
+leader's gray-listing behavior after one timeout), and slow nodes add a
+constant one-way latency to every touching hop.  Group kernel only; mask
+runs also emit a completion timeline (50 ms buckets, same format as the DES
+``collect=("timeline",)`` extra) for throughput-dip/unavailability metrics.
+
+Deliberately **not** modeled: partitions, drops, relay timeouts, late-vote
 supplements, open-loop arrivals, key sampling (keys never route in
 (Pig)Paxos; EPaxos + non-uniform keys is rejected because interference does
 matter there), and the EPaxos slow path — scenarios that need those stay on
-the DES (`Scenario.batch_ok` marks the eligible ones).
+the DES (`Scenario.batch_ok` marks the eligible ones).  A crashed follower's
+vote is deferred, not lost, so plans must leave every group's PRC threshold
+reachable without the down members (single crashes with ``prc >= 1``, or
+Paxos's singleton groups) — the DES relay-timeout fallback has no batch
+equivalent.
 
 Outputs match the DES ``Stats`` summary (committed throughput, latency
 percentiles measured at the client over the [warmup, warmup+duration]
@@ -61,6 +75,7 @@ from .quorums import fast_quorum, majority
 _DRAIN_S = 0.2          # post-stop drain window (Cluster.measure)
 _CLIENT_START = 20e-3   # Cluster.add_clients start_at
 _CLIENT_STAGGER = 1e-4  # per-client start stagger
+_TL_BUCKET = 0.05       # timeline bucket (= runner.TIMELINE_BUCKET_S)
 
 _MAX_STEPS = 400_000    # hard cap for the exhausted-retry loop
 
@@ -94,6 +109,10 @@ class SimConfig:
     jitter: float
     costs: Dict[str, float]    # c_req/c_fanout/c_rel/c_repl/c_agg/c_replycl
     label: str = ""
+    # fault masks (None = fault-free): down-windows (n, W, 2) [lo, hi) with
+    # +inf padding, and per-node whole-run extra one-way latency (n,)
+    down: Optional[np.ndarray] = None
+    slow: Optional[np.ndarray] = None
 
     @property
     def rmax(self) -> int:
@@ -130,14 +149,31 @@ def _expected_wires(workload) -> Dict[str, float]:
 
 
 def build_config(protocol: str, n: int, pig=None, topo=None, workload=None,
-                 cost: Optional[CostModel] = None, label: str = "") -> SimConfig:
+                 cost: Optional[CostModel] = None, label: str = "",
+                 masks: Optional[Dict[str, np.ndarray]] = None) -> SimConfig:
     """Lower a (protocol, n, PigConfig, Topology, WorkloadConfig) deployment
-    to the array form the batched kernels consume."""
+    to the array form the batched kernels consume.  ``masks`` is the fault
+    lowering produced by ``repro.faults.FaultPlan.to_masks`` — down-windows
+    and slow vectors (group kernel only)."""
     cm = cost or CostModel()
     base, pb = cm.base, cm.per_byte
     w = _expected_wires(workload)
     if workload is not None and getattr(workload, "arrival", "closed") != "closed":
         raise ValueError("batch backend models closed-loop clients only")
+    down = slow = None
+    if masks is not None:
+        if protocol == "epaxos":
+            raise ValueError("fault masks are group-kernel only; "
+                             "EPaxos fault scenarios need the DES")
+        d = np.asarray(masks["down"], dtype=np.float64)
+        s = np.asarray(masks["slow"], dtype=np.float64)
+        if d.shape[0] != n or s.shape[0] != n:
+            raise ValueError(f"mask shape mismatch: n={n}, "
+                             f"down={d.shape}, slow={s.shape}")
+        if np.isfinite(d[..., 0]).any():
+            down = d
+        if (s > 0).any():
+            slow = s
     if (protocol == "epaxos" and workload is not None
             and getattr(workload, "key_dist", "uniform") != "uniform"):
         # EPaxos performance DOES depend on key interference (deps/slow
@@ -226,7 +262,7 @@ def build_config(protocol: str, n: int, pig=None, topo=None, workload=None,
         kind="group", n=n, members=members, sizes=sizes, thresh=tarr,
         static_relay=static, majority=majority(n), region_of=region_of,
         region_latency=region_latency, jitter=jitter, costs=costs,
-        label=label or f"{protocol}/N={n}/R={rmax}")
+        label=label or f"{protocol}/N={n}/R={rmax}", down=down, slow=slow)
 
 
 # ================================================================ rate bound
@@ -273,7 +309,8 @@ def _pct(sorted_vals, m, q):
     return jnp.where(m > 0, v, jnp.nan)
 
 
-def _summarize(lat, t_fin, commit_t, active, ready, loadF, loadL, cell):
+def _summarize(lat, t_fin, commit_t, active, ready, loadF, loadL, cell,
+               nb: int = 0):
     stop, warmup, duration = cell["stop"], cell["warmup"], cell["duration"]
     in_lat = active & (t_fin >= warmup) & (t_fin <= stop)
     in_commit = active & (commit_t >= warmup) & (commit_t <= stop + _DRAIN_S)
@@ -283,7 +320,7 @@ def _summarize(lat, t_fin, commit_t, active, ready, loadF, loadL, cell):
     nf = jnp.maximum(count.astype(jnp.float32), 1.0)
     followers = cell["n_followers"].astype(jnp.float32)
     comf = jnp.maximum(committed.astype(jnp.float32), 1.0)
-    return {
+    out = {
         "throughput": count.astype(jnp.float32) / duration,
         "count": count,
         "committed": committed,
@@ -297,10 +334,26 @@ def _summarize(lat, t_fin, commit_t, active, ready, loadF, loadL, cell):
         "m_follower": loadF / (followers * comf),
         "exhausted": jnp.min(ready) < stop,
     }
+    if nb:
+        # completion timeline (DES collect=("timeline",) format): counts of
+        # client-visible completions per fixed virtual-time bucket from t=0
+        ok = active & jnp.isfinite(t_fin) & (t_fin <= stop + _DRAIN_S)
+        tb = jnp.where(ok, jnp.floor(t_fin / _TL_BUCKET), 0.0)
+        tb = jnp.clip(tb.astype(jnp.int32), 0, nb - 1)
+        out["timeline"] = jnp.zeros(nb, jnp.int32).at[tb].add(
+            ok.astype(jnp.int32))
+    return out
 
 
-def _group_cell(cell, steps: int, kmax: int, breq: int):
+def _group_cell(cell, steps: int, kmax: int, breq: int,
+                faulty: bool = False, nb: int = 0):
     """Simulate one grid cell of the Paxos/PigPaxos group kernel.
+
+    ``faulty`` (static) enables the fault-mask path: hop arrivals at a
+    down node are deferred past its [lo, hi) window, relays are sampled
+    among the currently-up group members, and slow nodes add their extra
+    one-way latency to every touching hop.  The fault-free trace is
+    untouched when False — the mask arrays are never read.
 
     Two throughput tricks keep the scan XLA-friendly:
 
@@ -360,6 +413,27 @@ def _group_cell(cell, steps: int, kmax: int, breq: int):
         v, _ = lax.associative_scan(comb, (x, seg_first), axis=1)
         return v
 
+    # fault-mask state (read only when ``faulty``; see module docstring)
+    downL = cell["downL"]                     # (W, 2) leader down-windows
+    downF = cell["downF"]                     # (F, W, 2) per-slot windows
+    slowF = cell["slowF"]                     # (F,) extra one-way seconds
+    slowL = cell["slowL"]                     # scalar, node 0
+
+    def defer(t, win):
+        """Defer ``t`` past any [lo, hi) down-window containing it;
+        ``win`` has shape (..., W, 2) broadcastable against t[..., None]."""
+        inw = (t[..., None] >= win[..., 0]) & (t[..., None] < win[..., 1])
+        return jnp.maximum(t, jnp.where(inw, win[..., 1], -jnp.inf).max(-1))
+
+    def seg_cumsum0(x):
+        """Within-group inclusive cumsum over one flat (F,) vector."""
+        def comb(a, b):
+            v1, f1 = a
+            v2, f2 = b
+            return jnp.where(f2, v2, v1 + v2), f1 | f2
+        v, _ = lax.associative_scan(comb, (x, pos == 0), axis=0)
+        return v
+
     ready0 = jnp.where(jnp.arange(kmax) < cell["k_clients"],
                        _CLIENT_START + _CLIENT_STAGGER * jnp.arange(kmax),
                        jnp.inf).astype(f32)
@@ -380,16 +454,15 @@ def _group_cell(cell, steps: int, kmax: int, breq: int):
         e_pr = e[:, 2 + 2 * G + F:]
         u_rel = jax.random.uniform(k2, (B, G))
 
-        j_rel = jnp.where(cell["static_relay"], 0,
-                          jnp.floor(u_rel * szf).astype(jnp.int32))
-        j_rel = jnp.clip(j_rel, 0, jnp.maximum(sizes - 1, 0))
-        rel_idx = jnp.clip(gstart + j_rel, 0, F - 1)      # (B, G) flat slots
-
         # leader ingress: exact FIFO over the burst (Lindley recursion with
         # constant work T_l), seeded by the accumulator.  W_L — the queueing
         # wait each request just experienced — doubles as the stationary
         # estimate of the wait its own aggregates will see one RTT later.
         aL = t0 + b_cl + e_cl[:, 0]
+        if faulty:
+            # a request arriving at a down leader waits out the window
+            # (the DES client's timeout retries land right after recovery)
+            aL = defer(aL + slowL, downL)
         start_b = jnp.maximum(lax.cummax(aL - kk_b * T_l) + kk_b * T_l,
                               cpuL + kk_b * T_l)
         W_L = start_b - aL
@@ -398,6 +471,34 @@ def _group_cell(cell, steps: int, kmax: int, breq: int):
         cpuL2 = L1 + ngf * c_fanout
         cpuL_next = jnp.maximum(
             cpuL, jnp.where(active, start_b + T_l, -jnp.inf).max())
+
+        # rotating-relay choice.  Fault path: sample uniformly among the
+        # group members that are UP at the burst's pacing point (the DES
+        # leader gray-lists a dead relay after one timeout and avoids it, so
+        # steady-state relay duty falls on the live members) — reduces to
+        # the plain floor(u * size) draw when everyone is up.  Static relays
+        # are pinned to slot 0 even when down (the DES retries the same
+        # dead relay forever in that mode; the round defers identically).
+        if faulty:
+            tref = L1[0]
+            down0 = ((tref >= downF[:, :, 0])
+                     & (tref < downF[:, :, 1])).any(-1)   # (F,)
+            af = (valid & ~down0).astype(f32)
+            rank = seg_cumsum0(af) - af                   # rank among up
+            cnt = jnp.zeros(G, f32).at[grp].add(af)       # (G,) up members
+            k_sel = jnp.minimum(jnp.floor(u_rel * cnt[None, :]),
+                                jnp.maximum(cnt - 1.0, 0.0))   # (B, G)
+            k_slot = jnp.take_along_axis(k_sel, grp_b, axis=1)  # (B, F)
+            is_sel = (af > 0)[None, :] & (rank[None, :] == k_slot)
+            j_dyn = jnp.zeros((B, G), f32).at[:, grp].add(
+                jnp.where(is_sel, posf[None, :], 0.0))
+            j_rel = jnp.where(cell["static_relay"], 0,
+                              j_dyn.astype(jnp.int32))
+        else:
+            j_rel = jnp.where(cell["static_relay"], 0,
+                              jnp.floor(u_rel * szf).astype(jnp.int32))
+        j_rel = jnp.clip(j_rel, 0, jnp.maximum(sizes - 1, 0))
+        rel_idx = jnp.clip(gstart + j_rel, 0, F - 1)      # (B, G) flat slots
 
         # online rate estimate (EWMA of the L1 pacing interval) -> follower
         # utilization rho and an M/D/1 stochastic-wait floor
@@ -436,6 +537,9 @@ def _group_cell(cell, steps: int, kmax: int, breq: int):
             b_rp = reg_lat[reg_relay_f, regF[None, :]]    # (B, F) out
             b_pr = reg_lat[regF[None, :], reg_relay_f]    # (B, F) back
         arr_rel = fan_done + b_Lr + e_Lr
+        if faulty:
+            slow_rel = slowF[rel_idx]                     # (B, G)
+            arr_rel = defer(arr_rel + slowL + slow_rel, downF[rel_idx])
         B_r = cpuF[rel_idx] - L1[:, None]
         W_r = jnp.maximum(B_r + (rho - 1.0) * (arr_rel - L1[:, None]),
                           0.0) + md1
@@ -446,10 +550,22 @@ def _group_cell(cell, steps: int, kmax: int, breq: int):
         send_done = jnp.take_along_axis(h, grp_b, axis=1) \
             + (order + 1.0) * c_rel
         arr_p = send_done + b_rp + e_rp
+        if faulty:
+            # relay-out + peer-in slow extras; a down peer serves the
+            # relayed message after it recovers (its vote arrives late and
+            # simply sorts past the flush threshold if others cover it)
+            slow_rel_f = jnp.take_along_axis(slow_rel, grp_b, axis=1)
+            arr_p = defer(arr_p + slow_rel_f + slowF[None, :], downF)
         W_p = jnp.maximum(cpuF[None, :] - L1[:, None]
                           + (rho - 1.0) * (arr_p - L1[:, None]), 0.0) + md1
         doneP = arr_p + W_p + c_rel + c_repl
         arr_back = doneP + b_pr + e_pr
+        if faulty:
+            # the returning reply queues at the relay once IT is back up
+            win_rel_f = jnp.take_along_axis(
+                downF[rel_idx], grp_b[..., None, None], axis=1)  # (B,F,W,2)
+            arr_back = defer(arr_back + slow_rel_f + slowF[None, :],
+                             win_rel_f)
 
         # relay FIFO over its reply fan-in: k-th completion via key-sorted
         # arrivals + segmented cumulative max (done_k = max(arr_k,
@@ -476,9 +592,10 @@ def _group_cell(cell, steps: int, kmax: int, breq: int):
         agg_sent = flush + c_agg
 
         # leader FIFO over aggregates; commit at the quorum-completing one
-        arr_agg = jnp.where(grp_mask[None, :],
-                            agg_sent + b_rL + e_rL,
-                            jnp.inf)
+        agg_in = agg_sent + b_rL + e_rL
+        if faulty:
+            agg_in = defer(agg_in + slow_rel + slowL, downL)
+        arr_agg = jnp.where(grp_mask[None, :], agg_in, jnp.inf)
         acks_b = jnp.broadcast_to(acks, (B, G))
         arr_as, acks_s = lax.sort((arr_agg, acks_b), num_keys=1)
         cum = jnp.cumsum(acks_s, axis=1)
@@ -494,6 +611,8 @@ def _group_cell(cell, steps: int, kmax: int, breq: int):
             jnp.inf)
         reply_done = commit_done + c_replycl
         t_fin = reply_done + reg_lat[leader_reg, 0] + e_cl[:, 1]
+        if faulty:
+            t_fin = t_fin + slowL
 
         # state updates: follower backlogs grow by the burst's per-node WORK
         # from the anchor (the first active request's pacing point — every
@@ -528,11 +647,11 @@ def _group_cell(cell, steps: int, kmax: int, breq: int):
         lax.scan(step_fn, carry0, jnp.arange(steps))
     return _summarize(lat.reshape(-1), t_fin.reshape(-1),
                       commit_t.reshape(-1), active.reshape(-1), ready,
-                      loadF.sum(), loadL, cell)
+                      loadF.sum(), loadL, cell, nb=nb)
 
 
 # ============================================================= epaxos kernel
-def _epaxos_cell(cell, steps: int, kmax: int):
+def _epaxos_cell(cell, steps: int, kmax: int, nb: int = 0):
     """One grid cell of the EPaxos kernel (symmetric, conflict-free fast
     path): random command leader per request, PreAccept broadcast to all
     peers, commit after the fast quorum's replies, ECommit broadcast."""
@@ -613,19 +732,21 @@ def _epaxos_cell(cell, steps: int, kmax: int):
         step_fn, carry0, jnp.arange(steps))
     # symmetric protocol: report node 0 as "leader", the rest as followers
     return _summarize(lat, t_fin, commit_t, active, ready,
-                      load[1:].sum(), load[0], cell)
+                      load[1:].sum(), load[0], cell, nb=nb)
 
 
 # ================================================================== batching
 @functools.partial(jax.jit, static_argnames=("steps", "kmax", "kind",
-                                             "breq"))
-def _run_cells(batch, steps: int, kmax: int, kind: str, breq: int):
-    sig = (kind, steps, kmax, breq) + tuple(
+                                             "breq", "faulty", "nb"))
+def _run_cells(batch, steps: int, kmax: int, kind: str, breq: int,
+               faulty: bool = False, nb: int = 0):
+    sig = (kind, steps, kmax, breq, faulty, nb) + tuple(
         (k,) + tuple(v.shape) for k, v in sorted(batch.items()))
     _TRACE_COUNTS[sig] = _TRACE_COUNTS.get(sig, 0) + 1
     if kind == "group":
-        return jax.vmap(lambda c: _group_cell(c, steps, kmax, breq))(batch)
-    return jax.vmap(lambda c: _epaxos_cell(c, steps, kmax))(batch)
+        return jax.vmap(lambda c: _group_cell(c, steps, kmax, breq,
+                                              faulty, nb))(batch)
+    return jax.vmap(lambda c: _epaxos_cell(c, steps, kmax, nb))(batch)
 
 
 def _stack_cells(configs: Sequence[SimConfig], grid, duration: float,
@@ -642,7 +763,8 @@ def _stack_cells(configs: Sequence[SimConfig], grid, duration: float,
         "leader_reg", "jitter", "costs",
         "majority", "n_groups", "static_relay", "k_clients", "key", "stop",
         "warmup", "duration", "n_followers", "reg_nodes", "fq",
-        "w_follower")}
+        "w_follower", "downL", "downF", "slowF", "slowL")}
+    wmax = max([c.down.shape[1] for c in configs if c.down is not None] + [1])
     if kind == "group":
         rmax = max(c.rmax for c in configs)
         fmax = max(c.n - 1 for c in configs)
@@ -662,6 +784,11 @@ def _stack_cells(configs: Sequence[SimConfig], grid, duration: float,
         pos = np.full(fmax, 1, np.int32)      # non-zero: never a segment start
         gstart = np.zeros(rmax, np.int32)
         regf = np.zeros(fmax, np.int32)
+        # fault masks in flat-slot layout (inf-padded = never down)
+        downf = np.full((fmax, wmax, 2), np.inf, np.float32)
+        slowf = np.zeros(fmax, np.float32)
+        downl = np.full((wmax, 2), np.inf, np.float32)
+        slowl = np.float32(0.0)
         if kind == "group":
             sizes[:c.rmax] = c.sizes
             thresh[:c.rmax] = c.thresh
@@ -671,9 +798,18 @@ def _stack_cells(configs: Sequence[SimConfig], grid, duration: float,
                 grp[off:off + sz] = gi
                 pos[off:off + sz] = np.arange(sz)
                 gstart[gi] = off
-                regf[off:off + sz] = c.region_of[c.members[gi, :sz]]
+                members = c.members[gi, :sz]
+                regf[off:off + sz] = c.region_of[members]
+                if c.down is not None:
+                    downf[off:off + sz, :c.down.shape[1]] = c.down[members]
+                if c.slow is not None:
+                    slowf[off:off + sz] = c.slow[members]
                 off += sz
             gstart[c.rmax:] = off
+            if c.down is not None:
+                downl[:c.down.shape[1]] = c.down[0]
+            if c.slow is not None:
+                slowl = np.float32(c.slow[0])
         rl = np.zeros((nreg, nreg), np.float64)
         nr = c.region_latency.shape[0]
         rl[:nr, :nr] = c.region_latency
@@ -683,6 +819,10 @@ def _stack_cells(configs: Sequence[SimConfig], grid, duration: float,
         cells["pos"].append(pos)
         cells["gstart"].append(gstart)
         cells["regF"].append(regf)
+        cells["downL"].append(downl)
+        cells["downF"].append(downf)
+        cells["slowF"].append(slowf)
+        cells["slowL"].append(slowl)
         cells["reg_lat"].append(rl.astype(np.float32))
         cells["leader_reg"].append(np.int32(c.region_of[0]))
         cells["jitter"].append(np.float32(c.jitter))
@@ -720,15 +860,26 @@ def _stack_cells(configs: Sequence[SimConfig], grid, duration: float,
 
 
 def simulate_grid(configs: Sequence[SimConfig], grid, duration: float,
-                  warmup: float, steps: Optional[int] = None) -> Dict[str, np.ndarray]:
+                  warmup: float, steps: Optional[int] = None,
+                  timeline: bool = False) -> Dict[str, np.ndarray]:
     """Run every (config_idx, clients, seed) grid point in ONE jitted call.
 
     Returns dict of per-cell arrays (throughput, median_s, p99_s, committed,
-    m_leader, m_follower, ...).  If the step budget underestimates a cell's
-    request rate the call retries with a doubled budget (fresh trace) until
-    no cell is exhausted.
+    m_leader, m_follower, ...).  Step budgets are per cell: the first call
+    uses the grid max (so unexhausted grids stay one compiled call), and
+    when the optimistic rate bound underestimates some cells, ONLY the
+    exhausted subset re-runs with a doubled budget — finished cells keep
+    their first-pass results, which are bit-identical to what a full-grid
+    retry would produce (extra scan steps past the stop time are no-ops).
+    ``out["steps"]`` records each cell's final budget.
+
+    ``timeline=True`` (implied by fault-mask configs) adds per-cell
+    completion timelines (``_TL_BUCKET`` buckets).
     """
     batch, kind, kmax = _stack_cells(configs, grid, duration, warmup)
+    faulty = any(c.down is not None or c.slow is not None for c in configs)
+    nb = (int(np.ceil((warmup + duration + _DRAIN_S) / _TL_BUCKET)) + 1
+          if (faulty or timeline) else 0)
     if steps is None:
         # requests are only issued inside [0, stop); the rate bound is
         # optimistic, and the exhausted-retry loop below is the safety net
@@ -737,21 +888,29 @@ def simulate_grid(configs: Sequence[SimConfig], grid, duration: float,
     steps = min(steps, _MAX_STEPS)
     # the group kernel pops `breq` requests per scan step
     breq = min(8, kmax) if kind == "group" else 1
-    while True:
-        out = _run_cells(batch, -(-steps // breq), kmax, kind, breq)
-        out = {k: np.asarray(v) for k, v in out.items()}
-        if not out["exhausted"].any() or steps >= _MAX_STEPS:
-            break
+    out = _run_cells(batch, -(-steps // breq), kmax, kind, breq, faulty, nb)
+    out = {k: np.asarray(v) for k, v in out.items()}
+    steps_arr = np.full(len(grid), steps, np.int32)
+    if out["exhausted"].any():
+        out = {k: np.array(v) for k, v in out.items()}   # writable for merge
+    while out["exhausted"].any() and steps < _MAX_STEPS:
         steps = min(steps * 2, _MAX_STEPS)
-    out["steps"] = np.full(len(grid), steps, np.int32)
+        idx = np.nonzero(out["exhausted"])[0]
+        sub = {k: v[idx] for k, v in batch.items()}
+        sub_out = _run_cells(sub, -(-steps // breq), kmax, kind, breq,
+                             faulty, nb)
+        for k, v in sub_out.items():
+            out[k][idx] = np.asarray(v)
+        steps_arr[idx] = steps
+    out["steps"] = steps_arr
     return out
 
 
 def simulate_scenario(protocol: str, n: int, *, pig=None, topo=None,
                       workload=None, clients: Sequence[int] = (60,),
                       seeds: Sequence[int] = (0,), duration: float = 0.6,
-                      warmup: float = 0.3,
-                      leader_timeout: float = 50e-3) -> List[dict]:
+                      warmup: float = 0.3, leader_timeout: float = 50e-3,
+                      masks: Optional[Dict[str, np.ndarray]] = None) -> List[dict]:
     """One scenario's full clients x seeds grid in one compiled call.
 
     Returns one dict per (clients, seed) in ``runner`` unit order, carrying
@@ -761,14 +920,19 @@ def simulate_scenario(protocol: str, n: int, *, pig=None, topo=None,
     there the real protocol starts re-proposing slots (extra load the
     timeout-free batch model does not simulate), so DES throughput can
     collapse below the batch prediction — treat those cells as the model's
-    validity boundary, not as measurements.
+    validity boundary, not as measurements.  (Fault-mask runs routinely
+    trip it: a deferred commit's latency spans the down-window by design.)
+
+    ``masks`` enables the fault path (``FaultPlan.to_masks``); fault units
+    additionally carry a completion ``timeline`` in the DES extras format.
     """
-    cfg = build_config(protocol, n, pig=pig, topo=topo, workload=workload)
+    cfg = build_config(protocol, n, pig=pig, topo=topo, workload=workload,
+                       masks=masks)
     grid = [(0, int(k), int(s)) for k in clients for s in seeds]
     out = simulate_grid([cfg], grid, duration, warmup)
     units = []
     for i, (_, k, s) in enumerate(grid):
-        units.append({
+        u = {
             "retry_risk": bool(out["p99_s"][i] >= leader_timeout),
             "clients": k, "seed": s,
             "throughput": float(out["throughput"][i]),
@@ -782,5 +946,9 @@ def simulate_scenario(protocol: str, n: int, *, pig=None, topo=None,
             "leader_msgs_per_op": float(out["m_leader"][i]),
             "follower_msgs_per_op": float(out["m_follower"][i]),
             "exhausted": bool(out["exhausted"][i]),
-        })
+        }
+        if "timeline" in out:
+            u["timeline"] = {"bucket_s": _TL_BUCKET,
+                             "counts": out["timeline"][i].tolist()}
+        units.append(u)
     return units

@@ -1,15 +1,17 @@
 """Declarative experiment subsystem (see ISSUE 2 / ROADMAP).
 
 - ``scenario``  — the :class:`Scenario` spec: protocol, N, PigConfig,
-  topology, workload, failure schedule, client grid, seeds — pure data.
+  topology, workload, fault plan (``repro.faults``), audit flag, client
+  grid, seeds — pure data.
 - ``registry``  — name -> scenario, with ``--filter`` glob selection.
 - ``catalog``   — every paper reproduction (table1/2, fig8-17) plus the
-  post-paper ``zipf``/``openloop``/``conflict``/``wan``/``scale`` families
-  as registry entries.
+  post-paper ``zipf``/``openloop``/``conflict``/``wan``/``scale`` and
+  fault-injection ``avail``/``storm`` families as registry entries.
 - ``runner``    — process-parallel execution over (scenario, clients, seed)
   units; one stable JSON artifact schema with per-seed replicates.
   ``backend="batch"`` scenarios run their whole grid as ONE jitted call on
-  ``repro.core.vectorsim`` instead of entering the pool.
+  ``repro.core.vectorsim`` instead of entering the pool; fault plans are
+  compiled per engine and audited units carry consistency verdicts.
 - ``report``    — artifact -> the legacy ``name,us_per_call,derived`` rows
   that ``benchmarks/run.py`` prints (perf-trajectory contract).
 """

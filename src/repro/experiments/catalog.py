@@ -13,6 +13,7 @@ from __future__ import annotations
 import math
 
 from repro.core import PigConfig, WorkloadConfig
+from repro.faults import crash_window, slow_window, storm
 
 from .registry import register
 from .scenario import Scenario
@@ -270,3 +271,83 @@ for r in (1, 2, 3, 5, 8, 12, 24):
         clients=(20, 60, 120), quick_clients=(60,),
         seeds=tuple(range(64)), quick_seeds=tuple(range(8)),
         duration=0.5, quick_duration=0.25, warmup=0.25))
+
+# ======================================================================
+# Fault-injection families (repro.faults): declarative fault plans with
+# the linearizability auditor on, extending the paper's failure section
+# (figs 14-16) to full crash-RECOVER cycles and randomized storms.
+# ======================================================================
+
+# avail: availability under a leader (or relay) crash-recover window.
+# Clients run with a request timeout so ops lost to the down node are
+# re-sent (the replicas' at-most-once session dedup absorbs duplicates);
+# the summarizer reports the unavailability window and throughput-dip
+# depth from the completion timeline.  The N=25 variants also run on the
+# batch backend (the plan is mask-expressible), giving a DES<->batch
+# dip-depth cross-check the wan family's throughput xcheck can't see.
+_AVAIL_WL = WorkloadConfig(request_timeout=25e-3)
+_AVAIL_PLANS = {
+    # node 0 is the (only) leader; recovery re-elects with a fresh ballot
+    "leader": crash_window(0, 0.8, 1.2),
+    # node 1 relays ~1/R of its group's rounds; node 2 is gray throughout
+    # (the fig15 regime, but with recovery and the §4.2 gray list active);
+    # the open-ended slow window (t1=inf) is the horizon-proof spelling of
+    # "throughout" and stays mask-expressible under any duration change
+    "relay": crash_window(1, 0.8, 1.2) + slow_window(2, extra_latency=2e-3),
+}
+for n in (25, 49):
+    for role, plan in _AVAIL_PLANS.items():
+        register(Scenario(
+            name=f"avail/{role}/N={n}", protocol="pigpaxos", n=n,
+            pig=PigConfig(n_groups=3, prc=1, use_gray_list=True),
+            workload=_AVAIL_WL, faults=plan, audit=True,
+            engine="exact" if n == 25 else "fast",
+            grid_mode="curve", clients=(30,), seeds=(3,),
+            duration=2.2, warmup=0.3, quick_duration=1.2,
+            collect=("timeline",), batch_ok=True,
+            quick_skip=(n == 49)))
+for role, plan in _AVAIL_PLANS.items():
+    register(Scenario(
+        name=f"avail/{role}/N=25/batch", protocol="pigpaxos", n=25,
+        pig=PigConfig(n_groups=3, prc=1, use_gray_list=True),
+        workload=_AVAIL_WL, faults=plan, backend="batch", batch_ok=True,
+        grid_mode="curve", clients=(30,), seeds=(3, 4, 5, 6),
+        quick_seeds=(3, 4),
+        duration=2.2, warmup=0.3, quick_duration=1.2,
+        collect=("timeline",)))
+
+# storm: randomized crash-recover storms (seeded Poisson arrivals over the
+# followers, Exp downtimes, concurrency-capped so a quorum can never be
+# down at once), audit always on, at N the paper's testbed could not reach.
+_STORM_WL = WorkloadConfig(request_timeout=25e-3)
+
+
+def _storm_plan(n: int, seed: int, rate: float = 6.0):
+    return storm(targets=tuple(range(1, n)), rate_hz=rate, t0=0.35, t1=1.3,
+                 mean_downtime=0.15, seed=seed, max_concurrent=2)
+
+
+for n in (25, 49, 101):
+    register(Scenario(
+        name=f"storm/pigpaxos/N={n}", protocol="pigpaxos", n=n,
+        pig=PigConfig(n_groups=3 if n == 25 else int(round(math.sqrt(n))),
+                      prc=1, use_gray_list=True),
+        workload=_STORM_WL, faults=_storm_plan(n, seed=11), audit=True,
+        engine="fast", clients=(30,), seeds=(1, 2), quick_seeds=(1,),
+        duration=1.5, warmup=0.3, quick_duration=1.2,
+        collect=("timeline",), quick_skip=(n == 49)))
+register(Scenario(
+    name="storm/paxos/N=25", protocol="paxos", n=25,
+    workload=_STORM_WL, faults=_storm_plan(25, seed=13), audit=True,
+    engine="fast", clients=(30,), seeds=(1, 2), quick_seeds=(1,),
+    duration=1.5, warmup=0.3, quick_duration=1.2, collect=("timeline",)))
+# EPaxos under a gentler storm: a crashed coordinator's in-flight
+# instances have no recovery protocol here, so each crash can wedge a few
+# keys (clients hang, audit-safe) — rate and concurrency stay low
+register(Scenario(
+    name="storm/epaxos/N=25", protocol="epaxos", n=25,
+    workload=_STORM_WL,
+    faults=storm(targets=tuple(range(25)), rate_hz=2.0, t0=0.35, t1=1.3,
+                 mean_downtime=0.1, seed=17, max_concurrent=1),
+    audit=True, engine="fast", clients=(30,), seeds=(1, 2), quick_seeds=(1,),
+    duration=1.5, warmup=0.3, quick_duration=1.2, collect=("timeline",)))

@@ -438,6 +438,113 @@ def _conflict(arts, quick):
     return out
 
 
+# ------------------------------------------------------- fault families
+def _consistency_tag(art: dict) -> str:
+    """Roll the per-unit audit verdicts up to one token for the row."""
+    if art.get("consistency") == "model":
+        return "model"
+    verdicts = {u.get("consistency") for u in art["units"]
+                if "consistency" in u}
+    if not verdicts:
+        return "unchecked"
+    return "ok" if verdicts == {"ok"} else "VIOLATION"
+
+
+def _fault_window(art: dict) -> Optional[tuple]:
+    """(first crash t, its recover t) from the artifact's fault timeline."""
+    evs = art.get("faults") or []
+    down = {}
+    for ev in evs:
+        if ev[0] == "crash":
+            down.setdefault(ev[1], ev[2])
+        elif ev[0] == "recover" and ev[1] in down:
+            return (down[ev[1]], ev[2])
+    return None
+
+
+def _dip_depth(art: dict, rep: dict) -> Optional[float]:
+    """Throughput-dip depth over the fault window, from the completion
+    timeline: 1 - (rate during the window / rate before it)."""
+    win = _fault_window(art)
+    tl = (rep.get("extras") or {}).get("timeline")
+    if win is None or tl is None:
+        return None
+    b = tl["bucket_s"]
+    counts = tl["counts"]
+    warmup = rep["warmup_s"]
+    lo, hi = round(win[0] / b), round(win[1] / b)
+    w0 = round(warmup / b)
+    if not (w0 < lo < hi <= len(counts)):
+        return None
+    pre = sum(counts[w0:lo]) / max(lo - w0, 1)
+    during = sum(counts[lo:hi]) / max(hi - lo, 1)
+    return 1.0 - during / max(pre, 1e-9)
+
+
+def _avail(arts, quick):
+    """Availability family: per-scenario rows (throughput, unavailability
+    window, dip depth, audit verdict) plus the DES<->batch dip cross-check
+    on the names where both backends ran."""
+    out = []
+    dips: Dict[str, Dict[str, float]] = {}
+    for name, art in sorted(arts.items()):
+        rep = _rep(art)
+        if rep is None:
+            continue
+        ex = rep.get("extras") or {}
+        dip = _dip_depth(art, rep)
+        base = name[:-len("/batch")] if name.endswith("/batch") else name
+        if dip is not None:
+            dips.setdefault(base, {})[art.get("backend", "des")] = dip
+        bits = [f"tput={rep['throughput']:.0f}req/s"]
+        if "unavail_ms" in ex:
+            bits.append(f"unavail={ms(ex['unavail_ms']):.0f}ms")
+        if dip is not None:
+            bits.append(f"dip={dip:.2f}")
+        if "client_retries" in ex:
+            bits.append(f"retries={ex['client_retries']}")
+        bits.append(f"consistency={_consistency_tag(art)}")
+        out.append(csv_row(name, _wall(art), rep["count"], " ".join(bits)))
+    for base, d in sorted(dips.items()):
+        if {"des", "batch"} <= set(d):
+            # the <~0.1 dip-parity expectation holds for LEADER-crash plans
+            # (the deferred-arrival model mirrors the outage exactly);
+            # relay-crash dips come from missed fan-outs / catch-up traffic
+            # / consumed PRC slack, which the mask model deliberately skips
+            leader_fault = any(
+                ev[0] == "crash" and ev[1] == 0
+                for name, art in arts.items() if name.startswith(base)
+                for ev in (art.get("faults") or []))
+            note = ("expect <~0.1" if leader_fault else
+                    "model boundary: DES authoritative for relay faults")
+            out.append(csv_row(
+                f"{base}/xcheck", 0, 1,
+                f"dip des={d['des']:.2f} batch={d['batch']:.2f} "
+                f"delta={abs(d['des'] - d['batch']):.3f} ({note})"))
+    return out
+
+
+def _storm(arts, quick):
+    """Storm family: throughput under randomized crash-recover storms with
+    the injected-event count and the audit verdict per scenario."""
+    out = []
+    for name, art in sorted(arts.items()):
+        rep = _rep(art)
+        if rep is None:
+            continue
+        ex = rep.get("extras") or {}
+        n_ev = len(art.get("faults") or [])
+        s = art["summary"]["throughput"]
+        out.append(csv_row(
+            name, _wall(art), rep["count"],
+            f"tput={ms(s['mean']):.0f}req/s std={s['std'] or 0:.0f} "
+            f"fault_events={n_ev} "
+            f"unavail={ms(ex.get('unavail_ms')):.0f}ms "
+            f"retries={ex.get('client_retries', 0)} "
+            f"consistency={_consistency_tag(art)}"))
+    return out
+
+
 SUMMARIZERS = {
     "table1": _table1, "table2": _table2,
     "fig8": _fig8, "fig9": _fig9, "fig10": _fig10, "fig11": _fig11,
@@ -445,6 +552,7 @@ SUMMARIZERS = {
     "fig16": _fig16, "fig17": _fig17,
     "zipf": _zipf, "openloop": _openloop, "conflict": _conflict,
     "wan": _wan, "scale": _scale,
+    "avail": _avail, "storm": _storm,
 }
 
 

@@ -52,21 +52,17 @@ def _f(x) -> Optional[float]:
 
 def _run_unit(payload) -> dict:
     """One independent DES run.  Top-level so it pickles for pool workers."""
+    from repro.faults import apply_plan, audit_cluster
+
     sc, clients, seed, duration, warmup = payload
     t0 = time.time()
     c = Cluster(sc.protocol, sc.n, pig=sc.pig, seed=seed,
                 topo=build_topology(sc.topo),
-                leader_timeout=sc.leader_timeout, engine=sc.engine)
-    for ev in sc.failures:
-        kind = ev[0]
-        if kind == "crash":
-            c.crash_at(ev[1], ev[2])
-        elif kind == "recover":
-            c.recover_at(ev[1], ev[2])
-        elif kind == "partition":
-            c.partition_at(ev[1], ev[2], ev[3])
-        else:
-            raise ValueError(f"unknown failure event {ev!r}")
+                leader_timeout=sc.leader_timeout, engine=sc.engine,
+                record_history=sc.audit)
+    plan = sc.fault_plan()
+    if plan is not None:
+        apply_plan(c, plan, horizon=warmup + duration + 0.5)
     st = c.measure(duration=duration, warmup=warmup, clients=clients,
                    workload=sc.workload)
     unit = {
@@ -97,6 +93,20 @@ def _run_unit(payload) -> dict:
                 if b < len(counts):
                     counts[b] += 1
         extras["timeline"] = {"bucket_s": TIMELINE_BUCKET_S, "counts": counts}
+    if plan is not None:
+        # availability metrics: the longest client-visible completion gap
+        # inside the measurement window, and the timeout re-send count
+        stop = warmup + duration
+        times = sorted(t for cl in c.clients for (t, _l) in cl.latencies
+                       if warmup <= t <= stop)
+        edges = [warmup] + times + [stop]
+        extras["unavail_ms"] = _f(max(
+            (b - a) for a, b in zip(edges, edges[1:])) * 1e3)
+        extras["client_retries"] = sum(cl.retries for cl in c.clients)
+    if sc.audit:
+        res = audit_cluster(c)
+        unit["consistency"] = "ok" if res.ok else "violation"
+        unit["audit"] = res.summary()
     if extras:
         unit["extras"] = extras
     return unit
@@ -105,15 +115,22 @@ def _run_unit(payload) -> dict:
 def _run_batch_scenario(sc: Scenario, rs) -> List[dict]:
     """One batch-backend scenario: the whole clients x seeds grid in ONE
     jitted vectorsim call.  Returns unit dicts in ``rs.units()`` order with
-    the same schema as the DES path (wall_s is the amortized grid wall)."""
+    the same schema as the DES path (wall_s is the amortized grid wall).
+    Mask-expressible fault plans run as time-varying availability masks;
+    their units carry the completion timeline and ``consistency="model"``
+    (the round-level model commits by construction — the linearizability
+    audit is a DES-engine check)."""
     from repro.core import vectorsim
 
     t0 = time.time()
+    plan = sc.fault_plan()
+    masks = (plan.to_masks(sc.n, rs.warmup + rs.duration + 0.5)
+             if plan is not None else None)
     raw = vectorsim.simulate_scenario(
         sc.protocol, sc.n, pig=sc.pig, topo=build_topology(sc.topo),
         workload=sc.workload, clients=rs.clients, seeds=rs.seeds,
         duration=rs.duration, warmup=rs.warmup,
-        leader_timeout=sc.leader_timeout)
+        leader_timeout=sc.leader_timeout, masks=masks)
     wall = time.time() - t0
     units = []
     for u in raw:
@@ -129,11 +146,16 @@ def _run_batch_scenario(sc: Scenario, rs) -> List[dict]:
             "retry_risk": u["retry_risk"],
             "exhausted": u["exhausted"],
         }
+        extras = {}
         if "per_node_msgs" in sc.collect:
-            unit["extras"] = {
-                "leader_msgs_per_op": _f(u["leader_msgs_per_op"]),
-                "follower_msgs_per_op": _f(u["follower_msgs_per_op"]),
-            }
+            extras["leader_msgs_per_op"] = _f(u["leader_msgs_per_op"])
+            extras["follower_msgs_per_op"] = _f(u["follower_msgs_per_op"])
+        if "timeline" in u:
+            extras["timeline"] = u["timeline"]
+        if plan is not None:
+            unit["consistency"] = "model"
+        if extras:
+            unit["extras"] = extras
         units.append(unit)
     return units
 
@@ -156,9 +178,26 @@ def _agg(values: Sequence[float]) -> dict:
 
 
 def _scenario_artifact(sc: Scenario, units: List[dict], quick: bool) -> dict:
+    from repro.faults.plan import jsonify_events
+
     art = {"name": sc.name, "family": sc.family, "grid_mode": sc.grid_mode,
            "quick": quick, "backend": sc.backend, "spec": sc.spec_dict(),
+           # consistency provenance: "audited" = every DES unit ran the
+           # linearizability auditor (per-unit verdicts in units[].
+           # consistency); "model" = batch backend (commits by
+           # construction); "unchecked" = plain perf run
+           "consistency": ("audited" if sc.audit and sc.backend == "des"
+                           else "model" if sc.backend == "batch"
+                           else "unchecked"),
            "units": units}
+    plan = sc.fault_plan()
+    if plan is not None:
+        # the materialized fault timeline (storms expanded) for this run —
+        # over the RESOLVED horizon, so quick-mode artifacts record exactly
+        # the events the run applied, not the full-mode schedule
+        rs = sc.resolve(quick)
+        art["faults"] = jsonify_events(
+            plan.materialize(rs.warmup + rs.duration + 0.5))
     # per-seed replicates: apply the grid policy within each seed
     by_seed: Dict[int, List[dict]] = {}
     for u in units:
@@ -212,8 +251,12 @@ def run_scenarios(scenarios: Sequence[Scenario], quick: bool = True,
     active = [sc for sc in scenarios
               if ignore_quick_skip or not (quick and sc.quick_skip)]
     if backend_override == "batch":
+        # batch keeps per_node_msgs always, and timeline when a fault plan
+        # rides along (fault runs emit the completion timeline natively)
         active = [dataclasses.replace(sc, backend="batch", collect=tuple(
-            c for c in sc.collect if c == "per_node_msgs"))
+            c for c in sc.collect
+            if c == "per_node_msgs"
+            or (c == "timeline" and sc.fault_plan() is not None)))
             if sc.batch_ok else sc for sc in active]
     elif backend_override == "des":
         active = [dataclasses.replace(sc, backend="des") if

@@ -15,15 +15,22 @@ not a new benchmark script.
 from __future__ import annotations
 
 import dataclasses
+import math
 from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
 from repro.core import PigConfig, Topology, WorkloadConfig, wan_topology
+from repro.faults import FaultPlan
+from repro.faults.plan import validate_event
 
-# Failure schedule entries (all times are virtual seconds):
+# Legacy failure schedule entries (all times are virtual seconds):
 #   ("crash", node_id, t)        — node stops responding at t
 #   ("recover", node_id, t)      — node comes back at t
 #   ("partition", a, b, t)       — link a<->b cut at t
+#   ("heal", a, b, t)            — link restored at t
+# Validated at registry time (Scenario.__post_init__) and folded into the
+# scenario's FaultPlan; richer plans (gray/slow nodes, drops, asymmetric
+# partitions, periodic events, storms) go in ``faults=FaultPlan(...)``.
 FailureEvent = Tuple
 
 
@@ -38,6 +45,12 @@ class Scenario:
     workload: Optional[WorkloadConfig] = None
     topo: Optional[dict] = None              # {"kind": "wan", "nodes_per_region": [...], "oneway_ms": [[...]]}
     failures: Tuple[FailureEvent, ...] = ()
+    # declarative fault plan (repro.faults): crash/recover windows, gray
+    # nodes, partitions, storms — merged with ``failures`` by fault_plan()
+    faults: Optional[FaultPlan] = None
+    # run the linearizability auditor on every DES unit (requires history
+    # recording; batch units carry consistency="model" instead)
+    audit: bool = False
     clients: Tuple[int, ...] = (60,)         # offered-load grid (client counts)
     # "max"   — the paper's max-throughput methodology: per seed, sweep the
     #           grid and keep the best sustained rate (one replicate/seed)
@@ -66,16 +79,47 @@ class Scenario:
     def __post_init__(self):
         if self.backend not in ("des", "batch"):
             raise ValueError(f"unknown backend {self.backend!r}")
+        # registry-time validation: a typo'd failure event must fail HERE,
+        # not half-way through a suite run (ROADMAP PR 2 follow-up)
+        for ev in self.failures:
+            validate_event(tuple(ev))
+        plan = self.fault_plan()
+        if plan is not None:
+            plan.validate_targets(self.n, self.horizon)
         if self.backend == "batch":
-            bad = [c for c in self.collect if c != "per_node_msgs"]
-            if bad or self.failures:
+            ok_collect = {"per_node_msgs"}
+            if plan is not None:
+                ok_collect.add("timeline")   # fault runs emit timelines
+            bad = [c for c in self.collect if c not in ok_collect]
+            if bad:
+                raise ValueError(f"batch backend does not support "
+                                 f"{bad} collection — use the DES")
+            if plan is not None and not plan.mask_expressible(self.horizon):
                 raise ValueError(
-                    "batch backend supports neither failure schedules nor "
-                    f"{bad or 'timeline/flight'} collection — use the DES")
+                    "batch backend supports only mask-expressible fault "
+                    "plans (crash/recover windows + whole-run slow nodes) "
+                    "— use the DES for this plan")
+            if plan is not None and self.protocol == "epaxos":
+                raise ValueError("batch EPaxos does not support faults")
 
     @property
     def family(self) -> str:
         return self.name.split("/", 1)[0]
+
+    @property
+    def horizon(self) -> float:
+        """Virtual-time span fault plans are materialized over (the full-mode
+        measure window plus the drain)."""
+        return self.warmup + self.duration + 0.5
+
+    def fault_plan(self) -> Optional[FaultPlan]:
+        """The unified fault plan: ``faults`` merged with the legacy
+        ``failures`` tuples.  None when the scenario is fault-free."""
+        plan = self.faults
+        if self.failures:
+            plan = (plan or FaultPlan()) + FaultPlan(
+                events=tuple(tuple(ev) for ev in self.failures))
+        return plan if plan else None
 
     def resolve(self, quick: bool) -> "ResolvedScenario":
         if quick:
@@ -137,4 +181,6 @@ def _jsonify(x):
         return [_jsonify(v) for v in x]
     if isinstance(x, bytes):
         return len(x)            # payload bytes: record the size only
+    if isinstance(x, float) and math.isinf(x):
+        return None              # open-ended fault windows: strict JSON
     return x

@@ -1,0 +1,21 @@
+"""Fault-injection & consistency-audit subsystem (see ISSUE 4 / ROADMAP).
+
+- ``plan``  — the declarative :class:`FaultPlan` DSL: timed / periodic /
+  randomized ("storm") fault events — crash, recover, symmetric and
+  asymmetric partition, heal, gray/slow nodes with a latency-or-drop
+  severity — compiled to engine-specific forms: scheduler callbacks for the
+  exact/fast DES engines (``apply_plan``) and time-varying per-node
+  availability masks for the batch backend (``FaultPlan.to_masks``).
+- ``audit`` — the consistency auditor: per-key linearizability checking of
+  client operation histories against the replicas' applied logs
+  (``audit_cluster`` / ``check_history``).
+
+The package is deliberately independent of ``repro.experiments`` (scenarios
+import it, not the other way around) and touches ``repro.core`` only through
+the public ``Cluster``/``Network`` surface, so plans stay pure data:
+picklable for pool workers and JSON-serializable for artifacts.
+"""
+from .audit import (AuditResult, applied_ops, audit_cluster,  # noqa: F401
+                    check_history, commit_apply_gap)
+from .plan import (FaultPlan, apply_plan, crash_window, drop_window,  # noqa: F401
+                   partition_window, periodic_crash, slow_window, storm)

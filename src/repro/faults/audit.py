@@ -1,0 +1,158 @@
+"""Consistency auditor: linearizability of the applied logs vs client
+histories.
+
+The cluster is a keyed register store, and linearizability is *composable*
+(local): a multi-object history is linearizable iff every per-object
+subhistory is.  The replicas' applied logs supply a candidate linearization
+directly — the commit/execution order — so instead of a Wing–Gong search the
+check verifies, per key, that this witness order is a *valid* linearization
+of what the clients observed:
+
+1. **replica agreement** — every node's per-key applied projection is a
+   prefix of the longest one (for (Pig)Paxos the whole log is totally
+   ordered; for EPaxos only interfering — same-key — commands are ordered,
+   which is exactly the per-key projection);
+2. **at-most-once** — no ``(client_id, seq)`` appears twice in the witness
+   (client timeout-retries must not double-apply);
+3. **durability** — every operation a client saw complete (``ok`` reply)
+   appears in some replica's log;
+4. **real-time order** — if operation A completed before operation B was
+   invoked (on the same key), A precedes B in the witness;
+5. **read values** — every completed ``get`` returned the value written by
+   the latest ``put`` preceding it in the witness (write identity comes
+   from the per-op value tags the history-recording clients attach).
+
+``check_history`` is a pure function over plain data so tests can feed it
+deliberately corrupted fixtures; ``audit_cluster`` adapts a finished
+``Cluster`` run (requires ``Cluster(record_history=True)``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_INF = float("inf")
+_MAX_VIOLATIONS = 20
+
+
+@dataclass
+class AuditResult:
+    ok: bool
+    ops: int = 0                 # witness operations checked
+    completed: int = 0           # client-completed operations
+    reads_checked: int = 0       # gets with verified return values
+    violations: List[str] = field(default_factory=list)
+
+    def summary(self) -> dict:
+        return {"ok": self.ok, "ops": self.ops, "completed": self.completed,
+                "reads_checked": self.reads_checked,
+                "violations": self.violations[:5]}
+
+
+def client_histories(cluster) -> List[dict]:
+    """Flatten the per-client operation records of a history-recording run."""
+    out: List[dict] = []
+    for cl in cluster.clients:
+        if cl.history is None:
+            raise ValueError("cluster was not run with record_history=True")
+        out.extend(cl.history)
+    return out
+
+
+def applied_ops(node) -> List[Tuple[int, int, str, int]]:
+    """A node's applied log as (client_id, seq, op, key) in apply order."""
+    return [(c.client_id, c.seq, c.op, c.key) for _, c in node.applied_log]
+
+
+def check_history(history: List[dict],
+                  logs: List[List[Tuple[int, int, str, int]]]) -> AuditResult:
+    """Run the five checks above.  ``history`` entries are dicts with keys
+    ``cid, seq, op, key, invoke, resp, ok, rtag, wtag`` (``resp`` None for
+    incomplete ops; ``rtag`` is the tag of the value a get returned, ``wtag``
+    the tag a put wrote — both None-able).  ``logs`` is one (cid, seq, op,
+    key) list per replica, in that replica's apply order."""
+    res = AuditResult(ok=True)
+    hist: Dict[Tuple[int, int], dict] = {}
+    for h in history:
+        hist[(h["cid"], h["seq"])] = h
+    res.completed = sum(1 for h in history if h.get("ok"))
+
+    def violate(msg: str) -> None:
+        res.ok = False
+        if len(res.violations) < _MAX_VIOLATIONS:
+            res.violations.append(msg)
+
+    # per-key projections per replica
+    proj: List[Dict[int, list]] = []
+    for lg in logs:
+        p: Dict[int, list] = {}
+        for (cid, seq, op, key) in lg:
+            p.setdefault(key, []).append((cid, seq, op))
+        proj.append(p)
+
+    seen_global = set()
+    for key in sorted({k for p in proj for k in p}):
+        ps = [p[key] for p in proj if key in p]
+        witness = max(ps, key=len)
+        for i, p in enumerate(ps):
+            if p != witness[:len(p)]:
+                violate(f"replica divergence on key {key}: one replica's "
+                        f"apply order is not a prefix of the longest")
+                break
+        last_put: Optional[Tuple[int, int]] = None
+        max_invoke = -_INF
+        seen_key = set()
+        for (cid, seq, op) in witness:
+            res.ops += 1
+            if (cid, seq) in seen_key:
+                violate(f"duplicate apply of op (client={cid}, seq={seq}) "
+                        f"on key {key} — at-most-once violated")
+            seen_key.add((cid, seq))
+            seen_global.add((cid, seq))
+            h = hist.get((cid, seq))
+            if h is not None and h.get("key") == key:
+                resp = h["resp"] if (h.get("ok") and h["resp"] is not None) \
+                    else _INF
+                if resp < max_invoke:
+                    violate(f"real-time order violated on key {key}: op "
+                            f"(client={cid}, seq={seq}) completed at "
+                            f"{resp:.6f} but follows an op invoked later "
+                            f"in the witness order")
+                if h["invoke"] > max_invoke:
+                    max_invoke = h["invoke"]
+                if op == "get" and h.get("ok"):
+                    res.reads_checked += 1
+                    if h.get("rtag") != last_put:
+                        violate(f"stale/phantom read on key {key}: op "
+                                f"(client={cid}, seq={seq}) returned "
+                                f"{h.get('rtag')} but the witness says "
+                                f"{last_put}")
+            if op == "put":
+                last_put = (cid, seq)
+
+    for h in history:
+        if h.get("ok") and (h["cid"], h["seq"]) not in seen_global:
+            violate(f"acknowledged op (client={h['cid']}, seq={h['seq']}) "
+                    f"on key {h['key']} is missing from every replica's "
+                    f"applied log — lost update")
+    return res
+
+
+def audit_cluster(cluster) -> AuditResult:
+    """Audit one finished DES run (``Cluster(record_history=True)``)."""
+    return check_history(client_histories(cluster),
+                         [applied_ops(nd) for nd in cluster.nodes])
+
+
+def commit_apply_gap(cluster) -> int:
+    """Committed-but-unapplied slots across the cluster after a run has
+    settled (0 on a healthy drained run: every commit reaches the applied
+    prefix).  Only meaningful for the (Pig)Paxos slot-log protocols."""
+    gap = 0
+    for nd in cluster.nodes:
+        committed = getattr(nd, "committed", None)
+        if committed is None:
+            continue
+        ci = nd.commit_index
+        gap += sum(1 for s in committed if s > ci)
+    return gap

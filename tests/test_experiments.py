@@ -17,6 +17,8 @@ def test_catalog_covers_all_paper_reproductions():
             "fig13", "fig14", "fig15", "fig16", "fig17"} <= fams
     # the post-paper data-only families
     assert {"zipf", "openloop", "conflict"} <= fams
+    # the fault-injection families (ISSUE 4)
+    assert {"avail", "storm"} <= fams
 
 
 def test_every_family_has_a_summarizer():

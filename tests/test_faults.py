@@ -1,0 +1,439 @@
+"""Fault-injection & consistency-audit subsystem tests: the FaultPlan DSL
+(materialization, storms, masks), DES compilation (crash-RECOVER with
+protocol re-election, partitions, gray nodes), the linearizability auditor
+(passes on real runs of all three protocols, rejects corrupted fixtures),
+batch-backend availability masks vs the fast DES, and the experiment-layer
+threading (Scenario(faults=...), audit fields, avail/storm families)."""
+import json
+import math
+
+import pytest
+
+from repro.core import Cluster, PigConfig, WorkloadConfig, agreement_ok
+from repro.faults import (FaultPlan, apply_plan, audit_cluster, check_history,
+                          commit_apply_gap, crash_window, drop_window,
+                          partition_window, periodic_crash, slow_window,
+                          storm)
+
+WL_RT = WorkloadConfig(request_timeout=25e-3)
+
+
+# ================================================================= plan DSL
+def test_plan_builders_compose_and_materialize_sorted():
+    plan = (crash_window(0, 0.8, 1.2) + slow_window(2, 0.0, 3.0,
+                                                    extra_latency=1e-3)
+            + partition_window(1, 3, 0.5, 0.6)
+            + periodic_crash(4, period=1.0, downtime=0.1, t0=0.2, t1=2.5))
+    from repro.faults.plan import _event_time
+    evs = plan.materialize(horizon=3.0)
+    times = [_event_time(ev) for ev in evs]
+    assert times == sorted(times)
+    kinds = {ev[0] for ev in evs}
+    assert kinds == {"crash", "recover", "slow", "partition", "heal"}
+    # periodic expansion: crashes at 0.2, 1.2, 2.2 inside the horizon
+    pc = [ev for ev in evs if ev[0] == "crash" and ev[1] == 4]
+    assert [ev[2] for ev in pc] == [0.2, 1.2, 2.2]
+
+
+def test_plan_rejects_unknown_kinds_and_bad_arity():
+    with pytest.raises(ValueError, match="unknown fault event kind"):
+        FaultPlan(events=(("explode", 3, 0.1),))
+    with pytest.raises(ValueError, match="expected"):
+        FaultPlan(events=(("crash", 3),))
+    with pytest.raises(ValueError, match="overlapping degradation"):
+        (slow_window(2, 0.0, 1.0, extra_latency=1e-3)
+         + drop_window(2, 0.5, 0.8, prob=0.3)).materialize(2.0)
+
+
+def test_storm_is_deterministic_and_respects_concurrency_cap():
+    plan = storm(targets=tuple(range(1, 9)), rate_hz=40.0, t0=0.1, t1=1.1,
+                 mean_downtime=0.2, seed=7, max_concurrent=2)
+    a = plan.materialize(2.0)
+    b = plan.materialize(2.0)
+    assert a == b and len(a) > 4
+    assert plan.materialize(2.0) != storm(
+        targets=tuple(range(1, 9)), rate_hz=40.0, t0=0.1, t1=1.1,
+        mean_downtime=0.2, seed=8, max_concurrent=2).materialize(2.0)
+    # replay the schedule: never more than 2 nodes down at once
+    down = {}
+    for ev in a:
+        if ev[0] == "crash":
+            down[ev[1]] = True
+            assert len(down) <= 2, a
+        elif ev[0] == "recover":
+            down.pop(ev[1], None)
+
+
+def test_masks_lowering_and_expressibility():
+    plan = crash_window(0, 0.4, 0.7) + slow_window(2, 0.0, 2.0,
+                                                   extra_latency=2e-3)
+    assert plan.mask_expressible(2.0)
+    m = plan.to_masks(5, 2.0)
+    assert m["down"].shape[0] == 5
+    assert tuple(m["down"][0, 0]) == (0.4, 0.7)
+    assert not (m["down"][1] < float("inf")).any()
+    assert m["slow"][2] == 2e-3 and m["slow"][0] == 0.0
+    # crash with no recover -> open window to +inf
+    m2 = crash_window(3, 0.5).to_masks(5, 2.0)
+    assert m2["down"][3, 0, 0] == 0.5 and math.isinf(m2["down"][3, 0, 1])
+    # partitions / drops / transient slow windows are DES-only
+    assert not partition_window(1, 2, 0.1, 0.2).mask_expressible(2.0)
+    assert not drop_window(1, 0.1, 0.2, 0.5).mask_expressible(2.0)
+    assert not slow_window(1, 0.5, 0.9, extra_latency=1e-3).mask_expressible(2.0)
+
+
+# ======================================================= DES fault execution
+def test_leader_crash_recover_resumes_service_and_audits_clean():
+    """The tentpole's core path: leader down for a window, recovery re-runs
+    phase 1 and re-arms in-flight slots; clients ride request timeouts; the
+    auditor and the committed==applied invariant hold on both engines."""
+    for engine in ("exact", "fast"):
+        c = Cluster("pigpaxos", 7, pig=PigConfig(n_groups=2, prc=1), seed=5,
+                    engine=engine, record_history=True)
+        apply_plan(c, crash_window(0, 0.3, 0.5), horizon=1.5)
+        st = c.measure(duration=0.7, warmup=0.1, clients=6, workload=WL_RT)
+        # service resumed: post-recovery completions exist
+        post = [t for cl in c.clients for (t, _l) in cl.latencies if t > 0.55]
+        assert post, engine
+        assert sum(cl.retries for cl in c.clients) > 0
+        res = audit_cluster(c)
+        assert res.ok, (engine, res.violations)
+        assert res.reads_checked > 0
+        c.run(until=2.0)                    # settle
+        assert commit_apply_gap(c) == 0
+        assert agreement_ok(c)
+        # the outage is visible: no completions well inside the window
+        mid = [t for cl in c.clients for (t, _l) in cl.latencies
+               if 0.36 <= t <= 0.48]
+        assert not mid
+
+
+def test_crash_recover_all_protocols_audit_clean():
+    for proto in ("paxos", "pigpaxos", "epaxos"):
+        pig = PigConfig(n_groups=2, prc=1) if proto == "pigpaxos" else None
+        # epaxos is symmetric: crash a non-leader id for it too
+        node = 2 if proto == "epaxos" else 0
+        c = Cluster(proto, 5, pig=pig, seed=9, engine="exact",
+                    record_history=True)
+        apply_plan(c, crash_window(node, 0.25, 0.4), horizon=1.2)
+        c.measure(duration=0.5, warmup=0.1, clients=5, workload=WL_RT)
+        res = audit_cluster(c)
+        assert res.ok, (proto, res.violations)
+        assert res.ops > 0 and res.completed > 0
+
+
+def test_gray_slow_node_raises_latency_and_drop_forces_retries():
+    base = Cluster("paxos", 5, seed=4, engine="exact")
+    st0 = base.measure(duration=0.4, warmup=0.1, clients=4)
+    slow = Cluster("paxos", 5, seed=4, engine="exact")
+    apply_plan(slow, slow_window(0, 0.0, 9.0, extra_latency=2e-3),
+               horizon=9.0)
+    st1 = slow.measure(duration=0.4, warmup=0.1, clients=4)
+    assert st1.median_ms > st0.median_ms + 3.0   # >= 2 leader hops x 2ms
+    lossy = Cluster("paxos", 5, seed=4, engine="exact", record_history=True)
+    apply_plan(lossy, drop_window(1, 0.1, 0.6, prob=0.9), horizon=9.0)
+    st2 = lossy.measure(duration=0.5, warmup=0.1, clients=4, workload=WL_RT)
+    assert st2.committed > 0
+    assert audit_cluster(lossy).ok
+
+
+def test_asymmetric_partition_blocks_one_direction():
+    from repro.core.messages import P3
+
+    c = Cluster("paxos", 3, seed=1, engine="exact")
+    c.run(until=0.05)                  # let the initial election settle
+    c.net.reset_stats()
+    c.net.partition_oneway(0, 1)
+    c.net.send(0, 1, P3(commit_index=-1))
+    c.net.send(1, 0, P3(commit_index=-1))
+    c.run(until=0.1)
+    assert c.net.msgs_in[1] == 0       # 0 -> 1 dropped
+    assert c.net.msgs_in[0] == 1       # 1 -> 0 delivered
+    c.net.heal_oneway(0, 1)
+    c.net.send(0, 1, P3(commit_index=-1))
+    c.run(until=0.2)
+    assert c.net.msgs_in[1] == 1
+
+
+# ===================================================== gray-list interaction
+def test_empty_plan_keeps_golden_trace_equivalence():
+    """Satellite: applying an EMPTY FaultPlan must not perturb the exact
+    engine's golden traces (PRC + gray-list config, vs the seed stack)."""
+    def run(engine, with_plan):
+        c = Cluster("pigpaxos", 5,
+                    pig=PigConfig(n_groups=3, prc=1, use_gray_list=True),
+                    seed=23, engine=engine)
+        if with_plan:
+            assert apply_plan(c, FaultPlan(), horizon=1.0) == []
+        st = c.measure(duration=0.3, warmup=0.1, clients=8)
+        logs = [[(s, cmd.client_id, cmd.seq) for s, cmd in nd.applied_log]
+                for nd in c.nodes]
+        return logs, st.committed, c.sched.events, c.sched._seq
+    ref = run("ref", with_plan=False)
+    assert run("exact", with_plan=True) == ref
+
+
+def test_prc_graylist_partition_heal_keeps_committed_equals_applied():
+    """Satellite: PigPaxos PRC + gray list under a mid-run partition-then-
+    heal plan — safety invariants hold and every commit reaches the applied
+    prefix once the cluster settles."""
+    c = Cluster("pigpaxos", 7,
+                pig=PigConfig(n_groups=2, prc=1, use_gray_list=True),
+                seed=23, engine="exact", record_history=True)
+    plan = (partition_window(0, 3, 0.2, 0.45)
+            + partition_window(2, 5, 0.25, 0.5, oneway=True))
+    apply_plan(c, plan, horizon=2.0)
+    st = c.measure(duration=0.6, warmup=0.1, clients=6, workload=WL_RT)
+    assert st.committed > 0
+    res = audit_cluster(c)
+    assert res.ok, res.violations
+    c.run(until=2.5)
+    assert commit_apply_gap(c) == 0
+    assert agreement_ok(c)
+
+
+# ================================================================== auditor
+def _h(cid, seq, op, key, invoke, resp, rtag=None):
+    return {"cid": cid, "seq": seq, "op": op, "key": key, "invoke": invoke,
+            "resp": resp, "ok": resp is not None, "rtag": rtag,
+            "wtag": (cid, seq) if op == "put" else None}
+
+
+def test_auditor_accepts_a_valid_history():
+    history = [_h(0, 1, "put", 7, 0.0, 0.1),
+               _h(1, 1, "get", 7, 0.2, 0.3, rtag=(0, 1)),
+               _h(0, 2, "put", 7, 0.35, 0.5),
+               _h(1, 2, "get", 7, 0.6, 0.7, rtag=(0, 2))]
+    log = [(0, 1, "put", 7), (1, 1, "get", 7), (0, 2, "put", 7),
+           (1, 2, "get", 7)]
+    res = check_history(history, [log, log[:2]])
+    assert res.ok and res.reads_checked == 2 and res.ops == 4
+
+
+def test_auditor_rejects_corrupted_fixtures():
+    """The acceptance-criterion fixture: each corruption must be caught."""
+    # 1) stale read: the get returns the first put after the second applied
+    history = [_h(0, 1, "put", 7, 0.0, 0.1), _h(0, 2, "put", 7, 0.2, 0.3),
+               _h(1, 1, "get", 7, 0.4, 0.5, rtag=(0, 1))]
+    log = [(0, 1, "put", 7), (0, 2, "put", 7), (1, 1, "get", 7)]
+    res = check_history(history, [log])
+    assert not res.ok and any("stale" in v for v in res.violations)
+    # 2) real-time inversion: op B completed before A was invoked, but the
+    #    (corrupted) witness orders A first
+    history = [_h(0, 1, "put", 3, 0.5, 0.6), _h(1, 1, "put", 3, 0.0, 0.1)]
+    bad_log = [(0, 1, "put", 3), (1, 1, "put", 3)]
+    res = check_history(history, [bad_log])
+    assert not res.ok and any("real-time" in v for v in res.violations)
+    # 3) duplicate apply of one client op
+    history = [_h(0, 1, "put", 3, 0.0, 0.1)]
+    res = check_history(history, [[(0, 1, "put", 3), (0, 1, "put", 3)]])
+    assert not res.ok and any("at-most-once" in v for v in res.violations)
+    # 4) acknowledged-but-lost op
+    history = [_h(0, 1, "put", 3, 0.0, 0.1), _h(0, 2, "put", 4, 0.2, 0.3)]
+    res = check_history(history, [[(0, 1, "put", 3)]])
+    assert not res.ok and any("lost update" in v for v in res.violations)
+    # 5) replica divergence on a key
+    history = [_h(0, 1, "put", 3, 0.0, 0.1), _h(1, 1, "put", 3, 0.0, 0.1)]
+    res = check_history(history, [[(0, 1, "put", 3), (1, 1, "put", 3)],
+                                  [(1, 1, "put", 3), (0, 1, "put", 3)]])
+    assert not res.ok and any("divergence" in v for v in res.violations)
+
+
+def test_not_leader_retry_never_conflates_commands():
+    """A retried op must re-send the SAME command: regenerating under an
+    in-flight (cid, seq) would let the session dedup ack one op with
+    another's result.  Pin: every acknowledged op's key in the history
+    matches the committed command's key in the leader's log."""
+    from repro.faults import applied_ops, periodic_crash
+
+    c = Cluster("paxos", 5, seed=6, engine="exact", record_history=True)
+    # repeated re-election windows in which node 0 answers ok=False, with
+    # aggressive resends so retries land inside them
+    apply_plan(c, periodic_crash(0, period=0.15, downtime=0.05,
+                                 t0=0.1, t1=0.6), horizon=1.5)
+    c.measure(duration=0.7, warmup=0.05, clients=12,
+              workload=WorkloadConfig(request_timeout=5e-3))
+    committed_keys = {(cid, seq): key
+                      for (cid, seq, _op, key) in applied_ops(c.nodes[0])}
+    acked = 0
+    for cl in c.clients:
+        for h in cl.history:
+            if h["ok"]:
+                acked += 1
+                assert committed_keys[(h["cid"], h["seq"])] == h["key"]
+    assert acked > 100
+    assert audit_cluster(c).ok
+
+
+def test_duplicate_retries_are_deduped_not_double_applied():
+    """A tiny request timeout forces real duplicate sends; the session layer
+    must keep the applied logs duplicate-free (the auditor checks this)."""
+    c = Cluster("paxos", 5, seed=2, engine="exact", record_history=True)
+    wl = WorkloadConfig(request_timeout=1e-3)   # < round-trip: many dupes
+    c.measure(duration=0.3, warmup=0.05, clients=20, workload=wl)
+    assert sum(cl.retries for cl in c.clients) > 50
+    res = audit_cluster(c)
+    assert res.ok, res.violations
+
+
+# ========================================================== batch fault path
+@pytest.mark.parametrize("role,node", [("leader", 0), ("relay", 3)])
+def test_batch_masks_match_fast_des_dip(role, node):
+    jax = pytest.importorskip("jax")  # noqa: F841
+    import numpy as np
+
+    from repro.core import vectorsim as vs
+
+    plan = crash_window(node, 0.4, 0.7)
+    N, K, dur, warm = 15, 20, 1.0, 0.2
+    pig = PigConfig(n_groups=3, prc=1, use_gray_list=True)
+
+    def dip(tl):
+        b = 0.05
+        pre = np.mean(tl[round(warm / b):round(0.4 / b)])
+        mid = np.mean(tl[round(0.4 / b):round(0.7 / b)])
+        return 1.0 - mid / max(pre, 1e-9)
+
+    tls = []
+    for seed in (1, 2):
+        c = Cluster("pigpaxos", N, pig=pig, seed=seed, engine="fast")
+        apply_plan(c, plan, horizon=2.0)
+        c.measure(duration=dur, warmup=warm, clients=K, workload=WL_RT)
+        counts = [0] * 29
+        for cl in c.clients:
+            for (t, _l) in cl.latencies:
+                bkt = int(t / 0.05)
+                if bkt < len(counts):
+                    counts[bkt] += 1
+        tls.append(counts)
+    des_dip = dip(np.mean(tls, axis=0))
+
+    units = vs.simulate_scenario(
+        "pigpaxos", N, pig=pig, clients=(K,), seeds=(1, 2),
+        duration=dur, warmup=warm, masks=plan.to_masks(N, 2.0))
+    batch_dip = dip(np.mean([u["timeline"]["counts"] for u in units],
+                            axis=0))
+    # acceptance criterion: fast-vs-batch throughput-dip depth within ~10%
+    assert abs(des_dip - batch_dip) < 0.1, (role, des_dip, batch_dip)
+    # and the post-recovery throughput recovers on both
+    assert all(u["committed"] > 0 for u in units)
+
+
+def test_batch_gray_relay_slow_mask_raises_median():
+    pytest.importorskip("jax")
+    from repro.core import vectorsim as vs
+
+    pig = PigConfig(n_groups=2, prc=0)
+    kw = dict(pig=pig, clients=(8,), seeds=(1,), duration=0.3, warmup=0.1)
+    u0 = vs.simulate_scenario("pigpaxos", 9, **kw)
+    slow = slow_window(1, 0.0, 1.0, extra_latency=2e-3).to_masks(9, 0.6)
+    u1 = vs.simulate_scenario("pigpaxos", 9, masks=slow, **kw)
+    assert u1[0]["median_ms"] > u0[0]["median_ms"]
+
+
+def test_per_cell_retry_budgets():
+    """Satellite: exhausted cells re-run alone with a doubled budget while
+    finished cells keep their first-pass results (and their step budget)."""
+    pytest.importorskip("jax")
+    from repro.core import vectorsim as vs
+
+    cfg = vs.build_config("pigpaxos", 9, pig=PigConfig(n_groups=2))
+    # scan length = steps/breq (breq=8): cell 0's 2 clients progress 2
+    # requests per scan step, so 1024 steps = 128 scan steps cover its
+    # ~240 requests; cell 1 (16 clients, ~1700 reqs) exhausts and re-runs
+    grid = [(0, 2, 0), (0, 16, 0)]
+    out = vs.simulate_grid([cfg], grid, 0.2, 0.05, steps=1024)
+    assert not out["exhausted"].any()
+    assert out["steps"][0] == 1024 and out["steps"][1] > 1024
+    # the retried cell's result is bit-identical to a full-budget run
+    full = vs.simulate_grid([cfg], grid, 0.2, 0.05,
+                            steps=int(out["steps"][1]))
+    assert out["throughput"][1] == full["throughput"][1]
+
+
+# ======================================================== experiments layer
+def test_scenario_fault_roundtrip_spec_to_schedule():
+    """Satellite: fault-plan spec -> scenario -> engine schedule round-trip,
+    including legacy ``failures`` tuples (recover is now a real API)."""
+    from repro.experiments import runner
+    from repro.experiments.scenario import Scenario
+
+    sc = Scenario(name="t/faults", protocol="pigpaxos", n=5,
+                  pig=PigConfig(n_groups=2),
+                  failures=(("crash", 3, 0.1), ("recover", 3, 0.2),
+                            ("partition", 1, 2, 0.15), ("heal", 1, 2, 0.25)),
+                  faults=crash_window(0, 0.3, 0.4),
+                  workload=WL_RT, audit=True,
+                  clients=(4,), seeds=(1,), duration=0.5, warmup=0.1)
+    json.dumps(sc.spec_dict())            # JSON-clean incl. the plan
+    evs = sc.fault_plan().materialize(sc.horizon)
+    assert [ev[0] for ev in evs] == ["crash", "partition", "recover",
+                                     "heal", "crash", "recover"]
+    art = runner.run_scenarios([sc], quick=False)
+    sa = art["scenarios"][0]
+    assert sa["consistency"] == "audited"
+    assert [ev[0] for ev in sa["faults"]] == [ev[0] for ev in evs]
+    unit = sa["units"][0]
+    assert unit["consistency"] == "ok", unit["audit"]
+    assert unit["extras"]["unavail_ms"] > 50     # the 0.3-0.4 leader window
+    assert unit["committed"] > 0
+
+
+def test_scenario_rejects_bad_failures_and_non_mask_batch():
+    from repro.experiments.scenario import Scenario
+
+    with pytest.raises(ValueError, match="unknown fault event kind"):
+        Scenario(name="t/bad", protocol="paxos", n=5,
+                 failures=(("meteor", 1, 0.1),))
+    # a typo'd node id fails at registration, not mid-suite
+    with pytest.raises(ValueError, match="targets node 12"):
+        Scenario(name="t/bad-node", protocol="paxos", n=5,
+                 faults=crash_window(12, 0.1, 0.2))
+    with pytest.raises(ValueError, match="mask-expressible"):
+        Scenario(name="t/bad2", protocol="paxos", n=5, backend="batch",
+                 faults=partition_window(1, 2, 0.1, 0.2))
+    # mask-expressible plans ARE batch-eligible now (PR 3 follow-up)
+    sc = Scenario(name="t/ok", protocol="pigpaxos", n=9,
+                  pig=PigConfig(n_groups=2, prc=1), backend="batch",
+                  faults=crash_window(0, 0.2, 0.3), collect=("timeline",),
+                  clients=(4,), seeds=(1,), duration=0.4, warmup=0.1)
+    assert sc.fault_plan().mask_expressible(sc.horizon)
+
+
+def test_batch_fault_scenario_through_runner():
+    pytest.importorskip("jax")
+    from repro.experiments import runner
+    from repro.experiments.scenario import Scenario
+
+    sc = Scenario(name="t/bfault", protocol="pigpaxos", n=9,
+                  pig=PigConfig(n_groups=2, prc=1), backend="batch",
+                  faults=crash_window(0, 0.2, 0.3), collect=("timeline",),
+                  clients=(6,), seeds=(1, 2), duration=0.4, warmup=0.1)
+    art = runner.run_scenarios([sc], quick=False)
+    sa = art["scenarios"][0]
+    assert sa["consistency"] == "model"
+    assert sa["faults"]
+    for u in sa["units"]:
+        assert u["consistency"] == "model"
+        tl = u["extras"]["timeline"]["counts"]
+        # the 0.2-0.3 window is dark (bucket 4 may catch pre-crash
+        # stragglers that arrived just before the window)
+        assert tl[5] == 0 and sum(tl[4:6]) <= 5
+        assert sum(tl) > 0
+
+
+def test_avail_and_storm_families_registered():
+    from repro import experiments
+    from repro.experiments import report
+
+    fams = set(experiments.families())
+    assert {"avail", "storm"} <= fams
+    assert {"avail", "storm"} <= set(report.SUMMARIZERS)
+    names = {s.name for s in experiments.select("avail")}
+    assert "avail/leader/N=25" in names
+    assert "avail/leader/N=25/batch" in names
+    assert {s.name for s in experiments.select("storm/*N=101")} \
+        == {"storm/pigpaxos/N=101"}
+    for s in experiments.select("avail,storm"):
+        assert s.audit or s.backend == "batch"
+        assert s.fault_plan() is not None

@@ -193,9 +193,14 @@ def test_backend_override_switches_batch_ok_scenarios():
 
 
 def test_batch_backend_rejects_unsupported_specs():
+    # crash/recover windows ARE mask-expressible since the fault subsystem
+    # (see tests/test_faults.py) — partitions and friends still are not
     with pytest.raises(ValueError):
         Scenario(name="t/bad1", protocol="pigpaxos", n=9, backend="batch",
-                 failures=(("crash", 3, 0.1),))
+                 failures=(("partition", 1, 2, 0.1),))
+    Scenario(name="t/ok1", protocol="pigpaxos", n=9, backend="batch",
+             failures=(("crash", 3, 0.1), ("recover", 3, 0.2)))
+    # timeline collection needs a fault plan on the batch backend
     with pytest.raises(ValueError):
         Scenario(name="t/bad2", protocol="pigpaxos", n=9, backend="batch",
                  collect=("timeline",))
