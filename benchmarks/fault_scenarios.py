@@ -3,10 +3,14 @@
 - ``avail`` — leader / relay crash-recover windows at N in {25, 49} with
   the linearizability auditor on; reports the unavailability window and
   throughput-dip depth, cross-checked between the exact/fast DES engines
-  and the batch backend's availability-mask runs.
+  and the batch backend's availability-mask runs.  ``avail/epaxos/*``
+  crashes an opportunistic command leader: in-flight instances heal via
+  the explicit-prepare recovery phase (no hung clients).
 - ``storm`` — seeded randomized crash-recover storms (Poisson arrivals,
   concurrency-capped) on pigpaxos/paxos/epaxos at N up to 101 on the fast
-  engine, audit always on.
+  engine, audit always on.  ``storm/epaxos-recovery/N=25`` runs the full
+  pigpaxos storm intensity against EPaxos — survivable only with
+  instance recovery.
 
 Scenarios: ``repro.experiments.catalog`` families ``avail`` and ``storm``.
 """

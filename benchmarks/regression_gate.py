@@ -2,18 +2,24 @@
 
 Diffs one or more fresh BENCH JSONs (as written by ``benchmarks/run.py
 --json``, or a raw suite artifact) against the committed reference bounds in
-``benchmarks/reference_bounds.json`` and exits non-zero when a scenario's
-``summary.throughput.mean`` falls outside its [lo, hi] window — the CI
-workflow runs it after the scenario smoke, so a throughput regression (or
-an accidental 10x "improvement" from a broken measurement window) fails the
-build instead of drifting silently.
+``benchmarks/reference_bounds.json`` and exits non-zero when:
+
+* a scenario's ``summary.throughput.mean`` falls outside its [lo, hi]
+  window (``"bounds"``) — so a throughput regression (or an accidental 10x
+  "improvement" from a broken measurement window) fails the build instead
+  of drifting silently;
+* a DES<->batch **fidelity pair** (``"fidelity"``: base name -> ratio
+  window, checked as ``<base>/batch`` over ``<base>`` throughput means)
+  leaves its window — the batch backend drifting away from the DES is a
+  model regression even when both stay inside their own bounds;
+* any audited scenario's units report a consistency violation (always
+  fatal, regardless of throughput);
+* a gated scenario is missing from the artifacts, or an artifact is
+  corrupt — the gate must fail loudly, never silently shrink.
 
 The DES runs in virtual time, so quick-mode throughput is deterministic per
 seed; the bounds carry a ±25% margin only to absorb *intentional*
 model/engine retunes — bump the bounds in the same PR as the retune.
-
-Additionally, any audited scenario whose units report a consistency
-violation fails the gate regardless of throughput.
 
 Usage::
 
@@ -27,17 +33,105 @@ import argparse
 import json
 import os
 import sys
+from typing import Dict, List, Tuple
 
 DEFAULT_BOUNDS = os.path.join(os.path.dirname(__file__),
                               "reference_bounds.json")
 MARGIN = 0.25
 
 
+class GateError(Exception):
+    """A corrupt or unreadable artifact — always a loud failure."""
+
+
 def _scenarios(path: str) -> list:
-    with open(path) as f:
-        payload = json.load(f)
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, ValueError) as e:
+        raise GateError(f"{path}: unreadable artifact ({e})") from e
+    if not isinstance(payload, dict):
+        raise GateError(f"{path}: artifact is not a JSON object")
     art = payload.get("experiments", payload)   # BENCH json or raw artifact
-    return art.get("scenarios", [])
+    scenarios = art.get("scenarios", [])
+    if not isinstance(scenarios, list):
+        raise GateError(f"{path}: 'scenarios' is not a list")
+    return scenarios
+
+
+def load_artifacts(paths) -> Dict[str, dict]:
+    """Scenario artifacts by name, later paths winning on duplicates."""
+    seen: Dict[str, dict] = {}
+    for path in paths:
+        for sa in _scenarios(path):
+            if not isinstance(sa, dict) or "name" not in sa \
+                    or "summary" not in sa:
+                raise GateError(f"{path}: malformed scenario entry "
+                                f"{str(sa)[:80]!r}")
+            seen[sa["name"]] = sa
+    return seen
+
+
+def _mean_tput(sa: dict):
+    try:
+        return sa["summary"]["throughput"]["mean"]
+    except (KeyError, TypeError) as e:
+        raise GateError(f"{sa.get('name')}: malformed summary ({e})") from e
+
+
+def evaluate(seen: Dict[str, dict], ref: dict) -> Tuple[List[str], List[str]]:
+    """Run every check; return (failures, report lines).  Pure over plain
+    data so tests can feed corrupted fixtures directly."""
+    failures: List[str] = []
+    lines: List[str] = []
+
+    for name, (lo, hi) in sorted(ref.get("bounds", {}).items()):
+        sa = seen.get(name)
+        if sa is None:
+            failures.append(f"{name}: MISSING from the artifact(s) — the "
+                            f"gate must not silently shrink")
+            continue
+        mean = _mean_tput(sa)
+        ok = mean is not None and lo <= mean <= hi
+        status = "ok" if ok else "FAIL"
+        lines.append(
+            f"{status:4s} {name:40s} "
+            f"tput={mean if mean is not None else 'n/a':>10} "
+            f"bounds=[{lo}, {hi}]")
+        if not ok:
+            failures.append(f"{name}: throughput {mean} outside [{lo}, {hi}]")
+
+    # DES<->batch fidelity: <base>/batch over <base> throughput ratio
+    for base, (lo, hi) in sorted(ref.get("fidelity", {}).items()):
+        des, batch = seen.get(base), seen.get(base + "/batch")
+        if des is None or batch is None:
+            missing = base if des is None else base + "/batch"
+            failures.append(f"{base}: fidelity pair incomplete — "
+                            f"{missing} missing from the artifact(s)")
+            continue
+        td, tb = _mean_tput(des), _mean_tput(batch)
+        if not td or tb is None:
+            failures.append(f"{base}: fidelity pair has no throughput "
+                            f"(des={td}, batch={tb})")
+            continue
+        ratio = tb / td
+        ok = lo <= ratio <= hi
+        status = "ok" if ok else "FAIL"
+        lines.append(f"{status:4s} {base + ' [xcheck]':40s} "
+                     f"batch/des={ratio:>10.3f} bounds=[{lo}, {hi}]")
+        if not ok:
+            failures.append(f"{base}: DES<->batch throughput ratio "
+                            f"{ratio:.3f} outside [{lo}, {hi}]")
+
+    for name, sa in sorted(seen.items()):
+        bad = [u for u in sa.get("units", [])
+               if u.get("consistency") == "violation"]
+        if bad:
+            failures.append(
+                f"{name}: {len(bad)} unit(s) FAILED the linearizability "
+                f"audit: {bad[0].get('audit', {}).get('violations')}")
+
+    return failures, lines
 
 
 def main() -> None:
@@ -47,10 +141,11 @@ def main() -> None:
     ap.add_argument("--write-bounds", default=None, metavar="PATH")
     args = ap.parse_args()
 
-    seen = {}
-    for path in args.artifacts:
-        for sa in _scenarios(path):
-            seen[sa["name"]] = sa
+    try:
+        seen = load_artifacts(args.artifacts)
+    except GateError as e:
+        print(f"\nREGRESSION GATE FAILED:\n  - {e}", file=sys.stderr)
+        sys.exit(1)
 
     if args.write_bounds:
         with open(args.bounds) as f:
@@ -69,37 +164,21 @@ def main() -> None:
         return
 
     with open(args.bounds) as f:
-        bounds = json.load(f)["bounds"]
+        ref = json.load(f)
 
-    failures = []
-    for name, (lo, hi) in sorted(bounds.items()):
-        sa = seen.get(name)
-        if sa is None:
-            failures.append(f"{name}: MISSING from the artifact(s) — the "
-                            f"gate must not silently shrink")
-            continue
-        mean = sa["summary"]["throughput"]["mean"]
-        ok = mean is not None and lo <= mean <= hi
-        status = "ok" if ok else "FAIL"
-        print(f"{status:4s} {name:40s} tput={mean if mean is not None else 'n/a':>10} "
-              f"bounds=[{lo}, {hi}]")
-        if not ok:
-            failures.append(f"{name}: throughput {mean} outside "
-                            f"[{lo}, {hi}]")
-    for name, sa in sorted(seen.items()):
-        bad = [u for u in sa.get("units", [])
-               if u.get("consistency") == "violation"]
-        if bad:
-            failures.append(
-                f"{name}: {len(bad)} unit(s) FAILED the linearizability "
-                f"audit: {bad[0].get('audit', {}).get('violations')}")
-
+    try:
+        failures, lines = evaluate(seen, ref)
+    except GateError as e:
+        failures, lines = [str(e)], []
+    for line in lines:
+        print(line)
     if failures:
         print("\nREGRESSION GATE FAILED:", file=sys.stderr)
         for f_ in failures:
             print(f"  - {f_}", file=sys.stderr)
         sys.exit(1)
-    print(f"\nregression gate passed: {len(bounds)} scenario bounds, "
+    print(f"\nregression gate passed: {len(ref.get('bounds', {}))} scenario "
+          f"bounds, {len(ref.get('fidelity', {}))} fidelity pairs, "
           f"{len(seen)} scenarios audited for consistency verdicts")
 
 

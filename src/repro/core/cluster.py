@@ -354,7 +354,12 @@ class Cluster:
         self.nodes: List[Node] = []
         for i in peers:
             if protocol == "epaxos":
-                self.nodes.append(epaxos_cls(i, self.net, self.sched, peers))
+                # the seed class has no recovery surface; the new engines
+                # probe stuck instances after 2 leader timeouts (fault runs)
+                ekw = ({} if engine == "ref"
+                       else {"recovery_timeout": 2 * leader_timeout})
+                self.nodes.append(epaxos_cls(i, self.net, self.sched, peers,
+                                             **ekw))
             else:
                 self.nodes.append(paxos_cls(i, self.net, self.sched, peers,
                                             pig=pig if protocol == "pigpaxos" else None,

@@ -18,7 +18,8 @@ from typing import Dict, Optional
 
 from .events import Scheduler
 from .messages import (ClientReply, ClientRequest, Command, EAccept,
-                       EAcceptReply, ECommit, PreAccept, PreAcceptReply)
+                       EAcceptReply, ECommit, EPrepare, EPrepareReply,
+                       PreAccept, PreAcceptReply)
 from .network import Network
 from .node import Node
 from .quorums import fast_quorum, majority
@@ -34,11 +35,26 @@ class _Inst:
     replies: list = field(default_factory=list)
     accept_acks: int = 0
     is_mine: bool = False
+    # explicit-prepare recovery: ballot the current attributes were
+    # (pre-)accepted at, and the highest ballot promised for this instance.
+    # The original command leader proposes at (0, 0); recovery ballots are
+    # (epoch >= 1, recoverer_id), so they always win comparisons.
+    ballot: tuple = (0, 0)
+    max_ballot: tuple = (0, 0)
+
+
+@dataclass
+class _Recovery:
+    """One in-flight explicit-prepare recovery (per instance)."""
+    ballot: tuple
+    phase: str = "prepare"              # "prepare" | "accept"
+    replies: dict = field(default_factory=dict)   # src -> EPrepareReply
+    acks: int = 0
 
 
 class EPaxosNode(Node):
     def __init__(self, node_id: int, net: Network, sched: Scheduler,
-                 peers: list[int]):
+                 peers: list[int], recovery_timeout: float = 100e-3):
         super().__init__(node_id, net, sched)
         self.peers = list(peers)
         self.n = len(peers)
@@ -46,6 +62,13 @@ class EPaxosNode(Node):
         self.maj = majority(self.n)
         self.next_inum = 0
         self.insts: Dict[tuple, _Inst] = {}
+        # ---- explicit-prepare recovery (off unless a fault plan enables
+        # it: arming probe timers on every transiently-blocked dependency
+        # would perturb the golden traces and the fault-free hot path) ----
+        self.recovery_enabled = False
+        self.recovery_timeout = recovery_timeout
+        self._recover_armed: set = set()          # inst ids with a probe timer
+        self._recoveries: Dict[tuple, _Recovery] = {}
         # per-key: latest interfering instance per replica (standard EPaxos
         # optimization: depend on the most recent conflict per replica)
         self.interf: Dict[int, Dict[int, tuple]] = {}
@@ -97,6 +120,8 @@ class EPaxosNode(Node):
         inst = self.insts.setdefault(msg.inst, _Inst())
         if inst.state in ("committed", "executed"):
             return
+        if msg.ballot < inst.max_ballot:
+            return    # a recovery already raised this instance's ballot
         inst.cmd, inst.deps, inst.seq, inst.state = msg.cmd, deps, seq, "preaccepted"
         self._note_interf(msg.cmd.key, msg.inst)
         self.send(msg.src, PreAcceptReply(inst=msg.inst, ok=True, deps=deps,
@@ -104,7 +129,11 @@ class EPaxosNode(Node):
 
     def on_PreAcceptReply(self, msg: PreAcceptReply) -> None:
         inst = self.insts.get(msg.inst)
-        if inst is None or not inst.is_mine or inst.state != "preaccepted":
+        # max_ballot > ballot means a recovery prepare preempted the
+        # original (0, 0) round: stop counting, or a delayed round could
+        # fast-path commit attributes diverging from the recoverer's
+        if inst is None or not inst.is_mine or inst.state != "preaccepted" \
+                or inst.max_ballot > inst.ballot:
             return
         inst.replies.append(msg)
         if len(inst.replies) < self.fq - 1:
@@ -129,13 +158,32 @@ class EPaxosNode(Node):
         inst = self.insts.setdefault(msg.inst, _Inst())
         if inst.state in ("committed", "executed"):
             return
+        if msg.ballot < inst.max_ballot:
+            # stale accept round (a recovery preempted it): reject so the
+            # sender stops counting; never true on the fault-free path,
+            # where every ballot is the original (0, 0)
+            self.send(msg.src, EAcceptReply(inst=msg.inst, ok=False,
+                                            ballot=inst.max_ballot))
+            return
+        inst.max_ballot = max(inst.max_ballot, msg.ballot)
+        inst.ballot = msg.ballot
         inst.cmd, inst.deps, inst.seq, inst.state = msg.cmd, msg.deps, msg.seq, "accepted"
-        self._note_interf(msg.cmd.key, msg.inst)
-        self.send(msg.src, EAcceptReply(inst=msg.inst, ok=True))
+        if msg.cmd is not None:       # recovery no-ops carry no command
+            self._note_interf(msg.cmd.key, msg.inst)
+        self.send(msg.src, EAcceptReply(inst=msg.inst, ok=True,
+                                        ballot=msg.ballot))
 
     def on_EAcceptReply(self, msg: EAcceptReply) -> None:
+        rec = self._recoveries.get(msg.inst)
+        if rec is not None and rec.phase == "accept":
+            self._recovery_accept_reply(msg.inst, rec, msg)
+            return
         inst = self.insts.get(msg.inst)
-        if inst is None or not inst.is_mine or inst.state != "accepted":
+        # acks must match the ballot the attributes were accepted at — a
+        # recovery that preempted the original round leaves its own ballot
+        # on the instance, so stale (0, 0) acks stop counting
+        if inst is None or not inst.is_mine or inst.state != "accepted" \
+                or not msg.ok or msg.ballot != inst.ballot:
             return
         inst.accept_acks += 1
         if inst.accept_acks >= self.maj:
@@ -144,7 +192,12 @@ class EPaxosNode(Node):
     # ---------------------------------------------------------------- commit
     def _commit(self, inst_id: tuple, inst: _Inst) -> None:
         inst.state = "committed"
-        self.committed_count += 1
+        # count a commit once cluster-wide: at the owning coordinator only.
+        # Recovery commits (is_mine False at the recoverer) stay uncounted —
+        # dueling recoverers may both reach this point for one instance, and
+        # a small undercount beats inflating the summed committed stat
+        if inst.cmd is not None and inst.is_mine:
+            self.committed_count += 1
         m = ECommit(inst=inst_id, cmd=inst.cmd, deps=inst.deps, seq=inst.seq,
                     n_cluster=self.n)
         for p in self.peers:
@@ -155,10 +208,12 @@ class EPaxosNode(Node):
 
     def on_ECommit(self, msg: ECommit) -> None:
         inst = self.insts.setdefault(msg.inst, _Inst())
+        if inst.state in ("committed", "executed"):
+            return                    # recovery re-broadcasts are idempotent
         inst.cmd, inst.deps, inst.seq = msg.cmd, msg.deps, msg.seq
-        if inst.state != "executed":
-            inst.state = "committed"
-        self._note_interf(msg.cmd.key, msg.inst)
+        inst.state = "committed"
+        if msg.cmd is not None:
+            self._note_interf(msg.cmd.key, msg.inst)
         self._pending_exec.append(msg.inst)
         self._drain_exec()
 
@@ -191,6 +246,7 @@ class EPaxosNode(Node):
         counter = [0]
         sccs: list = []
         blocked = [False]
+        track = self.recovery_enabled
 
         def strongconnect(v: tuple) -> None:
             work = [(v, iter(sorted(self.insts[v].deps)))]
@@ -205,6 +261,10 @@ class EPaxosNode(Node):
                     iw = self.insts.get(w)
                     if iw is None or iw.state in ("none", "preaccepted", "accepted"):
                         blocked[0] = True    # an uncommitted dep: defer
+                        if track:
+                            # fault mode: a dep stuck uncommitted past the
+                            # probe timeout gets an explicit-prepare recovery
+                            self._arm_recovery(w)
                         continue
                     if iw.state == "executed":
                         continue
@@ -249,6 +309,12 @@ class EPaxosNode(Node):
         if inst.state == "executed":
             return
         cmd = inst.cmd
+        if cmd is None:
+            # recovered no-op (no quorum member ever saw the command): mark
+            # executed without touching the store — successors unblock, the
+            # client's retry re-proposes the real command elsewhere
+            inst.state = "executed"
+            return
         op_id = (cmd.client_id, cmd.seq)
         done = self._done_ops
         if op_id in done:
@@ -268,3 +334,181 @@ class EPaxosNode(Node):
             self.send(inst.client_src,
                       ClientReply(client_id=cmd.client_id,
                                   seq=cmd.seq, ok=True, value=val))
+
+    # ======================================================= recovery (§4.7)
+    # Explicit-prepare instance recovery: when a command leader crashes with
+    # instances in flight, peers whose execution stays blocked on them run a
+    # per-instance prepare phase with a higher ballot, adopt the highest
+    # (pre-)accepted attributes a majority reports, and re-commit through a
+    # Paxos-accept round — or commit a no-op when no quorum member ever saw
+    # the command.  Enabled by ``faults.apply_plan`` (fault scenarios only):
+    # probe timers on every transiently-blocked dependency would perturb the
+    # fault-free golden traces for nothing.
+    #
+    # Decision safety mirrors full EPaxos restricted to what this simulation
+    # can produce: a fast-path commit broadcasts ECommit to every peer in
+    # the same handler that decides it (before the client can be answered),
+    # so a committed-but-unknown-to-everyone instance never outlives the
+    # ~one-hop delivery window — orders of magnitude shorter than the probe
+    # timeout that gates any recovery.  By probe time, either some quorum
+    # member reports "committed" (adopted verbatim) or no fast-path commit
+    # happened and the accepted/pre-accepted union is free to win.
+    def enable_recovery(self) -> None:
+        self.recovery_enabled = True
+
+    def recover(self) -> None:
+        """Crash-recover with protocol semantics: suppressed probe timers
+        are forgotten (they died with the crash), and the node's own
+        in-flight instances — whose replies were dropped while it was down —
+        re-run through the explicit-prepare path (re-commit or no-op)."""
+        if not self.crashed:
+            return
+        super().recover()
+        if not self.recovery_enabled:
+            return
+        self._recover_armed.clear()
+        self._recoveries.clear()
+        for iid, inst in list(self.insts.items()):
+            if iid[0] == self.id and inst.state in ("preaccepted", "accepted"):
+                inst.replies = []
+                inst.accept_acks = 0
+                self._start_prepare(iid)
+        self._drain_exec()
+
+    def _arm_recovery(self, inst_id: tuple) -> None:
+        if inst_id in self._recover_armed or inst_id in self._recoveries:
+            return
+        self._recover_armed.add(inst_id)
+        # stagger by distance from the owner so probes rarely duel: the
+        # recovered owner itself re-commits fastest, then successive peers
+        rank = (self.id - inst_id[0]) % self.n
+        delay = self.recovery_timeout * (1.0 + 0.25 * rank)
+        self.set_timer(delay, lambda: self._probe_recovery(inst_id))
+
+    def _probe_recovery(self, inst_id: tuple) -> None:
+        self._recover_armed.discard(inst_id)
+        inst = self.insts.get(inst_id)
+        if inst is not None and inst.state in ("committed", "executed"):
+            return
+        if inst_id in self._recoveries:
+            return
+        self._start_prepare(inst_id)
+
+    def _start_prepare(self, inst_id: tuple) -> None:
+        inst = self.insts.setdefault(inst_id, _Inst())
+        b = (max(inst.max_ballot[0], inst.ballot[0]) + 1, self.id)
+        inst.max_ballot = b
+        rec = _Recovery(ballot=b)
+        self._recoveries[inst_id] = rec
+        # the local snapshot is this node's own prepare reply
+        rec.replies[self.id] = EPrepareReply(
+            inst=inst_id, ok=True, ballot=b, state=inst.state, cmd=inst.cmd,
+            deps=inst.deps, seq=inst.seq, accepted_ballot=inst.ballot,
+            n_cluster=self.n)
+        m = EPrepare(inst=inst_id, ballot=b, n_cluster=self.n)
+        for p in self.peers:
+            if p != self.id:
+                self.send(p, m)
+        # stall guard: a round started while a quorum was unreachable (its
+        # EPrepares were dropped at crashed peers) would otherwise pend
+        # forever and block re-arming — abandon and re-probe
+        self.set_timer(4 * self.recovery_timeout,
+                       lambda: self._abandon_stalled(inst_id, b))
+
+    def _abandon_stalled(self, inst_id: tuple, ballot: tuple) -> None:
+        rec = self._recoveries.get(inst_id)
+        if rec is None or rec.ballot != ballot:
+            return
+        del self._recoveries[inst_id]
+        inst = self.insts.get(inst_id)
+        if inst is not None and inst.state not in ("committed", "executed"):
+            self._arm_recovery(inst_id)
+
+    def on_EPrepare(self, msg: EPrepare) -> None:
+        inst = self.insts.setdefault(msg.inst, _Inst())
+        if msg.ballot > inst.max_ballot:
+            inst.max_ballot = msg.ballot
+            r = EPrepareReply(inst=msg.inst, ok=True, ballot=msg.ballot,
+                              state=inst.state, cmd=inst.cmd, deps=inst.deps,
+                              seq=inst.seq, accepted_ballot=inst.ballot,
+                              n_cluster=self.n)
+        else:
+            r = EPrepareReply(inst=msg.inst, ok=False, ballot=inst.max_ballot)
+        self.send(msg.src, r)
+
+    def on_EPrepareReply(self, msg: EPrepareReply) -> None:
+        rec = self._recoveries.get(msg.inst)
+        if rec is None or rec.phase != "prepare" or msg.ballot != rec.ballot:
+            # a reject is only a preemption when the promise it carries
+            # beats OUR current round — late rejects answering an earlier
+            # abandoned round must not tear down the live one
+            if rec is not None and rec.phase == "prepare" and not msg.ok \
+                    and msg.ballot > rec.ballot:
+                del self._recoveries[msg.inst]
+                self._arm_recovery(msg.inst)
+            return
+        rec.replies[msg.src] = msg
+        if len(rec.replies) >= self.maj:
+            self._decide_recovery(msg.inst, rec)
+
+    def _decide_recovery(self, inst_id: tuple, rec: _Recovery) -> None:
+        rs = list(rec.replies.values())
+        committed = [r for r in rs if r.state in ("committed", "executed")]
+        if committed:
+            del self._recoveries[inst_id]
+            r0 = committed[0]
+            self._commit_recovered(inst_id, r0.cmd, r0.deps, r0.seq)
+            return
+        accepted = [r for r in rs if r.state == "accepted"]
+        if accepted:
+            r0 = max(accepted, key=lambda r: r.accepted_ballot)
+            cmd, deps, seq = r0.cmd, r0.deps, r0.seq
+        else:
+            pre = [r for r in rs
+                   if r.state == "preaccepted" and r.cmd is not None]
+            if pre:
+                cmd = pre[0].cmd
+                deps = frozenset().union(*[r.deps for r in pre])
+                seq = max(r.seq for r in pre)
+            else:
+                cmd, deps, seq = None, frozenset(), 0   # no-op the instance
+        rec.phase, rec.acks = "accept", 1
+        inst = self.insts[inst_id]
+        inst.cmd, inst.deps, inst.seq = cmd, deps, seq
+        inst.state = "accepted"
+        inst.ballot = rec.ballot
+        if cmd is not None:
+            self._note_interf(cmd.key, inst_id)
+        m = EAccept(inst=inst_id, ballot=rec.ballot, cmd=cmd, deps=deps,
+                    seq=seq, n_cluster=self.n)
+        for p in self.peers:
+            if p != self.id:
+                self.send(p, m)
+
+    def _recovery_accept_reply(self, inst_id: tuple, rec: _Recovery,
+                               msg: EAcceptReply) -> None:
+        if not msg.ok:
+            if msg.ballot > rec.ballot:        # genuinely preempted
+                del self._recoveries[inst_id]
+                self._arm_recovery(inst_id)
+            return                             # stale reject: ignore
+        if msg.ballot != rec.ballot:
+            return                             # stale round
+        rec.acks += 1
+        if rec.acks >= self.maj:
+            del self._recoveries[inst_id]
+            inst = self.insts[inst_id]
+            if inst.state not in ("committed", "executed"):
+                self._commit(inst_id, inst)
+
+    def _commit_recovered(self, inst_id: tuple, cmd, deps, seq) -> None:
+        """Adopt a commit learned through a prepare quorum; _commit
+        re-broadcasts ECommit — the original may have been lost to the
+        crash window."""
+        inst = self.insts[inst_id]
+        if inst.state in ("committed", "executed"):
+            return
+        inst.cmd, inst.deps, inst.seq = cmd, deps, seq
+        if cmd is not None:
+            self._note_interf(cmd.key, inst_id)
+        self._commit(inst_id, inst)

@@ -216,31 +216,74 @@ class PreAcceptReply(Msg):
 class EAccept(Msg):
     inst: tuple = (0, 0)
     ballot: tuple = (0, 0)
-    cmd: Command = None
+    cmd: Command = None       # None = recovery no-op
     deps: frozenset = frozenset()
     seq: int = 0
     n_cluster: int = 0
 
     def wire_size(self) -> int:
-        return HEADER_BYTES + self.cmd.wire_size() + 12 * max(len(self.deps), 1) + 8 * self.n_cluster
+        return (HEADER_BYTES
+                + (self.cmd.wire_size() if self.cmd is not None else 0)
+                + 12 * max(len(self.deps), 1) + 8 * self.n_cluster)
 
 
 @dataclass(slots=True)
 class EAcceptReply(Msg):
     inst: tuple = (0, 0)
     ok: bool = True
+    # ballot of the accept round being answered: (0, 0) on the original
+    # coordinator's slow path, the prepare ballot on recovery rounds (so a
+    # recoverer can tell its own round's acks from stale ones); rejects
+    # carry the replier's promised ballot instead
+    ballot: tuple = (0, 0)
 
 
 @dataclass(slots=True)
 class ECommit(Msg):
     inst: tuple = (0, 0)
-    cmd: Command = None
+    cmd: Command = None       # None = recovery no-op
     deps: frozenset = frozenset()
     seq: int = 0
     n_cluster: int = 0
 
     def wire_size(self) -> int:
-        return HEADER_BYTES + self.cmd.wire_size() + 12 * max(len(self.deps), 1) + 8 * self.n_cluster
+        return (HEADER_BYTES
+                + (self.cmd.wire_size() if self.cmd is not None else 0)
+                + 12 * max(len(self.deps), 1) + 8 * self.n_cluster)
+
+
+@dataclass(slots=True)
+class EPrepare(Msg):
+    """Explicit-prepare (EPaxos recovery, §4.7 of Moraru et al.): a peer
+    suspecting a crashed command leader raises the per-instance ballot and
+    asks everyone for their view of the instance."""
+    inst: tuple = (0, 0)
+    ballot: tuple = (0, 0)
+    n_cluster: int = 0        # dependency bookkeeping cost ∝ N, like PreAccept
+
+    def wire_size(self) -> int:
+        return HEADER_BYTES + 16
+
+
+@dataclass(slots=True)
+class EPrepareReply(Msg):
+    """A replica's instance snapshot: its state plus the attributes and the
+    ballot they were (pre-)accepted at.  ``ok=False`` rejects a stale
+    prepare ballot (``ballot`` then carries the replier's promise)."""
+    inst: tuple = (0, 0)
+    ok: bool = True
+    ballot: tuple = (0, 0)
+    state: str = "none"
+    cmd: Command = None
+    deps: frozenset = frozenset()
+    seq: int = 0
+    accepted_ballot: tuple = (0, 0)
+    n_cluster: int = 0
+
+    def wire_size(self) -> int:
+        return (HEADER_BYTES + 24
+                + (self.cmd.wire_size() if self.cmd is not None else 0)
+                + 12 * max(len(self.deps), 1) + 8 * self.n_cluster)
 
 
 # ---------------------------------------------------------------- cost model

@@ -27,9 +27,15 @@ Model (request level, mirroring the flattened ``engine="fast"`` semantics):
   the §4.3 single-group global-majority shortcut.
 
 Classic Paxos is the degenerate group structure (N-1 singleton groups with
-direct-message costs); EPaxos gets its own symmetric kernel (random
-per-request command leader, PreAccept broadcast, fast-quorum commit,
-conflict-free fast path).
+direct-message costs); EPaxos gets its own symmetric kernel: random
+per-request command leader, PreAccept broadcast, fast-quorum commit — and a
+**conflict/slow-path model**: each request draws its key from the
+workload's distribution (uniform / zipfian via the cached CDF / hot-key
+conflict), requests whose PreAccept round races the previous same-key
+instance's propagation window take the Paxos-accept slow path (a second
+fan-out/fan-in round), and execution waits for the predecessor's commit to
+be known (dependency-order gate).  Throughput tracks the fast DES within
+~10% up to c=0.5 (tests/test_epaxos_recovery.py).
 
 **Fault masks** (``repro.faults.FaultPlan.to_masks``): deterministic
 crash/recover windows and whole-run gray/slow nodes are expressible as
@@ -42,10 +48,11 @@ runs also emit a completion timeline (50 ms buckets, same format as the DES
 ``collect=("timeline",)`` extra) for throughput-dip/unavailability metrics.
 
 Deliberately **not** modeled: partitions, drops, relay timeouts, late-vote
-supplements, open-loop arrivals, key sampling (keys never route in
-(Pig)Paxos; EPaxos + non-uniform keys is rejected because interference does
-matter there), and the EPaxos slow path — scenarios that need those stay on
-the DES (`Scenario.batch_ok` marks the eligible ones).  A crashed follower's
+supplements, open-loop arrivals, (Pig)Paxos key sampling (keys never route
+there), EPaxos fault masks (instance recovery is a DES-only protocol
+phase), and EPaxos dependency-graph wall-time (Tarjan costs no virtual
+time) — scenarios that need those stay on the DES (`Scenario.batch_ok`
+marks the eligible ones).  A crashed follower's
 vote is deferred, not lost, so plans must leave every group's PRC threshold
 reachable without the down members (single crashes with ``prc >= 1``, or
 Paxos's singleton groups) — the DES relay-timeout fallback has no batch
@@ -113,6 +120,12 @@ class SimConfig:
     # +inf padding, and per-node whole-run extra one-way latency (n,)
     down: Optional[np.ndarray] = None
     slow: Optional[np.ndarray] = None
+    # EPaxos conflict model (epaxos kernel only): the workload's key
+    # distribution — 0 uniform, 1 zipfian (key_cdf), 2 hot-key conflict
+    key_mode: int = 0
+    n_keys: int = 1000
+    conflict_rate: float = 0.0
+    key_cdf: Optional[np.ndarray] = None
 
     @property
     def rmax(self) -> int:
@@ -174,14 +187,6 @@ def build_config(protocol: str, n: int, pig=None, topo=None, workload=None,
             down = d
         if (s > 0).any():
             slow = s
-    if (protocol == "epaxos" and workload is not None
-            and getattr(workload, "key_dist", "uniform") != "uniform"):
-        # EPaxos performance DOES depend on key interference (deps/slow
-        # path), which the fast-path-only kernel cannot model — keys are
-        # performance-neutral only for (Pig)Paxos, where they never route
-        raise ValueError("batch EPaxos models the conflict-free fast path "
-                         "only; skewed/conflict key_dists need the DES")
-
     # topology -> region arrays (LAN = one region)
     if topo is not None and topo.region_of is not None:
         region_of = np.asarray(topo.region_of, dtype=np.int32)
@@ -194,6 +199,20 @@ def build_config(protocol: str, n: int, pig=None, topo=None, workload=None,
         region_latency = np.asarray([[blat]], dtype=np.float64)
 
     if protocol == "epaxos":
+        # conflict model inputs: the workload's key distribution decides the
+        # per-request conflict draw (interfering in-flight instances route
+        # conflicted requests through the Paxos-accept slow path)
+        key_mode, n_keys, crate, cdf = 0, 1000, 0.0, None
+        if workload is not None:
+            n_keys = int(getattr(workload, "n_keys", 1000))
+            kd = getattr(workload, "key_dist", "uniform")
+            if kd == "zipfian":
+                from .cluster import zipf_cdf
+                key_mode = 1
+                cdf = zipf_cdf(n_keys, float(workload.zipf_theta))
+            elif kd == "conflict":
+                key_mode = 2
+                crate = float(workload.conflict_rate)
         costs = {
             "c_req": base + pb * w["req"],
             # PreAccept / PreAcceptReply / ECommit all carry the O(N)
@@ -205,6 +224,11 @@ def build_config(protocol: str, n: int, pig=None, topo=None, workload=None,
             "c_com": base + pb * (HEADER_BYTES + w["cmd"] + 12 + 8 * n)
             + cm.epaxos_extra_per_node * n,
             "c_replycl": base + pb * w["reply_cl"],
+            # slow path (conflicts): EAccept carries the same O(N) payload
+            # as PreAccept; EAcceptReply is a fixed-size ack
+            "c_acc": base + pb * (HEADER_BYTES + w["cmd"] + 12 + 8 * n)
+            + cm.epaxos_extra_per_node * n,
+            "c_accr": base + pb * (HEADER_BYTES + 16),
         }
         return SimConfig(
             kind="epaxos", n=n,
@@ -212,7 +236,9 @@ def build_config(protocol: str, n: int, pig=None, topo=None, workload=None,
             thresh=np.zeros(1, np.int32), static_relay=False,
             majority=majority(n), region_of=region_of,
             region_latency=region_latency, jitter=jitter, costs=costs,
-            label=label or f"epaxos/N={n}")
+            label=label or f"epaxos/N={n}",
+            key_mode=key_mode, n_keys=n_keys, conflict_rate=crate,
+            key_cdf=cdf)
 
     followers = [i for i in range(1, n)]
     if protocol == "paxos" or pig is None:
@@ -652,29 +678,46 @@ def _group_cell(cell, steps: int, kmax: int, breq: int,
 
 # ============================================================= epaxos kernel
 def _epaxos_cell(cell, steps: int, kmax: int, nb: int = 0):
-    """One grid cell of the EPaxos kernel (symmetric, conflict-free fast
-    path): random command leader per request, PreAccept broadcast to all
-    peers, commit after the fast quorum's replies, ECommit broadcast."""
+    """One grid cell of the EPaxos kernel: random command leader per
+    request, PreAccept broadcast to all peers, fast-quorum commit on the
+    conflict-free path, ECommit broadcast — plus the conflict/slow-path
+    model (ISSUE 5):
+
+    * each request draws its key from the workload distribution (uniform /
+      zipfian via the cached CDF / hot-key conflict);
+    * a request CONFLICTS when the previous same-key instance's PreAccept
+      round is still propagating at our fan-out time (``race[k]``) — then
+      peers report divergent deps and the commit takes the slow path: a
+      Paxos-accept fan-out + majority fan-in (second sorted-cummax round);
+    * execution (and hence the client reply) additionally waits until the
+      previous same-key instance's commit is known everywhere
+      (``depk[k]``) — the dependency-order execution gate.
+    """
     f32 = jnp.float32
     n = cell["reg_nodes"].shape[0]
     reg_nodes = cell["reg_nodes"]
     reg_lat = cell["reg_lat"]
     jitter = cell["jitter"]
-    (c_req, c_pa, c_par, c_com, c_replycl) = [cell["costs"][i]
-                                              for i in range(5)]
+    (c_req, c_pa, c_par, c_com, c_replycl, c_acc, c_accr) = [
+        cell["costs"][i] for i in range(7)]
     fq = cell["fq"]
+    maj = cell["majority"]
     stop, warmup = cell["stop"], cell["warmup"]
     key = cell["key"]
     ids = jnp.arange(n)
     kk = jnp.arange(n, dtype=f32)
+    nk = cell["key_cdf"].shape[0]
+    nkeysf = cell["n_keys"].astype(f32)
+    key_mode = cell["key_mode"]
+    crate = cell["conflict_rate"]
 
     ready0 = jnp.where(jnp.arange(kmax) < cell["k_clients"],
                        _CLIENT_START + _CLIENT_STAGGER * jnp.arange(kmax),
                        jnp.inf).astype(f32)
 
     def step_fn(carry, i):
-        ready, cpu, load = carry
-        ks = jax.random.split(jax.random.fold_in(key, i), 4)
+        ready, cpu, load, race, depk = carry
+        ks = jax.random.split(jax.random.fold_in(key, i), 5)
         cid = jnp.argmin(ready)
         t0 = ready[cid]
         active = t0 < stop
@@ -683,6 +726,19 @@ def _epaxos_cell(cell, steps: int, kmax: int, nb: int = 0):
         e_cl = jax.random.exponential(ks[1], (2,)) * jitter
         e_out = jax.random.exponential(ks[2], (n,)) * jitter
         e_back = jax.random.exponential(ks[3], (n,)) * jitter
+        u_key = jax.random.uniform(ks[4], ())
+
+        # per-request key draw from the workload's distribution
+        k_uni = jnp.floor(u_key * nkeysf).astype(jnp.int32)
+        k_zipf = jnp.searchsorted(cell["key_cdf"], u_key,
+                                  side="right").astype(jnp.int32)
+        k_conf = jnp.where(
+            u_key < crate, 0,
+            1 + jnp.floor((u_key - crate) / jnp.maximum(1.0 - crate, 1e-9)
+                          * (nkeysf - 1.0)).astype(jnp.int32))
+        k = jnp.where(key_mode == 1, k_zipf,
+                      jnp.where(key_mode == 2, k_conf, k_uni))
+        k = jnp.clip(k, 0, cell["n_keys"] - 1)
 
         coord_reg = reg_nodes[coord]
         b_cl = reg_lat[0, coord_reg]          # clients live in region 0
@@ -705,30 +761,73 @@ def _epaxos_cell(cell, steps: int, kmax: int, nb: int = 0):
         doneP = arr_p + W_p + c_pa + c_par
         arr_back = jnp.where(is_peer, doneP + b_pc + e_back, jnp.inf)
 
+        # reply fan-in: the coordinator's backlog partially drains over the
+        # round trip (it keeps serving while the round is in flight), so the
+        # wait each reply sees decays from W_C with the elapsed time — the
+        # 0.5 net-drain rate is calibrated against the fast DES (the node
+        # also ingests new work while draining, see tests/test_vectorsim.py)
         arr_s = jnp.sort(arr_back)
-        pref = lax.cummax(arr_s + W_C - kk * c_par)
+        W_fan = jnp.maximum(W_C - 0.5 * (arr_s - L1), 0.0)
+        pref = lax.cummax(arr_s + W_fan - kk * c_par)
         done_k = (kk + 1.0) * c_par + jnp.maximum(cpuC2, pref)
         # fast-path commit after fq-1 peer replies (the leader votes itself)
-        commit_done = done_k[jnp.clip(fq - 2, 0, n - 1)]
-        reply_done = commit_done + (n - 1) * c_com + c_replycl
+        fast_commit = done_k[jnp.clip(fq - 2, 0, n - 1)]
+
+        # conflict draw: the previous same-key instance's PreAccept round is
+        # still propagating when we fan out -> peers report divergent deps
+        # and the coordinator falls back to the Paxos-accept slow path
+        slow = active & (L1 < race[k])
+        acc_done = fast_commit + (order + 1.0) * c_acc
+        cpuC3 = fast_commit + (n - 1) * c_acc
+        arr_p2 = acc_done + b_cp + e_out
+        doneP2 = arr_p2 + W_p + c_acc + c_accr
+        arr_back2 = jnp.where(is_peer, doneP2 + b_pc + e_back, jnp.inf)
+        arr_s2 = jnp.sort(arr_back2)
+        W_fan2 = jnp.maximum(W_C - 0.5 * (arr_s2 - L1), 0.0)
+        pref2 = lax.cummax(arr_s2 + W_fan2 - kk * c_accr)
+        done_k2 = (kk + 1.0) * c_accr + jnp.maximum(cpuC3, pref2)
+        slow_commit = done_k2[jnp.clip(maj - 2, 0, n - 1)]
+        commit_done = jnp.where(slow, slow_commit, fast_commit)
+
+        # dependency-order execution: a same-key successor cannot execute
+        # (and answer its client) before the predecessor's commit is known
+        # at its coordinator
+        exec_done = jnp.maximum(commit_done + (n - 1) * c_com, depk[k])
+        reply_done = exec_done + c_replycl
         t_fin = reply_done + reg_lat[coord_reg, 0] + e_cl[1]
 
+        slowf = slow.astype(f32)
         anchored = jnp.maximum(cpu, t0)
-        coord_work = (c_req + (n - 1) * (c_pa + c_par + c_com) + c_replycl)
-        new_cpu = jnp.where(is_peer, anchored + c_pa + c_par + c_com, cpu)
+        coord_work = (c_req + (n - 1) * (c_pa + c_par + c_com) + c_replycl
+                      + slowf * (n - 1) * (c_acc + c_accr))
+        new_cpu = jnp.where(is_peer,
+                            anchored + c_pa + c_par + c_com
+                            + slowf * (c_acc + c_accr), cpu)
         new_cpu = new_cpu.at[coord].set(anchored[coord] + coord_work)
         cpu = jnp.where(active, new_cpu, cpu)
         ready = ready.at[cid].set(jnp.where(active, t_fin, jnp.inf))
 
+        # conflict-tracking state: when every peer has processed this
+        # request's PreAccept (race), and when its commit is known
+        # everywhere (depk — ECommit broadcast plus a one-way hop)
+        race_new = jnp.where(is_peer, arr_p + W_p + c_pa, -jnp.inf).max()
+        b_prop = jnp.where(is_peer, b_cp, 0.0).sum() / jnp.maximum(n - 1, 1)
+        dep_new = commit_done + (n - 1) * c_com + b_prop + jitter
+        race = race.at[k].set(jnp.where(active, race_new, race[k]))
+        depk = depk.at[k].set(jnp.where(active, dep_new, depk[k]))
+
         in_win = active & (commit_done >= warmup) & (commit_done
                                                      <= stop + _DRAIN_S)
-        add = jnp.where(is_peer, 3.0, (3.0 * n - 1.0))
+        add = jnp.where(is_peer, 3.0 + 2.0 * slowf,
+                        (3.0 * n - 1.0) + 2.0 * (n - 1) * slowf)
         load = load + jnp.where(in_win, 1.0, 0.0) * add
 
-        return (ready, cpu, load), (t_fin - t0, t_fin, commit_done, active)
+        return ((ready, cpu, load, race, depk),
+                (t_fin - t0, t_fin, commit_done, active))
 
-    carry0 = (ready0, jnp.zeros(n, f32), jnp.zeros(n, f32))
-    (ready, _, load), (lat, t_fin, commit_t, active) = lax.scan(
+    carry0 = (ready0, jnp.zeros(n, f32), jnp.zeros(n, f32),
+              jnp.zeros(nk, f32), jnp.zeros(nk, f32))
+    (ready, _, load, _, _), (lat, t_fin, commit_t, active) = lax.scan(
         step_fn, carry0, jnp.arange(steps))
     # symmetric protocol: report node 0 as "leader", the rest as followers
     return _summarize(lat, t_fin, commit_t, active, ready,
@@ -763,15 +862,18 @@ def _stack_cells(configs: Sequence[SimConfig], grid, duration: float,
         "leader_reg", "jitter", "costs",
         "majority", "n_groups", "static_relay", "k_clients", "key", "stop",
         "warmup", "duration", "n_followers", "reg_nodes", "fq",
-        "w_follower", "downL", "downF", "slowF", "slowL")}
+        "w_follower", "downL", "downF", "slowF", "slowL",
+        "key_mode", "n_keys", "conflict_rate", "key_cdf")}
     wmax = max([c.down.shape[1] for c in configs if c.down is not None] + [1])
     if kind == "group":
         rmax = max(c.rmax for c in configs)
         fmax = max(c.n - 1 for c in configs)
         nmax = 1
+        nkeys_max = 1   # the group kernel never samples keys
     else:
         rmax = fmax = 1
         nmax = max(c.n for c in configs)
+        nkeys_max = max(c.n_keys for c in configs)
         if any(c.n != nmax for c in configs):
             raise ValueError("epaxos batches must share one cluster size")
     for ci, k, seed in grid:
@@ -830,9 +932,17 @@ def _stack_cells(configs: Sequence[SimConfig], grid, duration: float,
             order = ("c_req", "c_fanout", "c_rel", "c_repl", "c_agg",
                      "c_replycl")
         else:
-            order = ("c_req", "c_pa", "c_par", "c_com", "c_replycl")
+            order = ("c_req", "c_pa", "c_par", "c_com", "c_replycl",
+                     "c_acc", "c_accr")
         cells["costs"].append(np.asarray([c.costs[o] for o in order],
                                          np.float32))
+        cells["key_mode"].append(np.int32(c.key_mode))
+        cells["n_keys"].append(np.int32(c.n_keys if kind == "epaxos" else 1))
+        cells["conflict_rate"].append(np.float32(c.conflict_rate))
+        cdf = np.ones(nkeys_max, np.float32)
+        if kind == "epaxos" and c.key_cdf is not None:
+            cdf[:len(c.key_cdf)] = np.asarray(c.key_cdf, np.float32)
+        cells["key_cdf"].append(cdf)
         cells["majority"].append(np.int32(c.majority))
         cells["n_groups"].append(np.int32(int((c.sizes > 0).sum())))
         cells["static_relay"].append(np.bool_(c.static_relay))

@@ -119,17 +119,21 @@ for proto, pig in (("paxos", None), ("pigpaxos", PigConfig(n_groups=3, prc=1))):
 
 # ------------------------------------------------------------------ fig 14
 # Steady-state latency vs partial-response-collection level, fixed load.
+# The paper's failure-section reproductions (figs 14-16) run with the
+# linearizability auditor on (ISSUE 5): they are *checked* fault scenarios,
+# not just latency plots.
 for r in (1, 3):
     for prc in (0, 1, 2):
         register(Scenario(
             name=f"fig14/R={r}/PRC={prc}", protocol="pigpaxos", n=25,
             pig=PigConfig(n_groups=r, prc=prc, single_group_majority=False),
-            grid_mode="curve", clients=(18,),
+            audit=True, grid_mode="curve", clients=(18,),
             duration=2.0, quick_duration=0.6))
 
 # ------------------------------------------------------------------ fig 15
 # PRC x gray-list latency under one node failure; §4.2 group shape where
-# the faulty group is required for majority.
+# the faulty group is required for majority.  The node-7 failure is a
+# FaultPlan (open-ended crash window — the paper's node never returns).
 _F15_GROUPS = [list(range(1, 14)), list(range(14, 25))]
 for prc in (0, 1):
     for gray in (False, True):
@@ -138,12 +142,12 @@ for prc in (0, 1):
             n=25,
             pig=PigConfig(n_groups=2, groups=_F15_GROUPS, prc=prc,
                           use_gray_list=gray),
-            failures=(("crash", 7, 0.1),),
+            faults=crash_window(7, 0.1), audit=True,
             grid_mode="curve", clients=(30,), seeds=(5,),
             duration=2.0, quick_duration=0.8))
 register(Scenario(
     name="fig15/fault_free", protocol="pigpaxos", n=25,
-    pig=PigConfig(n_groups=2, groups=_F15_GROUPS),
+    pig=PigConfig(n_groups=2, groups=_F15_GROUPS), audit=True,
     grid_mode="curve", clients=(30,), seeds=(5,),
     duration=2.0, quick_duration=0.8))
 
@@ -152,8 +156,9 @@ register(Scenario(
 register(Scenario(
     name="fig16/group_failure", protocol="pigpaxos", n=25,
     pig=PigConfig(n_groups=3, relay_timeout=50e-3),
-    failures=(("crash", 3, 0.8), ("crash", 6, 0.8), ("crash", 9, 0.8)),
-    grid_mode="curve", clients=(60,), seeds=(9,),
+    faults=(crash_window(3, 0.8) + crash_window(6, 0.8)
+            + crash_window(9, 0.8)),
+    audit=True, grid_mode="curve", clients=(60,), seeds=(9,),
     duration=3.0, quick_duration=1.2, warmup=0.3,
     collect=("timeline",)))
 
@@ -206,14 +211,24 @@ for proto, pig in (("paxos", None), ("epaxos", None),
 
 # EPaxos conflict-rate sweeps at scale: hot-key probability c drives the
 # dependency/interference rate; N=49 rides the fast engine (a regime the
-# paper's 25-node testbed could not reach).
+# paper's 25-node testbed could not reach).  Each (N, c) point also runs on
+# the batch backend (the vectorsim conflict/slow-path model, ISSUE 5): the
+# whole grid is one jitted call, and the conflict summarizer emits a
+# DES<->batch xcheck ratio per point that the regression gate bounds to
+# [0.90, 1.10].
 for n, engine in ((25, "exact"), (49, "fast")):
     for c in (0.0, 0.02, 0.1, 0.5):
         register(Scenario(
             name=f"conflict/N={n}/c={c}", protocol="epaxos", n=n,
-            engine=engine,
+            engine=engine, batch_ok=True,
             workload=WorkloadConfig(key_dist="conflict", conflict_rate=c),
             clients=(40,), seeds=(1, 2, 3), quick_seeds=(1, 2),
+            duration=0.8, quick_duration=0.3))
+        register(Scenario(
+            name=f"conflict/N={n}/c={c}/batch", protocol="epaxos", n=n,
+            backend="batch", batch_ok=True,
+            workload=WorkloadConfig(key_dist="conflict", conflict_rate=c),
+            clients=(40,), seeds=tuple(range(1, 9)), quick_seeds=(1, 2, 3),
             duration=0.8, quick_duration=0.3))
 
 # WAN sweeps at N in {25, 49, 101} (ROADMAP open item from PR 1): the fig10
@@ -316,6 +331,23 @@ for role, plan in _AVAIL_PLANS.items():
         duration=2.2, warmup=0.3, quick_duration=1.2,
         collect=("timeline",)))
 
+# avail/epaxos: coordinator crash-recover with explicit-prepare instance
+# recovery (ISSUE 5).  Node 2 is an opportunistic command leader for ~1/N
+# of the offered load; while it is down its in-flight instances wedge their
+# keys until peers run the explicit-prepare phase (probe timers fire two
+# leader-timeouts after an execution stays blocked), so the dip heals and
+# the audit stays green with NO hung clients — the pre-recovery protocol
+# left those keys wedged forever.  DES-only: EPaxos faults have no batch
+# mask lowering (the conflict model is fault-free).
+for n in (25, 49):
+    register(Scenario(
+        name=f"avail/epaxos/N={n}", protocol="epaxos", n=n,
+        workload=_AVAIL_WL, faults=crash_window(2, 0.8, 1.2), audit=True,
+        engine="exact" if n == 25 else "fast",
+        grid_mode="curve", clients=(30,), seeds=(3,),
+        duration=2.2, warmup=0.3, quick_duration=1.2,
+        collect=("timeline",), quick_skip=(n == 49)))
+
 # storm: randomized crash-recover storms (seeded Poisson arrivals over the
 # followers, Exp downtimes, concurrency-capped so a quorum can never be
 # down at once), audit always on, at N the paper's testbed could not reach.
@@ -341,13 +373,22 @@ register(Scenario(
     workload=_STORM_WL, faults=_storm_plan(25, seed=13), audit=True,
     engine="fast", clients=(30,), seeds=(1, 2), quick_seeds=(1,),
     duration=1.5, warmup=0.3, quick_duration=1.2, collect=("timeline",)))
-# EPaxos under a gentler storm: a crashed coordinator's in-flight
-# instances have no recovery protocol here, so each crash can wedge a few
-# keys (clients hang, audit-safe) — rate and concurrency stay low
+# EPaxos storms.  The original gentle variant (rate 2, one node at a time)
+# predates instance recovery and is kept for trajectory continuity; the
+# epaxos-recovery variant runs the SAME storm intensity as the pigpaxos
+# one (rate 6, two concurrent crashes) — survivable only because crashed
+# coordinators' in-flight instances now heal via explicit prepare.
 register(Scenario(
     name="storm/epaxos/N=25", protocol="epaxos", n=25,
     workload=_STORM_WL,
     faults=storm(targets=tuple(range(25)), rate_hz=2.0, t0=0.35, t1=1.3,
                  mean_downtime=0.1, seed=17, max_concurrent=1),
+    audit=True, engine="fast", clients=(30,), seeds=(1, 2), quick_seeds=(1,),
+    duration=1.5, warmup=0.3, quick_duration=1.2, collect=("timeline",)))
+register(Scenario(
+    name="storm/epaxos-recovery/N=25", protocol="epaxos", n=25,
+    workload=_STORM_WL,
+    faults=storm(targets=tuple(range(25)), rate_hz=6.0, t0=0.35, t1=1.3,
+                 mean_downtime=0.15, seed=19, max_concurrent=2),
     audit=True, engine="fast", clients=(30,), seeds=(1, 2), quick_seeds=(1,),
     duration=1.5, warmup=0.3, quick_duration=1.2, collect=("timeline",)))

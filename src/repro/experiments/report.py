@@ -284,7 +284,8 @@ def _fig16(arts, quick):
     if rep is None or "extras" not in rep:
         return []
     sc = registry.get("fig16/group_failure")
-    fail_at = min(ev[-1] for ev in sc.failures)
+    fail_at = min(float(ev[2]) for ev in sc.fault_plan().events
+                  if ev[0] == "crash")
     warmup = rep["warmup_s"]
     tl = rep["extras"]["timeline"]
     b = tl["bucket_s"]
@@ -423,18 +424,36 @@ def _scale(arts, quick):
 
 
 def _conflict(arts, quick):
+    """EPaxos conflict sweeps: per-point rows for both backends, the
+    conflict-free-relative summary per N, and a DES<->batch xcheck ratio
+    per (N, c) where both ran — the fidelity row the regression gate
+    bounds to [0.90, 1.10]."""
     out = [r for name, art in sorted(arts.items())
            if (r := _mean_std_row(name, art)) is not None]
-    by_n: Dict[str, Dict[float, float]] = {}
+    by_n: Dict[tuple, Dict[float, float]] = {}
     for name, art in arts.items():
-        _, ntag, ctag = name.split("/")
-        by_n.setdefault(ntag, {})[float(ctag.split("=")[1])] = _tput(art)
-    for ntag, cs in sorted(by_n.items()):
+        parts = name.split("/")
+        backend = "batch" if parts[-1] == "batch" else "des"
+        ntag, ctag = parts[1], parts[2]
+        by_n.setdefault((ntag, backend), {})[float(ctag.split("=")[1])] \
+            = _tput(art)
+    for (ntag, backend), cs in sorted(by_n.items()):
         if 0.0 in cs and max(cs) > 0.0:
             hi = cs[max(cs)]
-            out.append(csv_row(f"conflict/summary/{ntag}", 0, 1,
+            tag = f"{ntag}/batch" if backend == "batch" else ntag
+            out.append(csv_row(f"conflict/summary/{tag}", 0, 1,
                                f"tput_at_c={max(cs)}: {hi:.0f}req/s = "
                                f"{hi / max(cs[0.0], 1):.2f}x of conflict-free"))
+    for (ntag, backend), cs in sorted(by_n.items()):
+        if backend != "des":
+            continue
+        bs = by_n.get((ntag, "batch"), {})
+        for c in sorted(set(cs) & set(bs)):
+            if cs[c]:
+                out.append(csv_row(
+                    f"conflict/{ntag}/c={c}/xcheck", 0, 1,
+                    f"batch/des tput={bs[c] / cs[c]:.2f}x "
+                    f"(slow-path model: expect within ~0.1 of 1.0)"))
     return out
 
 

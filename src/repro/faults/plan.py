@@ -325,6 +325,14 @@ def apply_plan(cluster, plan: FaultPlan, horizon: float = _INF) -> List[tuple]:
     fault timeline, recorded in artifacts)."""
     sched, net = cluster.sched, cluster.net
     evs = plan.materialize(horizon)
+    if evs:
+        # fault mode: protocols with an opt-in recovery path switch it on
+        # (EPaxos explicit-prepare instance recovery — off by default so
+        # fault-free runs keep their golden traces and hot path)
+        for nd in getattr(cluster, "nodes", ()):
+            enable = getattr(nd, "enable_recovery", None)
+            if enable is not None:
+                enable()
     for ev in evs:
         kind = ev[0]
         if kind == "crash":

@@ -1,0 +1,115 @@
+"""Regression-gate unit tests (ISSUE 5 satellite): the gate itself was
+untested — corrupt artifacts and out-of-bounds fixtures must fail loudly,
+in-bounds fixtures must pass, and the DES<->batch fidelity pairs must be
+checked as ratios."""
+import json
+
+import pytest
+
+from benchmarks.regression_gate import (GateError, evaluate, load_artifacts)
+
+
+def _sa(name, tput, units=()):
+    return {"name": name, "summary": {"throughput": {"mean": tput}},
+            "units": list(units)}
+
+
+def _write(tmp_path, payload, fname="bench.json"):
+    p = tmp_path / fname
+    p.write_text(payload if isinstance(payload, str) else json.dumps(payload))
+    return str(p)
+
+
+# ------------------------------------------------------------------ bounds
+def test_in_bounds_passes_and_reports():
+    seen = {"fam/a": _sa("fam/a", 100.0)}
+    failures, lines = evaluate(seen, {"bounds": {"fam/a": [80, 120]}})
+    assert failures == []
+    assert any("ok" in ln and "fam/a" in ln for ln in lines)
+
+
+def test_out_of_bounds_fails():
+    seen = {"fam/a": _sa("fam/a", 150.0)}
+    failures, _ = evaluate(seen, {"bounds": {"fam/a": [80, 120]}})
+    assert failures and "outside" in failures[0]
+    # a broken measurement window (None mean) is just as fatal
+    failures, _ = evaluate({"fam/a": _sa("fam/a", None)},
+                           {"bounds": {"fam/a": [80, 120]}})
+    assert failures
+
+
+def test_missing_scenario_fails_never_shrinks():
+    failures, _ = evaluate({}, {"bounds": {"fam/gone": [80, 120]}})
+    assert failures and "MISSING" in failures[0]
+
+
+# ---------------------------------------------------------------- fidelity
+def test_fidelity_ratio_inside_window_passes():
+    seen = {"fam/a": _sa("fam/a", 100.0),
+            "fam/a/batch": _sa("fam/a/batch", 95.0)}
+    failures, lines = evaluate(seen, {"fidelity": {"fam/a": [0.9, 1.1]}})
+    assert failures == []
+    assert any("xcheck" in ln for ln in lines)
+
+
+def test_fidelity_ratio_outside_window_fails():
+    seen = {"fam/a": _sa("fam/a", 100.0),
+            "fam/a/batch": _sa("fam/a/batch", 80.0)}
+    failures, _ = evaluate(seen, {"fidelity": {"fam/a": [0.9, 1.1]}})
+    assert failures and "ratio" in failures[0]
+
+
+def test_fidelity_missing_half_fails():
+    seen = {"fam/a": _sa("fam/a", 100.0)}
+    failures, _ = evaluate(seen, {"fidelity": {"fam/a": [0.9, 1.1]}})
+    assert failures and "incomplete" in failures[0]
+
+
+# ------------------------------------------------------------------- audit
+def test_audit_violation_fails_regardless_of_throughput():
+    sa = _sa("fam/a", 100.0,
+             units=[{"consistency": "violation",
+                     "audit": {"violations": ["stale read on key 3"]}}])
+    failures, _ = evaluate({"fam/a": sa}, {"bounds": {"fam/a": [80, 120]}})
+    assert failures and "linearizability" in failures[0]
+
+
+# --------------------------------------------------------------- artifacts
+def test_corrupt_artifact_fails_loudly(tmp_path):
+    with pytest.raises(GateError, match="unreadable"):
+        load_artifacts([_write(tmp_path, "{not json")])
+    with pytest.raises(GateError, match="not a JSON object"):
+        load_artifacts([_write(tmp_path, json.dumps([1, 2]))])
+    with pytest.raises(GateError, match="malformed scenario"):
+        load_artifacts([_write(tmp_path,
+                               {"scenarios": [{"name": "x"}]})])
+    with pytest.raises(GateError, match="unreadable"):
+        load_artifacts([str(tmp_path / "does-not-exist.json")])
+
+
+def test_load_artifacts_reads_both_shapes(tmp_path):
+    raw = {"scenarios": [_sa("fam/a", 10.0)]}
+    wrapped = {"experiments": {"scenarios": [_sa("fam/b", 20.0)]}}
+    seen = load_artifacts([_write(tmp_path, raw, "a.json"),
+                           _write(tmp_path, wrapped, "b.json")])
+    assert set(seen) == {"fam/a", "fam/b"}
+
+
+def test_malformed_summary_is_a_gate_error():
+    with pytest.raises(GateError, match="malformed summary"):
+        evaluate({"fam/a": {"name": "fam/a", "summary": {}}},
+                 {"bounds": {"fam/a": [1, 2]}})
+
+
+# ------------------------------------------------------- committed bounds
+def test_committed_bounds_file_is_well_formed():
+    from benchmarks.regression_gate import DEFAULT_BOUNDS
+    with open(DEFAULT_BOUNDS) as f:
+        ref = json.load(f)
+    assert ref["bounds"], "bounds must never be empty"
+    for name, window in {**ref["bounds"], **ref.get("fidelity", {})}.items():
+        lo, hi = window
+        assert 0 <= lo < hi, (name, window)
+    # every fidelity base pairs a committed bound or at least a DES name
+    for base in ref.get("fidelity", {}):
+        assert not base.endswith("/batch"), base
