@@ -11,12 +11,20 @@
   engine, audit always on.  ``storm/epaxos-recovery/N=25`` runs the full
   pigpaxos storm intensity against EPaxos — survivable only with
   instance recovery.
+- ``reconfig`` — single-server membership changes under load (add a spare,
+  remove a follower, replace the leader, planned handoff) on pigpaxos and
+  epaxos, audited against the time-varying membership.
+- ``rolling`` — restart every node in sequence (the rolling-upgrade
+  model); per-restart unavailability windows in the artifact, audit on.
+- ``failover`` — the leader dies for good; an external failover policy
+  (``repro.runtime.FailoverPolicy``) promotes a successor, swept over its
+  detection budget.
 
-Scenarios: ``repro.experiments.catalog`` families ``avail`` and ``storm``.
+Scenarios: ``repro.experiments.catalog`` families above.
 """
 from repro.experiments import report
 
-FAMILIES = ["avail", "storm"]
+FAMILIES = ["avail", "storm", "reconfig", "rolling", "failover"]
 
 
 def run(quick: bool = True):

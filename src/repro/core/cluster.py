@@ -315,7 +315,7 @@ class Cluster:
                  pig: Optional[PigConfig] = None, seed: int = 0,
                  cost: Optional[CostModel] = None, leader_timeout: float = 50e-3,
                  quorums=None, engine: str = "exact",
-                 record_history: bool = False):
+                 record_history: bool = False, spare_nodes: int = 0):
         """``engine`` selects the simulation engine:
 
         * ``"exact"`` (default) — fused slab engine, trace-identical to the
@@ -328,12 +328,25 @@ class Cluster:
         ``record_history`` makes every client keep an invoke/response record
         per operation (with tagged put values) for the consistency auditor
         (``repro.faults.audit``); off by default — the hot path is untouched.
+
+        ``spare_nodes`` pre-provisions extra node objects (ids ``n`` ..
+        ``n + spare_nodes - 1``) OUTSIDE the initial membership.  They sit
+        inert (non-voting learners) until ``add_node`` joins them through
+        the protocol's reconfiguration path.  DES engines only.
         """
         self.protocol = protocol
         self.n = n
         self.engine = engine
         self.record_history = record_history
-        self.topo = topo or Topology(n=n)
+        if spare_nodes and engine == "ref":
+            raise ValueError("membership change is not supported by the "
+                             "verbatim seed stack (engine='ref') — use "
+                             "'exact' or 'fast'")
+        total = n + spare_nodes
+        self.topo = topo or Topology(n=total)
+        if self.topo.n < total:
+            raise ValueError(f"topology has {self.topo.n} nodes but "
+                             f"n + spare_nodes = {total}")
         if engine == "ref":
             # the verbatim seed stack: seed scheduler/network AND seed
             # protocol classes (golden-trace baseline, see refengine.py)
@@ -350,9 +363,10 @@ class Cluster:
         else:
             raise ValueError(f"unknown engine {engine!r}")
         self.pig = pig
+        self.leader_timeout = leader_timeout
         peers = list(range(n))
         self.nodes: List[Node] = []
-        for i in peers:
+        for i in range(total):
             if protocol == "epaxos":
                 # the seed class has no recovery surface; the new engines
                 # probe stuck instances after 2 leader timeouts (fault runs)
@@ -365,10 +379,72 @@ class Cluster:
                                             pig=pig if protocol == "pigpaxos" else None,
                                             leader_timeout=leader_timeout,
                                             quorums=quorums))
+        # cluster-level membership view, fed by node callbacks as cfg
+        # commands apply (client routing + the auditor's durable set)
+        self.members: List[int] = list(peers)
+        for nd in self.nodes:
+            nd.on_membership_change = self._on_membership_change
+            if protocol in ("paxos", "pigpaxos"):
+                nd.on_became_leader = self._on_became_leader
+        for i in range(n, total):
+            self.nodes[i].joining = True   # inert learner until add_node
         self.leader_id = 0
         self.clients: List[Client] = []
         if protocol in ("paxos", "pigpaxos"):
             self.nodes[0].start_phase1()
+
+    # ----------------------------------------------------------- membership
+    def _on_became_leader(self, node) -> None:
+        self.leader_id = node.id
+
+    def _on_membership_change(self, node, op: str, nid: int) -> None:
+        """Fired by EVERY node as it applies a cfg command; the first
+        application updates the cluster-level view (idempotent after that).
+        """
+        if op == "add_node":
+            if nid not in self.members:
+                self.members.append(nid)
+                self.members.sort()
+        else:
+            if nid in self.members:
+                self.members.remove(nid)
+                if (nid == self.leader_id and self.members
+                        and self.protocol in ("paxos", "pigpaxos")):
+                    # remove-the-leader: hand leadership to the lowest
+                    # member (deferred a tick: we're inside an apply loop)
+                    succ = self.members[0]
+                    self.sched.after(0.0, self.nodes[succ].start_phase1)
+
+    def add_node(self, j: int, catch_up: bool = True) -> None:
+        """Join node ``j`` (usually a spare) through the protocol's
+        reconfiguration path: snapshot + log suffix first, voting only after
+        the ``add_node`` cfg command applies.  ``catch_up=False`` is the
+        deliberately-broken control (state transfer skipped) that the
+        auditor must catch."""
+        nd = self.nodes[j]
+        if self.protocol == "epaxos":
+            ref = lambda: min(self.members)
+        else:
+            ref = lambda: self.leader_id
+        nd.begin_join(ref, catch_up=catch_up)
+
+    def remove_node(self, j: int, _tries: int = 40) -> None:
+        """Propose removing node ``j`` from the membership.  Retries on a
+        timer while no proposer is available (mid-election, or another cfg
+        command in flight — the one-at-a-time invariant)."""
+        proposer = (min(self.members) if self.protocol == "epaxos"
+                    else self.leader_id)
+        ok = self.nodes[proposer].propose_reconfig("remove_node", j)
+        if not ok and _tries > 0:
+            self.sched.after(2 * self.leader_timeout,
+                             lambda: self.remove_node(j, _tries - 1))
+
+    def replace_leader(self, j: int) -> None:
+        """Planned leader handoff: ``j`` campaigns with a higher ballot and
+        the incumbent steps down on its P1a.  No-op for EPaxos (leaderless)
+        and for non-members."""
+        if self.protocol in ("paxos", "pigpaxos") and j in self.members:
+            self.nodes[j].start_phase1()
 
     # ------------------------------------------------------------- clients
     def add_clients(self, k: int, workload: Optional[WorkloadConfig] = None,
@@ -379,7 +455,9 @@ class Cluster:
         rng = self.sched.rng
         for c in range(k):
             if self.protocol == "epaxos":
-                pick = lambda: int(rng.integers(self.n))
+                # uniform over the CURRENT membership (identical rng draws
+                # to the seed's integers(n) while membership never changes)
+                pick = lambda: self.members[int(rng.integers(len(self.members)))]
             else:
                 pick = lambda: self.leader_id
             cl = cls(self, len(self.clients), pick, wl, stop_at)
@@ -459,13 +537,25 @@ class Stats:
 
 
 def agreement_ok(cluster: Cluster) -> bool:
-    """Safety check: all nodes applied the same commands in the same order
-    (prefix agreement across replicas)."""
+    """Safety check: all nodes applied the same commands in the same order.
+    Each log must be a contiguous *window* of the longest one: laggards are
+    prefixes, snapshot-joined nodes start mid-stream at their snapshot
+    point, and a joiner promoted to leader may overhang the end (it applies
+    at commit, before the commit messages land on followers)."""
     logs = []
     for nd in cluster.nodes:
         logs.append([(s, c.client_id, c.seq, c.op, c.key) for s, c in nd.applied_log])
     ref = max(logs, key=len)
+    pos = {e[0]: i for i, e in enumerate(ref)}    # slot/inst-id -> index
     for lg in logs:
-        if lg != ref[:len(lg)]:
+        if not lg or lg == ref[:len(lg)]:
+            continue                               # prefix: the usual case
+        i = pos.get(lg[0][0])
+        if i is None:
+            return False
+        k = min(len(lg), len(ref) - i)
+        # the window must match where it overlaps, and anything past the
+        # ref's end must be genuinely new — a repeated slot is divergence
+        if lg[:k] != ref[i:i + k] or any(e[0] in pos for e in lg[k:]):
             return False
     return True

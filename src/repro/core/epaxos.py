@@ -19,7 +19,7 @@ from typing import Dict, Optional
 from .events import Scheduler
 from .messages import (ClientReply, ClientRequest, Command, EAccept,
                        EAcceptReply, ECommit, EPrepare, EPrepareReply,
-                       PreAccept, PreAcceptReply)
+                       JoinReq, PreAccept, PreAcceptReply, Snapshot)
 from .network import Network
 from .node import Node
 from .quorums import fast_quorum, majority
@@ -82,19 +82,43 @@ class EPaxosNode(Node):
         # orders *interfering* commands — a client's ops on different keys
         # may execute in different relative orders on different replicas.
         self._done_ops: Dict[tuple, Optional[bytes]] = {}
+        # membership state (single-server reconfiguration): cfg commands ride
+        # the normal instance space but interfere with EVERY command (they
+        # depend on all latest instances and everything after depends on
+        # them), so all replicas execute the switch at the same point of the
+        # dependency order.  One deterministic proposer (the lowest member,
+        # routed by Cluster) approximates the one-at-a-time invariant.
+        self.members: list = sorted(peers)
+        self.joining = False
+        self.removed = False
+        self._last_cfg: Optional[tuple] = None    # latest cfg instance id
+        self._cfg_seq = 0
+        self._leader_ref = None
+        self._join_catch_up = True
+        self._snap_installed = False
+        self.on_membership_change = None
         self.committed_count = 0
 
     # ---------------------------------------------------------------- leader
     def on_ClientRequest(self, msg: ClientRequest) -> None:
-        cmd = msg.cmd
+        if self.joining or self.removed:
+            # not (yet / anymore) a member: bounce like a non-leader Paxos
+            # node so the client re-picks from the current membership
+            self.send(msg.src, ClientReply(client_id=msg.cmd.client_id,
+                                           seq=msg.cmd.seq, ok=False))
+            return
+        self._propose_cmd(msg.cmd, msg.src)
+
+    def _propose_cmd(self, cmd: Command, client_src: int) -> None:
         inst_id = (self.id, self.next_inum)
         self.next_inum += 1
-        deps = self._conflicts(cmd.key, exclude=inst_id)
-        seq = 1 + max([self.insts[d].seq for d in deps], default=0)
+        deps = self._deps_for(cmd, exclude=inst_id)
+        seq = 1 + max([self.insts[d].seq for d in deps
+                       if d in self.insts], default=0)
         inst = _Inst(cmd=cmd, deps=deps, seq=seq, state="preaccepted",
-                     client_src=msg.src, is_mine=True)
+                     client_src=client_src, is_mine=True)
         self.insts[inst_id] = inst
-        self._note_interf(cmd.key, inst_id)
+        self._note_cmd(cmd, inst_id)
         # one shared instance per broadcast: receivers never mutate messages
         m = PreAccept(inst=inst_id, cmd=cmd, deps=deps, seq=seq,
                       n_cluster=self.n)
@@ -108,12 +132,40 @@ class EPaxosNode(Node):
             return frozenset()
         return frozenset(v for v in m.values() if v != exclude)
 
+    def _deps_for(self, cmd: Command, exclude: tuple) -> frozenset:
+        """Dependency set for a command: per-key conflicts for data ops
+        (plus the latest cfg instance, so every command orders after the
+        membership switch), ALL latest instances for cfg ops."""
+        op = cmd.op
+        if op == "put" or op == "get":
+            deps = self._conflicts(cmd.key, exclude=exclude)
+            lc = self._last_cfg
+            if lc is not None and lc != exclude and lc not in deps:
+                deps = deps | {lc}
+            return deps
+        ds: set = set()
+        for m in self.interf.values():
+            ds.update(m.values())
+        if self._last_cfg is not None:
+            ds.add(self._last_cfg)
+        ds.discard(exclude)
+        return frozenset(ds)
+
     def _note_interf(self, key: int, inst_id: tuple) -> None:
         self.interf.setdefault(key, {})[inst_id[0]] = inst_id
 
+    def _note_cmd(self, cmd: Command, inst_id: tuple) -> None:
+        op = cmd.op
+        if op == "put" or op == "get":
+            self._note_interf(cmd.key, inst_id)
+        else:
+            # cfg commands live outside the per-key map (their ``key`` is a
+            # node id and must not collide with data keys)
+            self._last_cfg = inst_id
+
     # -------------------------------------------------------------- replicas
     def on_PreAccept(self, msg: PreAccept) -> None:
-        local = self._conflicts(msg.cmd.key, exclude=msg.inst)
+        local = self._deps_for(msg.cmd, exclude=msg.inst)
         deps = msg.deps | local
         seq = max(msg.seq, 1 + max([self.insts[d].seq for d in local
                                     if d in self.insts], default=0))
@@ -123,7 +175,9 @@ class EPaxosNode(Node):
         if msg.ballot < inst.max_ballot:
             return    # a recovery already raised this instance's ballot
         inst.cmd, inst.deps, inst.seq, inst.state = msg.cmd, deps, seq, "preaccepted"
-        self._note_interf(msg.cmd.key, msg.inst)
+        self._note_cmd(msg.cmd, msg.inst)
+        if self.joining or self.removed:
+            return    # non-members record state but never vote
         self.send(msg.src, PreAcceptReply(inst=msg.inst, ok=True, deps=deps,
                                           seq=seq, n_cluster=self.n))
 
@@ -169,7 +223,9 @@ class EPaxosNode(Node):
         inst.ballot = msg.ballot
         inst.cmd, inst.deps, inst.seq, inst.state = msg.cmd, msg.deps, msg.seq, "accepted"
         if msg.cmd is not None:       # recovery no-ops carry no command
-            self._note_interf(msg.cmd.key, msg.inst)
+            self._note_cmd(msg.cmd, msg.inst)
+        if self.joining or self.removed:
+            return    # non-members record state but never vote
         self.send(msg.src, EAcceptReply(inst=msg.inst, ok=True,
                                         ballot=msg.ballot))
 
@@ -213,7 +269,7 @@ class EPaxosNode(Node):
         inst.cmd, inst.deps, inst.seq = msg.cmd, msg.deps, msg.seq
         inst.state = "committed"
         if msg.cmd is not None:
-            self._note_interf(msg.cmd.key, msg.inst)
+            self._note_cmd(msg.cmd, msg.inst)
         self._pending_exec.append(msg.inst)
         self._drain_exec()
 
@@ -326,6 +382,13 @@ class EPaxosNode(Node):
                           ClientReply(client_id=cmd.client_id, seq=cmd.seq,
                                       ok=True, value=done[op_id]))
             return
+        if cmd.op != "put" and cmd.op != "get":
+            # configuration command: activates membership, not the store
+            done[op_id] = None
+            self.applied_log.append((inst_id, cmd))
+            inst.state = "executed"
+            self._apply_membership(cmd)
+            return
         val = self.store.apply(cmd)
         done[op_id] = val
         self.applied_log.append((inst_id, cmd))
@@ -334,6 +397,120 @@ class EPaxosNode(Node):
             self.send(inst.client_src,
                       ClientReply(client_id=cmd.client_id,
                                   seq=cmd.seq, ok=True, value=val))
+
+    # ===================================================== membership change
+    def propose_reconfig(self, op: str, nid: int) -> bool:
+        """Propose a single-server membership change as a cfg instance.
+        Routed by ``Cluster`` to one deterministic proposer (the lowest
+        member), which refuses a second cfg while one is still un-executed —
+        the one-at-a-time invariant, leaderless edition."""
+        if self.joining or self.removed:
+            return False
+        lc = self._last_cfg
+        if lc is not None:
+            prev = self.insts.get(lc)
+            if prev is not None and prev.state != "executed":
+                return False               # previous cfg still in flight
+        if (op == "add_node") == (nid in self.members):
+            return False                   # no-op change
+        self._cfg_seq += 1
+        cmd = Command(client_id=-(self.id + 1), seq=self._cfg_seq,
+                      op=op, key=nid)
+        self._propose_cmd(cmd, client_src=-1)
+        return True
+
+    def _apply_membership(self, cmd: Command) -> None:
+        """Activate an executed cfg command.  Ordered identically on every
+        replica because cfg instances interfere with everything."""
+        nid = cmd.key
+        members = self.members
+        if cmd.op == "add_node":
+            if nid not in members:
+                members.append(nid)
+                members.sort()
+        elif cmd.op == "remove_node":
+            if nid in members:
+                members.remove(nid)
+            if nid == self.id:
+                self.removed = True
+        else:
+            raise RuntimeError(f"unknown configuration op {cmd.op!r}")
+        self._refresh_quorums()
+        if cmd.op == "add_node" and nid != self.id \
+                and cmd.client_id == -(self.id + 1):
+            # the proposer confirms the join directly: the new node never
+            # executes this cfg instance (it has no dependency history), so
+            # it learns "you are a member now" out of band
+            self.send(nid, Snapshot(members=tuple(members),
+                                    payload={"confirm": True}))
+        cb = self.on_membership_change
+        if cb is not None:
+            cb(self, cmd.op, nid)
+
+    def _refresh_quorums(self) -> None:
+        self.peers = list(self.members)
+        self.n = len(self.peers)
+        self.fq = fast_quorum(self.n)
+        self.maj = majority(self.n)
+
+    def begin_join(self, leader_ref, catch_up: bool = True) -> None:
+        """Learner protocol: fetch a state snapshot from the cfg proposer,
+        then stay mute (recording but never voting) until the proposer's
+        confirm promotes this node to a member.  ``catch_up=False`` is the
+        deliberately-broken control for the auditor tests."""
+        self.joining = True
+        self._leader_ref = leader_ref
+        self._join_catch_up = catch_up
+        self._snap_installed = False
+        self._send_join()
+
+    def _send_join(self) -> None:
+        if not self.joining or self.crashed:
+            return
+        self.send(self._leader_ref(), JoinReq(node=self.id))
+        self.set_timer(4 * self.recovery_timeout, self._send_join)
+
+    def on_JoinReq(self, msg: JoinReq) -> None:
+        if self.joining or self.removed:
+            return
+        nid = msg.node
+        payload = {
+            "interf": {k: dict(m) for k, m in self.interf.items()},
+            # executed instances ship as stubs: the execution graph skips
+            # executed-state dependencies, so the joiner can order new
+            # commands without replaying history
+            "executed": [(iid, inst.seq) for iid, inst in self.insts.items()
+                         if inst.state == "executed"],
+            "last_cfg": self._last_cfg,
+        }
+        self.send(nid, Snapshot(store=dict(self.store.data),
+                                session=dict(self._done_ops),
+                                members=tuple(self.members),
+                                payload=payload))
+        if nid not in self.members:
+            self.propose_reconfig("add_node", nid)
+
+    def on_Snapshot(self, msg: Snapshot) -> None:
+        p = msg.payload or {}
+        if p.get("confirm"):
+            if self.joining:
+                self.members = sorted(set(msg.members) | {self.id})
+                self._refresh_quorums()
+                self.joining = False
+            return
+        if not self.joining or self._snap_installed:
+            return                         # only the first snapshot installs
+        self._snap_installed = True
+        if self._join_catch_up:
+            self.store.data = dict(msg.store)
+            self._done_ops = dict(msg.session)
+            self.interf = {k: dict(m) for k, m in p.get("interf", {}).items()}
+            for iid, seq in p.get("executed", ()):
+                self.insts.setdefault(iid, _Inst(state="executed", seq=seq))
+            self._last_cfg = p.get("last_cfg")
+        self.applied_log = []
+        self.members = sorted(msg.members)
+        self._refresh_quorums()
 
     # ======================================================= recovery (§4.7)
     # Explicit-prepare instance recovery: when a command leader crashes with
@@ -426,6 +603,8 @@ class EPaxosNode(Node):
 
     def on_EPrepare(self, msg: EPrepare) -> None:
         inst = self.insts.setdefault(msg.inst, _Inst())
+        if self.joining or self.removed:
+            return    # non-members don't vote in recovery rounds either
         if msg.ballot > inst.max_ballot:
             inst.max_ballot = msg.ballot
             r = EPrepareReply(inst=msg.inst, ok=True, ballot=msg.ballot,
@@ -478,7 +657,7 @@ class EPaxosNode(Node):
         inst.state = "accepted"
         inst.ballot = rec.ballot
         if cmd is not None:
-            self._note_interf(cmd.key, inst_id)
+            self._note_cmd(cmd, inst_id)
         m = EAccept(inst=inst_id, ballot=rec.ballot, cmd=cmd, deps=deps,
                     seq=seq, n_cluster=self.n)
         for p in self.peers:
@@ -510,5 +689,5 @@ class EPaxosNode(Node):
             return
         inst.cmd, inst.deps, inst.seq = cmd, deps, seq
         if cmd is not None:
-            self._note_interf(cmd.key, inst_id)
+            self._note_cmd(cmd, inst_id)
         self._commit(inst_id, inst)

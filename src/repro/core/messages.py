@@ -123,6 +123,35 @@ class P3(Msg):
     commit_index: int = -1
 
 
+# ------------------------------------------------------- membership change
+@dataclass(slots=True)
+class JoinReq(Msg):
+    """Joiner -> leader (Paxos) / config proposer (EPaxos): ask to be added
+    to the replica set.  The receiver answers with a ``Snapshot`` and drives
+    the ``add_node`` configuration command through the normal log."""
+    node: int = -1
+
+
+@dataclass(slots=True)
+class Snapshot(Msg):
+    """State transfer to a joining learner: applied KV state + client
+    session table + the sender's membership view.  ``payload`` carries
+    protocol-specific extras (EPaxos ships its interference map and executed
+    instance ids; a zero-store Snapshot with ``payload={"confirm": True}``
+    confirms a completed EPaxos join)."""
+    commit_index: int = -1
+    store: dict = field(default_factory=dict)
+    session: dict = field(default_factory=dict)
+    members: tuple = ()
+    payload: Any = None
+
+    def wire_size(self) -> int:
+        extra = len(self.payload) if isinstance(self.payload, (dict, list)) else 0
+        return (HEADER_BYTES + 16
+                + 24 * (len(self.store) + len(self.session) + extra)
+                + 2 * len(self.members))
+
+
 # ---------------------------------------------------------------- Pig overlay
 @dataclass(slots=True)
 class PigFanout(Msg):

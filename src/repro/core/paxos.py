@@ -19,8 +19,8 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, Optional
 
 from .events import Scheduler
-from .messages import (ClientReply, ClientRequest, Command, Msg, P1a, P1b,
-                       P2a, P2b, P3, PigAggregate)
+from .messages import (ClientReply, ClientRequest, Command, JoinReq, Msg,
+                       P1a, P1b, P2a, P2b, P3, PigAggregate, Snapshot)
 from .network import Network
 from .node import Node
 from .pig import DirectComm, PigComm, PigConfig, _P1Aggregate
@@ -98,11 +98,32 @@ class PaxosNode(Node):
         # every replica, since the decision depends only on the shared log
         # prefix — and answered from the cached result.
         self._session: Dict[int, tuple] = {}
+        # membership state (single-server reconfiguration, Raft-style):
+        # ``members`` is the replica set this node believes is in force;
+        # configuration commands ride the normal log and activate at apply
+        # time, which is safe for single-server changes because any old and
+        # new majority intersect.  A ``joining`` learner accepts state but
+        # never votes; a ``removed`` node stops voting permanently.
+        self.members: list = sorted(peers)
+        self.joining = False
+        self.removed = False
+        self._cfg_inflight: Optional[int] = None   # slot of the pending cfg cmd
+        self._cfg_seq = 0
+        self._learners: set = set()     # joiners fed P2a directly, pre-membership
+        self._leader_ref: Optional[Callable[[], int]] = None
+        self._join_catch_up = True
+        self._snap_installed = False
+        # cluster-level hooks (no protocol semantics; used by Cluster to track
+        # the current leader / membership view for client routing and audits)
+        self.on_became_leader: Optional[Callable] = None
+        self.on_membership_change: Optional[Callable] = None
         # metrics
         self.committed_count = 0
 
     # ================================================================ leader
     def start_phase1(self) -> None:
+        if self.joining or self.removed:
+            return      # non-members never campaign
         b = (max(self.promised[0], self.ballot[0]) + 1, self.id)
         self.ballot = b
         self.is_leader = False
@@ -171,9 +192,13 @@ class PaxosNode(Node):
             entry.voters = {self.id}       # stale-ballot votes don't count
             self.accepted[s] = (self.ballot, entry.cmd)
             self._send_p2a(s)
+        cb = self.on_became_leader
+        if cb is not None:
+            cb(self)
 
     def _step_down(self, higher: tuple) -> None:
         self.is_leader = False
+        self._cfg_inflight = None      # a pending cfg cmd is the new leader's
         for e in self.log.values():
             if e.timer is not None:
                 self.cancel_timer(e.timer)
@@ -205,6 +230,12 @@ class PaxosNode(Node):
             return P2a(ballot=b, slot=slot, cmd=entry.cmd, commit_index=ci)
 
         entry.pig_ids = self.comm.broadcast(make, round_key=slot) or []
+        if self._learners:
+            # joining learners are outside the comm's member set: feed them
+            # the P2a directly so they follow the log (they never vote)
+            m = make()
+            for lid in self._learners:
+                self.send(lid, m)
         entry.timer = self.set_timer(self.leader_timeout,
                                      lambda: self._slot_timeout(slot))
 
@@ -263,8 +294,11 @@ class PaxosNode(Node):
         if cmd.op == "put":
             store.data[cmd.key] = cmd.value
             val = None
-        else:
+        elif cmd.op == "get":
             val = store.data.get(cmd.key)
+        else:
+            val = None                     # configuration command
+            self._apply_membership(cmd)
         self._session[cmd.client_id] = (cmd.seq, val)
         self.applied_log.append((s, cmd))
         return True, val
@@ -281,6 +315,129 @@ class PaxosNode(Node):
                 self.send(e.client_src,
                           ClientReply(client_id=cmd.client_id, seq=cmd.seq,
                                       ok=True, value=val))
+
+    # ===================================================== membership change
+    def propose_reconfig(self, op: str, nid: int) -> bool:
+        """Propose a single-server membership change (``add_node`` /
+        ``remove_node``) through the normal log.  At most ONE configuration
+        command may be in flight at a time — the Raft one-at-a-time
+        invariant that keeps every old/new majority pair intersecting.
+        Returns False (caller retries later) when this node is not the
+        leader, a cfg command is already pending, or the change is a no-op.
+        """
+        if (not self.is_leader or self.removed
+                or self._cfg_inflight is not None):
+            return False
+        if (op == "add_node") == (nid in self.members):
+            return False                   # no-op change
+        self._cfg_seq += 1
+        # negative client ids keep cfg commands out of the client session
+        # space; the session table still dedups re-proposed cfg commands
+        cmd = Command(client_id=-(self.id + 1), seq=self._cfg_seq,
+                      op=op, key=nid)
+        slot = self.next_slot
+        self.next_slot += 1
+        self._cfg_inflight = slot
+        self._propose_at(slot, cmd, client_src=-1)
+        return True
+
+    def _apply_membership(self, cmd: Command) -> None:
+        """Activate a committed configuration command.  Runs on every
+        replica at apply time (the single shared apply path), so all members
+        switch configurations at the same log position."""
+        nid = cmd.key
+        members = self.members
+        changed = False
+        if cmd.op == "add_node":
+            if nid not in members:
+                members.append(nid)
+                members.sort()
+                changed = True
+            if nid == self.id:
+                self.joining = False       # promoted from learner to member
+        elif cmd.op == "remove_node":
+            if nid in members:
+                members.remove(nid)
+                changed = True
+        else:
+            raise RuntimeError(f"unknown configuration op {cmd.op!r}")
+        # one-at-a-time: the cfg command being applied IS the pending one
+        self._cfg_inflight = None
+        if not changed:
+            return
+        self._refresh_membership()
+        if cmd.op == "remove_node":
+            self._learners.discard(nid)
+            if nid == self.id:
+                self.removed = True
+                if self.is_leader:
+                    self._step_down(self.ballot)
+        cb = self.on_membership_change
+        if cb is not None:
+            cb(self, cmd.op, nid)
+
+    def _refresh_membership(self) -> None:
+        """Re-derive quorum sizes and the comm topology from ``members`` —
+        for PigComm this re-partitions the relay groups (stale cached
+        partitions are dropped; in-flight rounds finish under the leader's
+        timeout/retry path)."""
+        self.peers = list(self.members)
+        self.n = len(self.peers)
+        q = self.quorums
+        self.majority = q.q2 if q else majority(self.n)
+        self.q1 = q.q1 if q else majority(self.n)
+        self.comm.set_members(self.peers)
+
+    def begin_join(self, leader_ref: Callable[[], int],
+                   catch_up: bool = True) -> None:
+        """Start the learner protocol: ask the leader for a state snapshot,
+        then follow the log (via the direct learner P2a feed + the normal
+        commit_index/CatchUp suffix path) WITHOUT voting until the
+        ``add_node`` command naming this node is applied.  ``catch_up=False``
+        is the deliberately-broken control for the auditor tests: the joiner
+        skips the snapshot state and serves from an empty store."""
+        self.joining = True
+        self._leader_ref = leader_ref
+        self._join_catch_up = catch_up
+        self._snap_installed = False
+        self._send_join()
+
+    def _send_join(self) -> None:
+        if not self.joining or self.crashed:
+            return
+        self.send(self._leader_ref(), JoinReq(node=self.id))
+        # retried against the (possibly new) leader until membership lands
+        self.set_timer(4 * self.leader_timeout, self._send_join)
+
+    def on_JoinReq(self, msg: JoinReq) -> None:
+        if not self.is_leader:
+            return                         # joiner retries on its timer
+        nid = msg.node
+        self._learners.add(nid)
+        self.send(nid, Snapshot(commit_index=self.commit_index,
+                                store=dict(self.store.data),
+                                session=dict(self._session),
+                                members=tuple(self.members)))
+        if nid not in self.members:
+            self.propose_reconfig("add_node", nid)
+
+    def on_Snapshot(self, msg: Snapshot) -> None:
+        if not self.joining or self._snap_installed:
+            return                         # only the first snapshot installs
+        self._snap_installed = True
+        if self._join_catch_up:
+            self.store.data = dict(msg.store)
+            self._session = dict(msg.session)
+        # state below the snapshot point arrives as *state*, not log: the
+        # applied log restarts here (the auditor checks joiner logs as a
+        # contiguous infix of the witness order)
+        self.applied_log = []
+        self.committed = {}
+        self.accepted = {s: v for s, v in self.accepted.items()
+                         if s > msg.commit_index}
+        self.commit_index = max(self.commit_index, msg.commit_index)
+        self.members = sorted(msg.members)
+        self._refresh_membership()
 
     # ============================================================== recovery
     def recover(self) -> None:
@@ -301,7 +458,7 @@ class PaxosNode(Node):
         # dropped and the discard timer was suppressed while down): forget
         # it so _learn_commit re-requests instead of wedging at that slot
         self._catching_up.clear()
-        if self.ballot[1] == self.id:
+        if self.ballot[1] == self.id and not self.removed:
             self.is_leader = False
             self.start_phase1()
 
@@ -324,19 +481,30 @@ class PaxosNode(Node):
             return None
         raise RuntimeError(f"unexpected inner {msg.kind}")
 
-    def _accept(self, msg: P2a) -> P2b:
+    def _accept(self, msg: P2a) -> Optional[P2b]:
         if msg.ballot >= self.promised:
             self.promised = msg.ballot
             self.accepted[msg.slot] = (msg.ballot, msg.cmd)
             self._learn_commit(msg.commit_index, msg.src)
+            if self.joining or self.removed:
+                return None    # learners/removed nodes follow but never vote
             r = P2b(ballot=msg.ballot, slot=msg.slot, ok=True)
         else:
+            if self.joining or self.removed:
+                return None
             r = P2b(ballot=self.promised, slot=msg.slot, ok=False)
         r.src = self.id
         return r
 
-    def _promise(self, msg: P1a) -> P1b:
+    def _promise(self, msg: P1a) -> Optional[P1b]:
+        if self.joining or self.removed:
+            return None        # non-members don't vote in elections either
         if msg.ballot > self.promised:
+            if self.is_leader:
+                # a live leader yielding to a higher ballot (planned handoff
+                # via replace_leader, or a competing campaign): step down so
+                # in-flight slots fail over to the new leader's phase-1
+                self._step_down(msg.ballot)
             self.promised = msg.ballot
             acc = {s: v for s, v in self.accepted.items()
                    if s > self.commit_index}
@@ -388,10 +556,14 @@ class PaxosNode(Node):
 
     # ====================================================== direct handlers
     def on_P2a(self, msg: P2a) -> None:
-        self.send(msg.src, self._accept(msg))
+        r = self._accept(msg)
+        if r is not None:       # None => non-voting learner/removed node
+            self.send(msg.src, r)
 
     def on_P1a(self, msg: P1a) -> None:
-        self.send(msg.src, self._promise(msg))
+        r = self._promise(msg)
+        if r is not None:
+            self.send(msg.src, r)
 
     def on_P3(self, msg: P3) -> None:
         self._learn_commit(msg.commit_index, msg.src)

@@ -23,6 +23,7 @@ changes the communication implementation (and hence inherits Paxos proofs).
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence
 
@@ -42,6 +43,17 @@ class PigConfig:
     gray_duration: float = 2.0
     gray_probe_prob: float = 0.02
     groups: Optional[List[List[int]]] = None   # explicit (e.g. per-region, §5.3)
+    # elasticity: re-derive R from the *current* membership on every
+    # re-partition (R ~ sqrt(N), the paper's §5.2 sweet spot) instead of
+    # keeping n_groups fixed while the cluster grows/shrinks
+    auto_groups: bool = False
+
+
+def auto_group_count(n_members: int) -> int:
+    """Elasticity policy for the relay-group count: R ~ sqrt(N-1) balances
+    the leader's R aggregates against each relay's (N-1)/R fan-out (paper
+    §5.2 finds the throughput plateau around this point)."""
+    return max(1, int(round(math.sqrt(max(n_members - 1, 1)))))
 
 
 def partition_followers(members: Sequence[int], r: int) -> List[List[int]]:
@@ -105,6 +117,10 @@ class DirectComm:
     def reply(self, to: int, msg: Msg) -> None:
         self.node.send(to, msg)
 
+    def set_members(self, members: Sequence[int]) -> None:
+        """Membership changed: rebuild the direct fan-out list."""
+        self.peers = [p for p in members if p != self.node.id]
+
     # no-op hooks so Paxos can stay comm-agnostic
     def note_commit(self, slot: int) -> None:
         pass
@@ -145,13 +161,26 @@ class PigComm:
         g = self._groups_cache.get(leader)
         if g is None:
             if self.cfg.groups is not None:
-                g = [[m for m in grp if m != leader] for grp in self.cfg.groups]
+                live = set(self.all_nodes)
+                g = [[m for m in grp if m != leader and m in live]
+                     for grp in self.cfg.groups]
                 g = [grp for grp in g if grp]
             else:
+                r = (auto_group_count(len(self.all_nodes))
+                     if self.cfg.auto_groups else self.cfg.n_groups)
                 g = self._partition([p for p in self.all_nodes if p != leader],
-                                    self.cfg.n_groups)
+                                    r)
             self._groups_cache[leader] = g
         return g
+
+    def set_members(self, members: Sequence[int]) -> None:
+        """Membership changed: re-partition the relay groups.  Cached
+        partitions (and the per-(leader, group) peer sets derived from them)
+        are invalidated; rounds already in flight complete or fail over to
+        the leader's timeout/retry path, which re-derives fresh groups."""
+        self.all_nodes = list(members)
+        self._groups_cache.clear()
+        self._peers_cache.clear()
 
     # ---------------------------------------------------------------- leader
     def _pick_relay(self, group: List[int]) -> int:

@@ -2,6 +2,15 @@
 layer.  This module exists to make the paper's composition explicit: there
 is intentionally no PigPaxos-specific consensus logic anywhere (§3.3 —
 "required almost no changes to the core Paxos code").
+
+Membership change composes the same way: the single-server reconfiguration
+commands live entirely in the Paxos core (``PaxosNode.propose_reconfig`` /
+``_apply_membership``), and the Pig overlay only reacts through
+``PigComm.set_members`` — applied configuration changes invalidate the
+cached ``pig.partition_followers`` relay partition, so the next round
+fans out over groups derived from the membership now in force.  Rounds in
+flight across a re-partition resolve through the leader's ordinary
+timeout/retry path (§3.4), exactly like a relay crash.
 """
 from __future__ import annotations
 

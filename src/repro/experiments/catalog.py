@@ -13,7 +13,9 @@ from __future__ import annotations
 import math
 
 from repro.core import PigConfig, WorkloadConfig
-from repro.faults import crash_window, slow_window, storm
+from repro.faults import (add_node, crash_window, remove_node,
+                          replace_leader, rolling_restart, slow_window,
+                          storm)
 
 from .registry import register
 from .scenario import Scenario
@@ -392,3 +394,94 @@ register(Scenario(
                  mean_downtime=0.15, seed=19, max_concurrent=2),
     audit=True, engine="fast", clients=(30,), seeds=(1, 2), quick_seeds=(1,),
     duration=1.5, warmup=0.3, quick_duration=1.2, collect=("timeline",)))
+
+# avail/prc: availability as a function of partial response collection
+# (satellite of PR 6): the SAME relay crash + gray-relay plan swept over
+# PRC in {0, 1, 2} — §4.1 predicts PRC>=1 masks the crashed relay's group
+# entirely (the leader proceeds on R-1 groups + partial responses) while
+# PRC=0 waits out every relay timeout, so the unavailability window and
+# dip depth should fall monotonically with PRC.
+for prc in (0, 1, 2):
+    register(Scenario(
+        name=f"avail/prc/N=25/PRC={prc}", protocol="pigpaxos", n=25,
+        pig=PigConfig(n_groups=3, prc=prc, use_gray_list=True),
+        workload=_AVAIL_WL, faults=_AVAIL_PLANS["relay"], audit=True,
+        engine="exact", grid_mode="curve", clients=(30,), seeds=(3,),
+        duration=2.2, warmup=0.3, quick_duration=1.2,
+        collect=("timeline",), quick_skip=(prc == 2)))
+
+# ======================================================================
+# Membership-change families (PR 6): reconfiguration, rolling upgrades,
+# and failover policies — all under the linearizability auditor, with the
+# replica set treated as time-varying (audit durability = final members).
+# ======================================================================
+
+# reconfig: single-server membership changes under closed-loop load.
+#   add     — a spare node (id N) joins from a leader snapshot + log
+#             suffix, then an add_node command commits through the log;
+#   remove  — follower N-1 is removed (quorums shrink mid-run);
+#   replace — the LEADER is removed (leadership moves to the next member)
+#             and a spare joins: a full node replacement;
+#   handoff — planned leader handoff via a higher-ballot phase-1 (the
+#             no-crash baseline for the failover family's windows).
+_RC_WL = WorkloadConfig(request_timeout=25e-3)
+_RC_PLANS = {
+    "add": lambda n: (add_node(n, 0.8), 1),
+    "remove": lambda n: (remove_node(n - 1, 0.8), 0),
+    "replace": lambda n: (remove_node(0, 0.7) + add_node(n, 1.1), 1),
+    "handoff": lambda n: (replace_leader(3, 0.8), 0),
+}
+for n in (25, 49):
+    for kind, mk in _RC_PLANS.items():
+        plan, spares = mk(n)
+        register(Scenario(
+            name=f"reconfig/{kind}/N={n}", protocol="pigpaxos", n=n,
+            pig=PigConfig(n_groups=3, prc=1, use_gray_list=True),
+            workload=_RC_WL, faults=plan, audit=True, spare_nodes=spares,
+            engine="exact" if n == 25 else "fast",
+            grid_mode="curve", clients=(30,), seeds=(3,),
+            duration=2.2, warmup=0.3, quick_duration=1.2,
+            collect=("timeline",),
+            quick_skip=(n == 49 or kind == "handoff")))
+# EPaxos membership change (leaderless): add a spare + remove a peer.
+register(Scenario(
+    name="reconfig/epaxos/N=25", protocol="epaxos", n=25,
+    workload=_RC_WL, faults=add_node(25, 0.8) + remove_node(3, 1.3),
+    audit=True, spare_nodes=1, engine="exact",
+    grid_mode="curve", clients=(30,), seeds=(3,),
+    duration=2.2, warmup=0.3, quick_duration=1.2,
+    collect=("timeline",), quick_skip=True))
+
+# rolling: restart every node in sequence (the rolling-upgrade model) with
+# the auditor on.  At most one node is ever down (gap > downtime); the
+# leader's own restart is the deep dip, follower restarts should barely
+# register.  The per-restart unavailability windows land in the artifact
+# (extras.per_fault_unavail_ms), one entry per node.
+for proto, quick_skip in (("pigpaxos", False), ("epaxos", True)):
+    register(Scenario(
+        name=f"rolling/{proto}/N=25", protocol=proto, n=25,
+        pig=PigConfig(n_groups=3, prc=1, use_gray_list=True)
+        if proto == "pigpaxos" else None,
+        workload=_RC_WL,
+        faults=rolling_restart(tuple(range(25)), t0=0.45,
+                               downtime=0.06, gap=0.14),
+        audit=True, engine="fast", grid_mode="curve",
+        clients=(30,), seeds=(3,),
+        duration=4.0, warmup=0.3, quick_duration=4.0,
+        collect=("timeline",), quick_skip=quick_skip))
+
+# failover: the leader crashes at t=0.8 and NEVER recovers; recovery is
+# entirely up to the external failover policy (runtime.FailoverPolicy),
+# swept over its detection budget.  The measured unavailability window
+# decomposes as crash->detect (the swept knob) + election + client retry,
+# so unavail_ms should track detect_timeout nearly 1:1.
+for detect_ms in (50, 100, 200):
+    register(Scenario(
+        name=f"failover/detect={detect_ms}ms", protocol="pigpaxos", n=25,
+        pig=PigConfig(n_groups=3, prc=1),
+        workload=_RC_WL, faults=crash_window(0, 0.8), audit=True,
+        failover={"detect_timeout": detect_ms * 1e-3,
+                  "check_interval": 0.01, "successor": "next"},
+        engine="exact", grid_mode="curve", clients=(30,), seeds=(3,),
+        duration=2.2, warmup=0.3, quick_duration=1.2,
+        collect=("timeline",), quick_skip=(detect_ms == 200)))

@@ -564,6 +564,84 @@ def _storm(arts, quick):
     return out
 
 
+def _reconfig(arts, quick):
+    """Reconfiguration family: throughput under membership change, the
+    membership events applied, the unavailability window, and the audit
+    verdict (checked against the time-varying membership)."""
+    out = []
+    for name, art in sorted(arts.items()):
+        rep = _rep(art)
+        if rep is None:
+            continue
+        ex = rep.get("extras") or {}
+        cfg = [ev for ev in (art.get("faults") or [])
+               if ev[0] in ("add_node", "remove_node", "replace_leader")]
+        evs = " ".join(f"{ev[0]}({ev[1]})@{ev[2]:.1f}s" for ev in cfg)
+        out.append(csv_row(
+            name, _wall(art), rep["count"],
+            f"tput={rep['throughput']:.0f}req/s events=[{evs}] "
+            f"unavail={ms(ex.get('unavail_ms')):.0f}ms "
+            f"retries={ex.get('client_retries', 0)} "
+            f"consistency={_consistency_tag(art)}"))
+    return out
+
+
+def _rolling(arts, quick):
+    """Rolling-upgrade family: every node restarted in sequence; reports
+    the per-restart unavailability windows (mean and worst) alongside the
+    restart count and the audit verdict."""
+    out = []
+    for name, art in sorted(arts.items()):
+        rep = _rep(art)
+        if rep is None:
+            continue
+        ex = rep.get("extras") or {}
+        per = ex.get("per_fault_unavail_ms") or []
+        ws = [p["unavail_ms"] for p in per if p["unavail_ms"] is not None]
+        bits = [f"tput={rep['throughput']:.0f}req/s",
+                f"restarts={len(per)}"]
+        if ws:
+            bits.append(f"unavail_per_restart_mean="
+                        f"{sum(ws) / len(ws):.0f}ms")
+            bits.append(f"unavail_per_restart_max={max(ws):.0f}ms")
+        bits.append(f"retries={ex.get('client_retries', 0)}")
+        bits.append(f"consistency={_consistency_tag(art)}")
+        out.append(csv_row(name, _wall(art), rep["count"], " ".join(bits)))
+    return out
+
+
+def _failover(arts, quick):
+    """Failover-policy family: the leader dies for good and the external
+    detector promotes a successor — per-detect rows plus the sweep summary
+    (unavailability should track detect_timeout nearly 1:1)."""
+    out = []
+    sweep = {}
+    for name, art in sorted(arts.items()):
+        rep = _rep(art)
+        if rep is None:
+            continue
+        ex = rep.get("extras") or {}
+        fo = ex.get("failover_events") or []
+        detect = ((art.get("spec") or {}).get("failover") or {}) \
+            .get("detect_timeout")
+        if detect is not None and ex.get("unavail_ms") is not None:
+            sweep[detect * 1e3] = ex["unavail_ms"]
+        out.append(csv_row(
+            name, _wall(art), rep["count"],
+            f"tput={rep['throughput']:.0f}req/s "
+            f"unavail={ms(ex.get('unavail_ms')):.0f}ms "
+            f"failovers={len(fo)} "
+            f"retries={ex.get('client_retries', 0)} "
+            f"consistency={_consistency_tag(art)}"))
+    if len(sweep) >= 2:
+        parts = " ".join(f"{d:.0f}ms->{u:.0f}ms"
+                         for d, u in sorted(sweep.items()))
+        out.append(csv_row("failover/summary", 0, 1,
+                           f"unavail vs detect: {parts} "
+                           f"(expect unavail ~= detect + election)"))
+    return out
+
+
 SUMMARIZERS = {
     "table1": _table1, "table2": _table2,
     "fig8": _fig8, "fig9": _fig9, "fig10": _fig10, "fig11": _fig11,
@@ -572,6 +650,7 @@ SUMMARIZERS = {
     "zipf": _zipf, "openloop": _openloop, "conflict": _conflict,
     "wan": _wan, "scale": _scale,
     "avail": _avail, "storm": _storm,
+    "reconfig": _reconfig, "rolling": _rolling, "failover": _failover,
 }
 
 

@@ -59,10 +59,16 @@ def _run_unit(payload) -> dict:
     c = Cluster(sc.protocol, sc.n, pig=sc.pig, seed=seed,
                 topo=build_topology(sc.topo),
                 leader_timeout=sc.leader_timeout, engine=sc.engine,
-                record_history=sc.audit)
+                record_history=sc.audit, spare_nodes=sc.spare_nodes)
     plan = sc.fault_plan()
+    evs = []
     if plan is not None:
-        apply_plan(c, plan, horizon=warmup + duration + 0.5)
+        evs = apply_plan(c, plan, horizon=warmup + duration + 0.5)
+    fo_events = None
+    if sc.failover is not None:
+        from repro.runtime.policy import FailoverPolicy, attach_failover
+        fo_events = attach_failover(c, FailoverPolicy(**sc.failover),
+                                    stop_at=warmup + duration)
     st = c.measure(duration=duration, warmup=warmup, clients=clients,
                    workload=sc.workload)
     unit = {
@@ -103,6 +109,32 @@ def _run_unit(payload) -> dict:
         extras["unavail_ms"] = _f(max(
             (b - a) for a, b in zip(edges, edges[1:])) * 1e3)
         extras["client_retries"] = sum(cl.retries for cl in c.clients)
+        # per-outage unavailability: for every crash/recover pair in the
+        # materialized plan, the longest completion gap inside the outage
+        # window (+0.25s tail for the recovery transient) — the per-restart
+        # metric rolling-upgrade scenarios report
+        open_crash = {}
+        per_fault = []
+        for ev in evs:
+            if ev[0] == "crash":
+                open_crash[ev[1]] = float(ev[2])
+            elif ev[0] == "recover" and ev[1] in open_crash:
+                ft0 = open_crash.pop(ev[1])
+                ft1 = float(ev[2])
+                lo, hi = max(ft0, warmup), min(ft1 + 0.25, stop)
+                if lo >= hi:
+                    continue
+                w = [lo] + [t for t in times if lo <= t <= hi] + [hi]
+                per_fault.append({
+                    "node": ev[1], "t0": _f(ft0), "t1": _f(ft1),
+                    "unavail_ms": _f(max(b - a for a, b in
+                                         zip(w, w[1:])) * 1e3)})
+        if per_fault:
+            extras["per_fault_unavail_ms"] = per_fault
+    if fo_events is not None:
+        extras["failover_events"] = [
+            {"t": _f(e["t"]), "from": e["from"], "to": e["to"]}
+            for e in fo_events]
     if sc.audit:
         res = audit_cluster(c)
         unit["consistency"] = "ok" if res.ok else "violation"

@@ -68,6 +68,12 @@ class Scenario:
     # can switch these to "batch" wholesale via backend_override
     batch_ok: bool = False
     leader_timeout: float = 50e-3
+    # spare (initially non-member) nodes available for add_node/replace
+    # membership events — DES only; node ids n..n+spare_nodes-1
+    spare_nodes: int = 0
+    # failover policy kwargs (repro.runtime.FailoverPolicy) armed on every
+    # DES unit: {"detect_timeout": s, "check_interval": s, "successor": ...}
+    failover: Optional[dict] = None
     collect: Tuple[str, ...] = ()            # extras: "per_node_msgs" | "flight" | "timeline"
     # quick-mode overrides (None -> use the full-mode value / skip nothing)
     quick_clients: Optional[Tuple[int, ...]] = None
@@ -85,7 +91,16 @@ class Scenario:
             validate_event(tuple(ev))
         plan = self.fault_plan()
         if plan is not None:
-            plan.validate_targets(self.n, self.horizon)
+            # membership events may target spares (ids n..n+spare_nodes-1)
+            plan.validate_targets(self.n + self.spare_nodes, self.horizon)
+        if self.spare_nodes and self.backend == "batch":
+            raise ValueError(
+                "batch backend does not support spare_nodes: membership "
+                "change needs a time-varying replica set — use the DES")
+        if self.failover is not None and self.backend == "batch":
+            raise ValueError(
+                "batch backend does not support failover policies — "
+                "use the DES")
         if self.backend == "batch":
             ok_collect = {"per_node_msgs"}
             if plan is not None:

@@ -17,5 +17,7 @@ picklable for pool workers and JSON-serializable for artifacts.
 """
 from .audit import (AuditResult, applied_ops, audit_cluster,  # noqa: F401
                     check_history, commit_apply_gap)
-from .plan import (FaultPlan, apply_plan, crash_window, drop_window,  # noqa: F401
-                   partition_window, periodic_crash, slow_window, storm)
+from .plan import (FaultPlan, add_node, apply_plan, crash_window,  # noqa: F401
+                   drop_window, partition_window, periodic_crash,
+                   remove_node, replace_leader, rolling_restart,
+                   slow_window, storm)

@@ -9,13 +9,18 @@ check verifies, per key, that this witness order is a *valid* linearization
 of what the clients observed:
 
 1. **replica agreement** — every node's per-key applied projection is a
-   prefix of the longest one (for (Pig)Paxos the whole log is totally
-   ordered; for EPaxos only interfering — same-key — commands are ordered,
-   which is exactly the per-key projection);
+   contiguous *window* of one merged witness order (for (Pig)Paxos the whole
+   log is totally ordered; for EPaxos only interfering — same-key — commands
+   are ordered, which is exactly the per-key projection).  Windows rather
+   than prefixes because the replica set is time-varying: a node joined from
+   a snapshot starts applying mid-stream, a removed node stops early, and
+   the current leader applies at commit so it can run ahead of every
+   follower's end;
 2. **at-most-once** — no ``(client_id, seq)`` appears twice in the witness
    (client timeout-retries must not double-apply);
 3. **durability** — every operation a client saw complete (``ok`` reply)
-   appears in some replica's log;
+   appears in the log of some replica in the FINAL membership (a copy held
+   only by a removed node does not count — the cluster walked away from it);
 4. **real-time order** — if operation A completed before operation B was
    invoked (on the same key), A precedes B in the witness;
 5. **read values** — every completed ``get`` returned the value written by
@@ -65,12 +70,16 @@ def applied_ops(node) -> List[Tuple[int, int, str, int]]:
 
 
 def check_history(history: List[dict],
-                  logs: List[List[Tuple[int, int, str, int]]]) -> AuditResult:
+                  logs: List[List[Tuple[int, int, str, int]]],
+                  durable_logs: Optional[List[int]] = None) -> AuditResult:
     """Run the five checks above.  ``history`` entries are dicts with keys
     ``cid, seq, op, key, invoke, resp, ok, rtag, wtag`` (``resp`` None for
     incomplete ops; ``rtag`` is the tag of the value a get returned, ``wtag``
     the tag a put wrote — both None-able).  ``logs`` is one (cid, seq, op,
-    key) list per replica, in that replica's apply order."""
+    key) list per replica, in that replica's apply order.  ``durable_logs``
+    names the indices into ``logs`` that count for the durability check —
+    the membership in force at the end of the run; None means all replicas
+    (the fixed-membership case)."""
     res = AuditResult(ok=True)
     hist: Dict[Tuple[int, int], dict] = {}
     for h in history:
@@ -82,23 +91,57 @@ def check_history(history: List[dict],
         if len(res.violations) < _MAX_VIOLATIONS:
             res.violations.append(msg)
 
-    # per-key projections per replica
+    # per-key projections per replica (data ops only — membership-change
+    # commands ride the same logs but their "key" is a node id, not a
+    # register, so they are excluded from the linearizability space)
     proj: List[Dict[int, list]] = []
     for lg in logs:
         p: Dict[int, list] = {}
         for (cid, seq, op, key) in lg:
-            p.setdefault(key, []).append((cid, seq, op))
+            if op in ("put", "get"):
+                p.setdefault(key, []).append((cid, seq, op))
         proj.append(p)
 
-    seen_global = set()
     for key in sorted({k for p in proj for k in p}):
         ps = [p[key] for p in proj if key in p]
-        witness = max(ps, key=len)
-        for i, p in enumerate(ps):
-            if p != witness[:len(p)]:
-                violate(f"replica divergence on key {key}: one replica's "
-                        f"apply order is not a prefix of the longest")
-                break
+        # Merge the per-replica orders into one witness.  Every replica's
+        # projection must be a contiguous *window* of a single total order:
+        # long-lived replicas hold prefixes, snapshot-joined replicas hold
+        # infixes, and the current leader can overhang everyone's end (it
+        # applies at commit; followers apply when the commit message lands).
+        # Windows must agree wherever they overlap; consistent overhangs are
+        # grafted onto the witness so the downstream checks cover them too.
+        witness = list(max(ps, key=len))
+        for p in ps:
+            if not p or p == witness[:len(p)]:
+                continue                              # prefix: the usual case
+            pos = {e: i for i, e in enumerate(witness)}
+            if p[0] in pos:
+                j = pos[p[0]]
+                k = min(len(p), len(witness) - j)
+                ext = p[k:]                   # overhang past the witness end
+                # grafted entries must be NEW — an "overhang" that re-orders
+                # entries already in the witness is a cycle, i.e. divergence
+                if p[:k] != witness[j:j + k] or any(e in pos for e in ext):
+                    violate(f"replica divergence on key {key}: one replica's "
+                            f"apply order conflicts with the merged witness "
+                            f"order on their overlap")
+                    break
+                witness.extend(ext)
+            elif witness[0] in p:
+                j = p.index(witness[0])
+                k = min(len(witness), len(p) - j)
+                head, tail = p[:j], p[j + k:]
+                if witness[:k] != p[j:j + k] or \
+                        any(e in pos for e in head) or \
+                        any(e in pos for e in tail):
+                    violate(f"replica divergence on key {key}: one replica's "
+                            f"apply order conflicts with the merged witness "
+                            f"order on their overlap")
+                    break
+                witness[:0] = head            # p starts earlier: prepend head
+                witness.extend(tail)
+            # else: windows are disjoint — no shared history to cross-check
         last_put: Optional[Tuple[int, int]] = None
         max_invoke = -_INF
         seen_key = set()
@@ -108,7 +151,6 @@ def check_history(history: List[dict],
                 violate(f"duplicate apply of op (client={cid}, seq={seq}) "
                         f"on key {key} — at-most-once violated")
             seen_key.add((cid, seq))
-            seen_global.add((cid, seq))
             h = hist.get((cid, seq))
             if h is not None and h.get("key") == key:
                 resp = h["resp"] if (h.get("ok") and h["resp"] is not None) \
@@ -130,18 +172,32 @@ def check_history(history: List[dict],
             if op == "put":
                 last_put = (cid, seq)
 
+    # durability: every acknowledged op must survive on a replica that is
+    # still a member at the end of the run
+    idxs = range(len(logs)) if durable_logs is None else durable_logs
+    durable_seen = set()
+    for i in idxs:
+        for (cid, seq, _op, _key) in logs[i]:
+            durable_seen.add((cid, seq))
+    where = "every replica's" if durable_logs is None \
+        else "every final-membership replica's"
     for h in history:
-        if h.get("ok") and (h["cid"], h["seq"]) not in seen_global:
+        if h.get("ok") and (h["cid"], h["seq"]) not in durable_seen:
             violate(f"acknowledged op (client={h['cid']}, seq={h['seq']}) "
-                    f"on key {h['key']} is missing from every replica's "
+                    f"on key {h['key']} is missing from {where} "
                     f"applied log — lost update")
     return res
 
 
 def audit_cluster(cluster) -> AuditResult:
-    """Audit one finished DES run (``Cluster(record_history=True)``)."""
+    """Audit one finished DES run (``Cluster(record_history=True)``).
+    Clusters that track a time-varying membership restrict durability to the
+    replicas in the final membership."""
+    members = getattr(cluster, "members", None)
+    durable = sorted(members) if members is not None else None
     return check_history(client_histories(cluster),
-                         [applied_ops(nd) for nd in cluster.nodes])
+                         [applied_ops(nd) for nd in cluster.nodes],
+                         durable_logs=durable)
 
 
 def commit_apply_gap(cluster) -> int:

@@ -44,12 +44,18 @@ _INF = float("inf")
 #   ("partition_oneway", a, b, t) / ("heal_oneway", a, b, t)  a -> b only
 #   ("slow", node, t0, t1, extra_latency_s, latency_factor)
 #   ("drop", node, t0, t1, drop_prob)
+#   ("add_node", node, t) / ("remove_node", node, t)   membership change
+#   ("replace_leader", node, t)                        planned handoff
 EVENT_ARITY = {
     "crash": 3, "recover": 3,
     "partition": 4, "heal": 4,
     "partition_oneway": 4, "heal_oneway": 4,
     "slow": 6, "drop": 5,
+    "add_node": 3, "remove_node": 3, "replace_leader": 3,
 }
+
+# membership-change kinds: DES-only (the batch model's replica set is fixed)
+_MEMBERSHIP_KINDS = ("add_node", "remove_node", "replace_leader")
 
 # kinds the batch backend can express as masks (see to_masks)
 _MASK_KINDS = ("crash", "recover", "slow")
@@ -135,7 +141,9 @@ class FaultPlan:
     def validate_targets(self, n: int, horizon: float) -> None:
         """Every materialized event must target node ids < ``n`` — the
         registry-time guard: a typo'd id fails at registration, not as an
-        IndexError halfway through a suite run."""
+        IndexError halfway through a suite run.  For plans with membership
+        events, pass the TOTAL node count (members + spares): ``add_node``
+        legitimately names a node outside the initial membership."""
         for ev in self.materialize(horizon):
             nodes = (ev[1], ev[2]) if ev[0] in (
                 "partition", "heal", "partition_oneway", "heal_oneway") \
@@ -157,10 +165,11 @@ class FaultPlan:
     def _max_node(self, horizon: float) -> int:
         nodes = [0]
         for ev in self.materialize(horizon):
-            if ev[0] in ("crash", "recover", "slow", "drop"):
-                nodes.append(int(ev[1]))
-            else:
+            if ev[0] in ("partition", "heal", "partition_oneway",
+                         "heal_oneway"):
                 nodes.extend((int(ev[1]), int(ev[2])))
+            else:           # single-node kinds (ev[2] may be a time, not a node)
+                nodes.append(int(ev[1]))
         return max(nodes)
 
     def to_masks(self, n: int, horizon: float,
@@ -201,6 +210,26 @@ class FaultPlan:
                         "batch masks support only whole-run additive slow "
                         f"nodes (factor=1, window [0, horizon)); got {ev!r}")
                 slow[node] += extra
+            elif kind in _MEMBERSHIP_KINDS:
+                raise ValueError(
+                    f"fault kind {kind!r} is not mask-expressible: the batch "
+                    "backend models a FIXED replica set with per-node "
+                    "availability windows, and membership change needs a "
+                    "time-varying replica set — use the DES "
+                    "(engine='exact'/'fast')")
+            elif kind in ("partition", "heal", "partition_oneway",
+                          "heal_oneway"):
+                raise ValueError(
+                    f"fault kind {kind!r} is not mask-expressible: the batch "
+                    "backend has per-node availability masks but no per-link "
+                    "connectivity state, so partitions cannot be lowered — "
+                    "use the DES (engine='exact'/'fast')")
+            elif kind == "drop":
+                raise ValueError(
+                    "fault kind 'drop' is not mask-expressible: probabilistic "
+                    "per-message loss needs per-message randomness the "
+                    "round-level batch model does not simulate — use the DES "
+                    "(engine='exact'/'fast')")
             else:
                 raise ValueError(f"fault kind {kind!r} is not "
                                  "mask-expressible — use the DES")
@@ -252,6 +281,42 @@ def drop_window(node: int, t0: float, t1: float, prob: float) -> FaultPlan:
     """Gray/lossy node: hops touching ``node`` in [t0, t1) drop w.p. ``prob``."""
     return FaultPlan(events=(("drop", node, float(t0), float(t1),
                               float(prob)),))
+
+
+def add_node(node: int, t: float) -> FaultPlan:
+    """Join spare ``node`` to the cluster at ``t``: the node catches up from
+    a leader snapshot + log suffix, then the leader commits a single-server
+    ``add_node`` reconfiguration through the normal log."""
+    return FaultPlan(events=(("add_node", int(node), float(t)),))
+
+
+def remove_node(node: int, t: float) -> FaultPlan:
+    """Remove ``node`` from the membership at ``t`` via a single-server
+    reconfiguration command (the node may be the leader — leadership moves)."""
+    return FaultPlan(events=(("remove_node", int(node), float(t)),))
+
+
+def replace_leader(node: int, t: float) -> FaultPlan:
+    """Planned leadership handoff: ``node`` runs phase-1 with a higher ballot
+    at ``t``; the sitting leader steps down on seeing the higher promise."""
+    return FaultPlan(events=(("replace_leader", int(node), float(t)),))
+
+
+def rolling_restart(nodes: Sequence[int], t0: float, downtime: float = 0.06,
+                    gap: float = 0.15) -> FaultPlan:
+    """Restart every node in ``nodes`` in sequence: node i crashes at
+    ``t0 + i*gap`` and recovers ``downtime`` later.  ``gap`` must exceed
+    ``downtime`` so at most one node is ever down (the rolling-upgrade
+    availability model)."""
+    if gap <= downtime:
+        raise ValueError(f"rolling_restart gap ({gap}) must exceed downtime "
+                         f"({downtime}) — otherwise restarts overlap")
+    evs: List[tuple] = []
+    for i, node in enumerate(nodes):
+        t = float(t0) + i * float(gap)
+        evs.append(("crash", int(node), t))
+        evs.append(("recover", int(node), t + float(downtime)))
+    return FaultPlan(events=tuple(evs))
 
 
 def periodic_crash(node: int, period: float, downtime: float,
@@ -358,6 +423,12 @@ def apply_plan(cluster, plan: FaultPlan, horizon: float = _INF) -> List[tuple]:
             sched.at(t0, lambda n=node, p=prob: net.degrade(n, drop_prob=p))
             if t1 < _INF:
                 sched.at(t1, lambda n=node: net.restore(n))
+        elif kind == "add_node":
+            sched.at(ev[2], lambda n=ev[1]: cluster.add_node(n))
+        elif kind == "remove_node":
+            sched.at(ev[2], lambda n=ev[1]: cluster.remove_node(n))
+        elif kind == "replace_leader":
+            sched.at(ev[2], lambda n=ev[1]: cluster.replace_leader(n))
     return evs
 
 

@@ -1,0 +1,117 @@
+"""Failover and elasticity policies over the DES cluster.
+
+This promotes the pod-level ideas in :mod:`repro.runtime.elastic`
+(HeartbeatMonitor liveness detection, ElasticController membership-driven
+resharding) into policies that drive the *replication* cluster itself:
+
+* :class:`FailoverPolicy` + :func:`attach_failover` — a virtual-time failure
+  detector that watches cluster-wide commit progress and, when the committed
+  count stalls past ``detect_timeout`` while the known leader is dead (or has
+  lost leadership), nominates a successor to run phase-1.  This models an
+  external orchestrator with a configurable detection budget, so failover
+  sweeps can measure the unavailability window as a function of
+  ``detect_timeout`` — independent of the protocol's own ``leader_timeout``
+  retry machinery.
+* :class:`ElasticityPolicy` — sizing rules for PigPaxos under membership
+  change: the relay-group count tracks sqrt(followers) as nodes come and go
+  (§3.2's balance point between leader fan-out and relay depth).
+
+Policies are plain data + one attach function; they touch the cluster only
+through its public surface (``members``, ``leader_id``, ``nodes``,
+``sched``), so they work on both DES engines.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+from ..core.pig import auto_group_count
+
+_INF = float("inf")
+
+
+@dataclass(frozen=True)
+class FailoverPolicy:
+    """External-detector failover: declare the leader failed after commit
+    progress stalls for ``detect_timeout`` virtual seconds, then promote a
+    successor.  ``successor`` picks who: ``"next"`` = the first live member
+    after the failed leader's id (wrapping), ``"lowest"`` = the lowest live
+    member id."""
+
+    detect_timeout: float = 0.1
+    check_interval: float = 0.02
+    successor: str = "next"
+
+    def __post_init__(self):
+        if self.successor not in ("next", "lowest"):
+            raise ValueError(f"unknown successor rule {self.successor!r}")
+        if self.check_interval <= 0 or self.detect_timeout <= 0:
+            raise ValueError("failover intervals must be positive")
+
+
+def attach_failover(cluster, policy: FailoverPolicy,
+                    stop_at: float = _INF) -> List[dict]:
+    """Arm ``policy`` on ``cluster``; returns the (live) failover event list
+    — one ``{"t", "from", "to"}`` dict per promotion, filled in as the run
+    executes, so callers can record it in artifacts afterwards."""
+    events: List[dict] = []
+    state = {"count": -1, "progress_at": cluster.sched.now}
+
+    def _total_committed() -> int:
+        return sum(getattr(cluster.nodes[i], "committed_count", 0)
+                   for i in cluster.members)
+
+    def _live() -> List[int]:
+        return [i for i in cluster.members
+                if not cluster.nodes[i].crashed
+                and not getattr(cluster.nodes[i], "joining", False)]
+
+    def _pick(cur: Optional[int]) -> Optional[int]:
+        live = [i for i in _live() if i != cur]
+        if not live:
+            return None
+        if policy.successor == "lowest":
+            return live[0]
+        pivot = -1 if cur is None else cur
+        return next((i for i in live if i > pivot), live[0])
+
+    def _leader_ok() -> bool:
+        lid = cluster.leader_id
+        if lid is None or lid not in cluster.members:
+            return False
+        nd = cluster.nodes[lid]
+        return not nd.crashed and nd.is_leader
+
+    def _tick() -> None:
+        now = cluster.sched.now
+        if now >= stop_at:
+            return
+        total = _total_committed()
+        if total != state["count"]:
+            state["count"] = total
+            state["progress_at"] = now
+        elif (not _leader_ok()
+              and now - state["progress_at"] >= policy.detect_timeout):
+            succ = _pick(cluster.leader_id)
+            if succ is not None:
+                events.append({"t": now, "from": cluster.leader_id,
+                               "to": succ})
+                state["progress_at"] = now     # election gets one full budget
+                cluster.nodes[succ].start_phase1()
+        cluster.sched.after(policy.check_interval, _tick)
+
+    cluster.sched.after(policy.check_interval, _tick)
+    return events
+
+
+@dataclass(frozen=True)
+class ElasticityPolicy:
+    """Relay-group sizing under a changing membership: keep the PigPaxos
+    group count at sqrt(followers) as nodes join and leave, re-deriving the
+    partition from the membership in force (``PigConfig.auto_groups`` makes
+    the comm layer apply this automatically on every reconfiguration)."""
+
+    track_sqrt_groups: bool = True
+
+    def groups_for(self, n_members: int) -> int:
+        return auto_group_count(n_members)

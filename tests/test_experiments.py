@@ -19,6 +19,8 @@ def test_catalog_covers_all_paper_reproductions():
     assert {"zipf", "openloop", "conflict"} <= fams
     # the fault-injection families (ISSUE 4)
     assert {"avail", "storm"} <= fams
+    # the membership-change families (PR 6)
+    assert {"reconfig", "rolling", "failover"} <= fams
 
 
 def test_every_family_has_a_summarizer():

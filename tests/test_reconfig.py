@@ -1,0 +1,282 @@
+"""Membership change as a first-class fault (PR 6): single-server
+reconfiguration through the normal log on all three DES protocols, joiner
+catch-up (snapshot + log suffix), the one-at-a-time invariant, rolling
+restarts, failover policies, the time-varying-membership auditor, and the
+deliberately broken control (catch-up disabled) the auditor must catch."""
+import pytest
+
+from repro.core import Cluster, PigConfig, WorkloadConfig, agreement_ok
+from repro.faults import (add_node, apply_plan, audit_cluster,
+                          commit_apply_gap, crash_window, remove_node,
+                          replace_leader, rolling_restart)
+from repro.runtime import FailoverPolicy, attach_failover
+
+WL_RT = WorkloadConfig(request_timeout=25e-3)
+
+
+# ===================================================== add / remove under load
+def test_add_node_under_load_audits_clean():
+    """A spare joins mid-run: snapshot + log suffix, then the add_node cfg
+    command commits; every live node converges on the grown membership and
+    the audit (agreement as infix, durability over final members) is green.
+    """
+    for proto in ("pigpaxos", "epaxos"):
+        pig = PigConfig(n_groups=2, prc=1) if proto == "pigpaxos" else None
+        c = Cluster(proto, 5, pig=pig, seed=11, engine="exact",
+                    record_history=True, spare_nodes=1)
+        apply_plan(c, add_node(5, 0.25), horizon=2.0)
+        c.measure(duration=0.6, warmup=0.1, clients=6, workload=WL_RT)
+        assert c.members == [0, 1, 2, 3, 4, 5], proto
+        assert sorted(c.nodes[5].members) == [0, 1, 2, 3, 4, 5], proto
+        assert not c.nodes[5].joining, proto
+        res = audit_cluster(c)
+        assert res.ok, (proto, res.violations)
+        assert res.completed > 0
+
+
+def test_remove_follower_shrinks_quorums_and_audits_clean():
+    for proto in ("pigpaxos", "epaxos"):
+        pig = PigConfig(n_groups=2, prc=1) if proto == "pigpaxos" else None
+        c = Cluster(proto, 5, pig=pig, seed=3, engine="exact",
+                    record_history=True)
+        apply_plan(c, remove_node(4, 0.25), horizon=2.0)
+        c.measure(duration=0.6, warmup=0.1, clients=6, workload=WL_RT)
+        assert c.members == [0, 1, 2, 3], proto
+        # a live member's quorum math now runs over 4 nodes
+        survivor = c.nodes[0]
+        assert sorted(survivor.members) == [0, 1, 2, 3], proto
+        res = audit_cluster(c)
+        assert res.ok, (proto, res.violations)
+
+
+def test_remove_the_leader_moves_leadership():
+    c = Cluster("pigpaxos", 5, pig=PigConfig(n_groups=2), seed=7,
+                engine="exact", record_history=True)
+    apply_plan(c, remove_node(0, 0.25), horizon=2.0)
+    c.measure(duration=0.6, warmup=0.1, clients=6, workload=WL_RT)
+    assert c.members == [1, 2, 3, 4]
+    assert c.leader_id != 0
+    assert c.nodes[0].removed and not c.nodes[0].is_leader
+    # service resumed under the new leader
+    post = [t for cl in c.clients for (t, _l) in cl.latencies if t > 0.4]
+    assert post
+    res = audit_cluster(c)
+    assert res.ok, res.violations
+
+
+def test_add_during_leader_crash_lands_after_recovery():
+    """JoinReq retries ride out a crashed leader: the join request keeps
+    re-arming until a leader answers, so an add issued mid-outage completes
+    once the leader recovers (or a new one is elected)."""
+    c = Cluster("pigpaxos", 5, pig=PigConfig(n_groups=2), seed=5,
+                engine="exact", record_history=True, spare_nodes=1)
+    apply_plan(c, crash_window(0, 0.3, 0.6) + add_node(5, 0.35), horizon=3.0)
+    c.measure(duration=1.2, warmup=0.1, clients=6, workload=WL_RT)
+    assert 5 in c.members
+    assert not c.nodes[5].joining
+    res = audit_cluster(c)
+    assert res.ok, res.violations
+
+
+# ================================================== one-at-a-time invariant
+def test_concurrent_reconfig_rejected_paxos():
+    c = Cluster("paxos", 5, seed=1, engine="exact")
+    c.run(until=0.1)                       # initial election settles
+    leader = c.nodes[c.leader_id]
+    assert leader.propose_reconfig("remove_node", 4)
+    # second cfg while the first is in flight: refused
+    assert not leader.propose_reconfig("remove_node", 3)
+    c.run(until=0.5)                       # first cfg applies
+    assert c.members == [0, 1, 2, 3]
+    assert leader.propose_reconfig("remove_node", 3)
+    c.run(until=0.9)
+    assert c.members == [0, 1, 2]
+
+
+def test_concurrent_reconfig_rejected_epaxos():
+    c = Cluster("epaxos", 5, seed=1, engine="exact")
+    c.run(until=0.1)
+    nd = c.nodes[0]
+    assert nd.propose_reconfig("remove_node", 4)
+    assert not nd.propose_reconfig("remove_node", 3)
+    c.run(until=0.5)
+    assert c.members == [0, 1, 2, 3]
+    # no-op reconfigs are refused outright
+    assert not nd.propose_reconfig("remove_node", 4)
+    assert not c.nodes[1].propose_reconfig("add_node", 2)
+
+
+# ============================================================ leader handoff
+def test_replace_leader_planned_handoff():
+    """A higher-ballot phase-1 from the nominee makes the incumbent step
+    down — leadership moves with no crash and service continues."""
+    c = Cluster("pigpaxos", 5, pig=PigConfig(n_groups=2), seed=9,
+                engine="exact", record_history=True)
+    apply_plan(c, replace_leader(3, 0.3), horizon=2.0)
+    c.measure(duration=0.6, warmup=0.1, clients=6, workload=WL_RT)
+    assert c.leader_id == 3
+    assert c.nodes[3].is_leader and not c.nodes[0].is_leader
+    post = [t for cl in c.clients for (t, _l) in cl.latencies if t > 0.45]
+    assert post
+    res = audit_cluster(c)
+    assert res.ok, res.violations
+
+
+# =========================================================== rolling restart
+def test_rolling_restart_full_cycle_audits_clean():
+    """Every node restarted in sequence (leader first) under closed-loop
+    load: zero violations, zero lost acknowledged writes, and the cluster
+    settles with committed == applied."""
+    c = Cluster("pigpaxos", 7, pig=PigConfig(n_groups=2, prc=1), seed=13,
+                engine="exact", record_history=True)
+    plan = rolling_restart(tuple(range(7)), t0=0.2, downtime=0.05, gap=0.12)
+    evs = apply_plan(c, plan, horizon=3.0)
+    assert sum(1 for ev in evs if ev[0] == "crash") == 7
+    st = c.measure(duration=1.0, warmup=0.1, clients=6, workload=WL_RT)
+    assert st.committed > 0
+    res = audit_cluster(c)
+    assert res.ok, res.violations
+    assert res.completed > 0
+    c.run(until=3.0)                        # settle
+    assert commit_apply_gap(c) == 0
+    assert agreement_ok(c)
+
+
+def test_rolling_restart_rejects_overlapping_windows():
+    with pytest.raises(ValueError, match="exceed downtime"):
+        rolling_restart((0, 1, 2), t0=0.1, downtime=0.2, gap=0.1)
+
+
+# =========================================================== failover policy
+def test_failover_policy_promotes_successor():
+    """Leader dies for good; the external detector notices the commit stall
+    and promotes the next live member — service resumes and the audit stays
+    green across the handover."""
+    c = Cluster("pigpaxos", 5, pig=PigConfig(n_groups=2), seed=17,
+                engine="exact", record_history=True)
+    apply_plan(c, crash_window(0, 0.3), horizon=2.0)
+    events = attach_failover(
+        c, FailoverPolicy(detect_timeout=0.05, check_interval=0.01),
+        stop_at=0.8)
+    c.measure(duration=0.7, warmup=0.1, clients=6, workload=WL_RT)
+    assert events and events[0]["to"] != 0
+    assert c.leader_id != 0 and c.nodes[c.leader_id].is_leader
+    post = [t for cl in c.clients for (t, _l) in cl.latencies if t > 0.5]
+    assert post
+    res = audit_cluster(c)
+    assert res.ok, res.violations
+
+
+def test_failover_policy_validates():
+    with pytest.raises(ValueError, match="successor"):
+        FailoverPolicy(successor="coin-flip")
+    with pytest.raises(ValueError, match="positive"):
+        FailoverPolicy(detect_timeout=0.0)
+
+
+# ================================================== broken control (auditor)
+def test_broken_catchup_control_is_caught_by_auditor():
+    """The acceptance-criterion control: a joiner with state transfer
+    DISABLED (catch_up=False) becomes leader and serves reads from its
+    empty store — the auditor must flag the run.  The identical run with
+    catch-up on is green.  The key space is wide enough (512, uniform)
+    that many keys are written before the join and only *read* after the
+    handoff — exactly the reads a skipped snapshot corrupts; a handful of
+    hot keys would mask the hole behind constant re-puts."""
+    def run(catch_up):
+        wl = WorkloadConfig(request_timeout=25e-3, n_keys=512)
+        c = Cluster("pigpaxos", 5, pig=PigConfig(n_groups=2), seed=21,
+                    engine="exact", record_history=True, spare_nodes=1)
+        c.sched.at(0.25, lambda: c.add_node(5, catch_up=catch_up))
+        apply_plan(c, replace_leader(5, 0.55), horizon=2.0)
+        c.measure(duration=0.8, warmup=0.1, clients=8, workload=wl)
+        assert 5 in c.members
+        assert c.leader_id == 5
+        return audit_cluster(c)
+
+    good = run(catch_up=True)
+    assert good.ok, good.violations
+    bad = run(catch_up=False)
+    assert not bad.ok
+    assert any("stale" in v or "lost update" in v for v in bad.violations)
+
+
+# ====================================== satellite: reconfig-free golden pin
+def test_reconfig_free_runs_stay_bit_identical_to_seed():
+    """The membership machinery must be invisible when no reconfiguration
+    happens: exact-engine traces stay bit-identical to the verbatim seed
+    stack (engine='ref') for pigpaxos AND epaxos."""
+    def run(proto, engine):
+        pig = (PigConfig(n_groups=2, prc=1) if proto == "pigpaxos" else None)
+        c = Cluster(proto, 5, pig=pig, seed=23, engine=engine)
+        st = c.measure(duration=0.3, warmup=0.1, clients=8)
+        logs = [[(cmd.client_id, cmd.seq, cmd.key) for _s, cmd in
+                 nd.applied_log] for nd in c.nodes]
+        return logs, st.committed, c.sched.events, c.sched._seq
+
+    for proto in ("pigpaxos", "epaxos"):
+        assert run(proto, "exact") == run(proto, "ref"), proto
+
+
+# =================================== satellite: batch-boundary loud errors
+def test_membership_plans_are_des_only_with_loud_error():
+    plan = add_node(5, 0.3)
+    assert not plan.mask_expressible(1.0)
+    with pytest.raises(ValueError, match="time-varying replica set"):
+        plan.to_masks(6, 1.0)
+    with pytest.raises(ValueError, match="time-varying replica set"):
+        (remove_node(2, 0.3)).to_masks(6, 1.0)
+
+
+def test_partition_and_drop_mask_errors_name_the_boundary():
+    from repro.faults import drop_window, partition_window
+    with pytest.raises(ValueError, match="per-link connectivity"):
+        partition_window(1, 2, 0.1, 0.2).to_masks(5, 1.0)
+    with pytest.raises(ValueError, match="per-message randomness"):
+        drop_window(1, 0.1, 0.2, 0.5).to_masks(5, 1.0)
+
+
+def test_scenario_rejects_membership_on_batch_and_ref():
+    from repro.experiments.scenario import Scenario
+    with pytest.raises(ValueError, match="spare_nodes"):
+        Scenario(name="t/bad", protocol="pigpaxos", n=5,
+                 pig=PigConfig(n_groups=2), backend="batch", spare_nodes=1)
+    with pytest.raises(ValueError, match="failover"):
+        Scenario(name="t/bad2", protocol="paxos", n=5, backend="batch",
+                 failover={"detect_timeout": 0.1})
+    with pytest.raises(ValueError, match="ref"):
+        Cluster("paxos", 5, engine="ref", spare_nodes=1)
+    # membership events may target spares: n + spare_nodes is the bound
+    sc = Scenario(name="t/ok", protocol="pigpaxos", n=5,
+                  pig=PigConfig(n_groups=2), spare_nodes=1,
+                  faults=add_node(5, 0.3), audit=True,
+                  clients=(4,), seeds=(1,), duration=0.5, warmup=0.1)
+    assert sc.fault_plan() is not None
+    with pytest.raises(ValueError, match="targets node 6"):
+        Scenario(name="t/bad3", protocol="pigpaxos", n=5,
+                 pig=PigConfig(n_groups=2), spare_nodes=1,
+                 faults=add_node(6, 0.3))
+
+
+# =========================================== experiment-layer registration
+def test_membership_families_registered_and_wired():
+    from repro import experiments
+    from repro.experiments import report
+
+    fams = set(experiments.families())
+    assert {"reconfig", "rolling", "failover"} <= fams
+    assert {"reconfig", "rolling", "failover"} <= set(report.SUMMARIZERS)
+    names = {s.name for s in experiments.select("reconfig")}
+    assert {"reconfig/add/N=25", "reconfig/remove/N=25",
+            "reconfig/replace/N=25", "reconfig/epaxos/N=25"} <= names
+    rolling = {s.name for s in experiments.select("rolling")}
+    assert "rolling/pigpaxos/N=25" in rolling
+    for s in experiments.select("reconfig,rolling,failover"):
+        assert s.audit and s.backend == "des"
+        assert s.fault_plan() is not None
+    # the rolling acceptance scenario restarts ALL 25 nodes even in quick
+    sc = next(s for s in experiments.select("rolling/pigpaxos/N=25"))
+    rs = sc.resolve(quick=True)
+    evs = sc.fault_plan().materialize(rs.warmup + rs.duration + 0.5)
+    assert sum(1 for ev in evs if ev[0] == "crash") == 25
+    assert sum(1 for ev in evs if ev[0] == "recover") == 25
