@@ -1,15 +1,22 @@
 """Kernel micro-bench: Pallas (interpret on CPU) vs jnp reference — numbers
 here measure the *oracle agreement path*, not TPU performance (CPU-only
-container); flops are reported for the roofline context."""
+container); flops are reported for the roofline context.  Timings land in
+``BENCH_kernels.json`` at the repo root (committed)."""
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ops, ref
 from repro.kernels.pig_aggregate import quantize_blockwise
 
 from .common import Timer, row
+
+BENCH_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_kernels.json")
 
 
 def _time(fn, *args, reps=3):
@@ -18,6 +25,26 @@ def _time(fn, *args, reps=3):
     for _ in range(reps):
         jax.block_until_ready(fn(*args))
     return (time.time() - t0) / reps
+
+
+def _fanin_case(key, B, G, gsize, mask_per_seg=1):
+    """A vectorsim-shaped fan-in burst: F = G*gsize contiguous slots,
+    segment-constant coef/kcap, one +inf masked slot per segment (a down
+    follower), kcap <= gsize - 2 so every segment stays consumable."""
+    F = G * gsize
+    ks = jax.random.split(key, 4)
+    vals = jax.random.uniform(ks[0], (B, F), jnp.float32, 1.0, 2.0)
+    segid = jnp.repeat(jnp.arange(G), gsize)
+    coef = jnp.repeat(jax.random.uniform(ks[1], (B, G), jnp.float32,
+                                         0.0, 1e-3), gsize, axis=1)
+    kcap = jnp.repeat(
+        jax.random.randint(ks[2], (G,), 0, gsize - mask_per_seg),
+        gsize).astype(jnp.float32)
+    if mask_per_seg:
+        drop = jax.random.randint(ks[3], (G,), 0, gsize)
+        vals = vals.at[:, drop + jnp.arange(G) * gsize].set(jnp.inf)
+    anchor = jnp.full((B,), 1.0, jnp.float32)
+    return (vals, coef, segid, kcap, -0.5, 3e-4, 2e-5, anchor)
 
 
 def run(quick: bool = True):
@@ -42,4 +69,35 @@ def run(quick: bool = True):
     t_a = _time(lambda a, b: ops.pig_aggregate(a, b, block=1024), sh, sc)
     out.append(row("kernel/pig_aggregate_8x8192", t_a, 1,
                    f"pallas_interp={t_a*1e3:.2f}ms"))
+
+    # ---- segmented quorum fan-in: the batch backend's hot inner kernel,
+    # Pallas rank-by-counting vs the production lax sort+segscan path
+    fanin = {}
+    for tag, B, G, gsize in (("8x4x6", 8, 4, 6), ("8x8x16", 8, 8, 16)):
+        args = _fanin_case(jax.random.PRNGKey(7), B, G, gsize)
+        t_k = _time(lambda *a: ops.seg_fanin(*a), *args)
+        t_r = _time(lambda *a: ref.seg_fanin_ref(*a), *args)
+        mk = np.asarray(ops.seg_fanin(*args))
+        mr = np.asarray(ref.seg_fanin_ref(*args))
+        err = float(np.max(np.abs(mk - mr) / np.maximum(np.abs(mr), 1e-9)))
+        assert err < 1e-5, f"seg_fanin parity broke: rel err {err}"
+        out.append(row(f"kernel/seg_fanin_{tag}", t_k, 1,
+                       f"pallas_interp={t_k*1e3:.2f}ms "
+                       f"lax_ref={t_r*1e3:.2f}ms max_rel_err={err:.1e}"))
+        fanin[tag] = {"pallas_interp_ms": round(t_k * 1e3, 3),
+                      "lax_ref_ms": round(t_r * 1e3, 3),
+                      "max_rel_err": err}
+
+    payload = {
+        "bench": "kernels",
+        "backend": jax.default_backend(),
+        "mode": "interpret" if jax.default_backend() != "tpu" else "native",
+        "flash_attention_256": {"pallas_ms": round(t_p * 1e3, 2)},
+        "ssm_scan_256": {"pallas_ms": round(t_s * 1e3, 2)},
+        "pig_aggregate_8x8192": {"pallas_ms": round(t_a * 1e3, 3)},
+        "seg_fanin": fanin,
+    }
+    with open(BENCH_PATH, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    out.append(row("kernel/json", 0, 1, f"wrote {BENCH_PATH}"))
     return out

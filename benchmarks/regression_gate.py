@@ -15,7 +15,12 @@ Diffs one or more fresh BENCH JSONs (as written by ``benchmarks/run.py
 * any audited scenario's units report a consistency violation (always
   fatal, regardless of throughput);
 * a gated scenario is missing from the artifacts, or an artifact is
-  corrupt — the gate must fail loudly, never silently shrink.
+  corrupt — the gate must fail loudly, never silently shrink;
+* a ``BENCH_vectorsim.json`` payload passed alongside (nightly regenerates
+  it with the sharded-dispatch numbers) violates the ``"vectorsim"``
+  reference section: DES<->batch xcheck error caps, the deterministic
+  N=1025 sweep throughput window, or a missing ``sharded`` section
+  (wall-clock metrics are hardware-bound and deliberately NOT gated).
 
 The DES runs in virtual time, so quick-mode throughput is deterministic per
 seed; the bounds carry a ±25% margin only to absorb *intentional*
@@ -70,6 +75,78 @@ def load_artifacts(paths) -> Dict[str, dict]:
                                 f"{str(sa)[:80]!r}")
             seen[sa["name"]] = sa
     return seen
+
+
+def load_vectorsim(paths) -> Dict[str, dict]:
+    """``bench: "vectorsim"`` payloads among ``paths`` (BENCH_vectorsim.json
+    as written by ``benchmarks.vectorsim_bench``), keyed by path."""
+    out: Dict[str, dict] = {}
+    for path in paths:
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, ValueError) as e:
+            raise GateError(f"{path}: unreadable artifact ({e})") from e
+        if isinstance(payload, dict) and payload.get("bench") == "vectorsim":
+            out[path] = payload
+    return out
+
+
+def evaluate_vectorsim(payload: dict, ref: dict,
+                       path: str = "BENCH_vectorsim.json"
+                       ) -> Tuple[List[str], List[str]]:
+    """Gate one vectorsim bench payload against the ``"vectorsim"``
+    reference section.  Only determinism-safe metrics are bounded: the
+    virtual-time DES<->batch xcheck errors and the N=1025 sweep throughput;
+    ``require_sharded`` just asserts the sharded section exists and is
+    self-consistent (its walls are hardware-bound)."""
+    failures: List[str] = []
+    lines: List[str] = []
+    try:
+        for key, cap_key in (("max_abs_tput_err", "xcheck_max_abs_tput_err"),
+                             ("max_abs_median_err",
+                              "xcheck_max_abs_median_err")):
+            cap = ref.get(cap_key)
+            if cap is None:
+                continue
+            got = payload["xcheck"][key]
+            ok = got <= cap
+            lines.append(f"{'ok' if ok else 'FAIL':4s} "
+                         f"{'vectorsim/' + key:40s} {got:>10} cap={cap}")
+            if not ok:
+                failures.append(f"{path}: xcheck {key} {got} > {cap}")
+        win = ref.get("sweep1025_throughput")
+        if win is not None:
+            got = payload["sweep1025"]["throughput"]
+            lo, hi = win
+            ok = lo <= got <= hi
+            lines.append(f"{'ok' if ok else 'FAIL':4s} "
+                         f"{'vectorsim/sweep1025':40s} tput={got:>10} "
+                         f"bounds=[{lo}, {hi}]")
+            if not ok:
+                failures.append(f"{path}: sweep1025 throughput {got} "
+                                f"outside [{lo}, {hi}]")
+        if ref.get("require_sharded"):
+            sh = payload.get("sharded")
+            if not sh or sh.get("device_count", 0) < 1 \
+                    or not sh.get("chunks"):
+                failures.append(f"{path}: sharded section missing or empty "
+                                f"(nightly must publish sharded numbers)")
+            else:
+                total = sum(c["cells"] for c in sh["chunks"])
+                ok = total == payload["grid"]["cells"]
+                lines.append(f"{'ok' if ok else 'FAIL':4s} "
+                             f"{'vectorsim/sharded':40s} "
+                             f"devices={sh['device_count']} "
+                             f"kernel={sh['kernel']} chunks="
+                             f"{len(sh['chunks'])} cells={total}")
+                if not ok:
+                    failures.append(
+                        f"{path}: sharded chunk cells {total} != grid "
+                        f"cells {payload['grid']['cells']}")
+    except (KeyError, TypeError) as e:
+        raise GateError(f"{path}: malformed vectorsim payload ({e})") from e
+    return failures, lines
 
 
 def _mean_tput(sa: dict):
@@ -168,6 +245,11 @@ def main() -> None:
 
     try:
         failures, lines = evaluate(seen, ref)
+        vs_ref = ref.get("vectorsim", {})
+        for path, payload in load_vectorsim(args.artifacts).items():
+            vf, vl = evaluate_vectorsim(payload, vs_ref, path)
+            failures += vf
+            lines += vl
     except GateError as e:
         failures, lines = [str(e)], []
     for line in lines:

@@ -6,6 +6,9 @@ Three measurements, written to BENCH_vectorsim.json at the repo root:
 * ``grid``    — the full protocol x R x clients x 32-seed grid (one
   ``vectorsim.simulate_grid`` call: one XLA compile + one device dispatch),
   cold and warm wall clock.
+* ``sharded`` — the same grid through ``vectorsim.simulate_grid_sharded``
+  (device-sharded chunked dispatch, bit-identical results): per-chunk
+  walls, cells/s, device count, kernel flag.
 * ``des``     — the same grid on ``Cluster(engine="fast")``: a stratified
   sample of units (every (config, clients) point, subset of seeds) is
   measured serially AND through a real ``multiprocessing`` pool at
@@ -89,6 +92,24 @@ def run(quick: bool = True):
                    f"cold={cold:.1f}s warm={warm:.1f}s "
                    f"steps={int(res['steps'][0])}"))
 
+    # ---- the same grid through the device-sharded chunked dispatcher
+    # (bit-identical results; on this CPU container device_count is 1 —
+    # multi-device walls come from the forced-host-device CI smoke and
+    # GPU/TPU runs)
+    import jax
+    t0 = time.perf_counter()
+    sres = vs.simulate_grid_sharded(sims, grid, DUR, WARM, chunk=128)
+    sh_wall = time.perf_counter() - t0
+    np.testing.assert_array_equal(np.asarray(res["throughput"]),
+                                  sres["throughput"])
+    shard = sres["sharding"]
+    out.append(row("vectorsim/sharded", sh_wall, len(grid),
+                   f"devices={shard['devices']} impl={shard['impl']} "
+                   f"kernel={shard['kernel']} chunk={shard['chunk']} "
+                   f"{len(shard['chunks'])}chunks "
+                   f"{len(grid)/max(sh_wall, 1e-9):.0f}cells/s "
+                   f"wall={sh_wall:.1f}s (== unsharded grid bit-for-bit)"))
+
     # ---- DES reference: stratified sample, extrapolated to the full grid
     n_sample_seeds = 1 if quick else 2
     workers = os.cpu_count() or 1
@@ -155,6 +176,15 @@ def run(quick: bool = True):
                  "steps": int(res["steps"][0])},
         "batch": {"wall_cold_s": round(cold, 2),
                   "wall_warm_s": round(warm, 2)},
+        "sharded": {"wall_s": round(sh_wall, 2),
+                    "cells_per_s": round(len(grid) / max(sh_wall, 1e-9), 1),
+                    "device_count": shard["devices"],
+                    "impl": shard["impl"], "kernel": shard["kernel"],
+                    "chunk": shard["chunk"],
+                    "chunks": [{"cells": m["cells"],
+                                "wall_s": round(m["wall_s"], 3),
+                                "steps": m["steps"]}
+                               for m in shard["chunks"]]},
         "des_sample": {"units": sampled, "wall_s": round(des_wall, 1),
                        "est_total_s": round(des_est_total, 1),
                        "est_parallel_s": round(des_est_parallel, 1),

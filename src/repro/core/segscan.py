@@ -1,0 +1,58 @@
+"""Segmented-scan primitives over flat group-contiguous layouts.
+
+The batch backend packs every config's follower groups on one FLAT axis
+(slots group-contiguous; ``pos == 0`` marks each segment's first slot) so a
+heterogeneous config batch costs O(N-1) per step instead of O(rmax x gmax)
+padding.  Per-group order statistics then reduce to *segmented* cumulative
+scans along that axis: an associative scan over (value, start-flag) pairs
+where the flag resets the running aggregate at every segment boundary.
+
+Shared by ``core.vectorsim`` (the production fan-in path) and the Pallas
+segmented fan-in kernel's oracle (``kernels.ref.seg_fanin_ref``), so the
+two backends agree on one definition of the scan semantics.
+
+All functions take ``first`` — a boolean mask marking segment starts,
+broadcastable against ``x`` (vectorsim passes its precomputed ``seg_first``
+instead of recomputing ``pos == 0`` at each call site).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def seg_cummax(x: jnp.ndarray, first: jnp.ndarray, axis: int = -1):
+    """Within-segment inclusive cumulative max along ``axis``."""
+    def comb(a, b):
+        v1, f1 = a
+        v2, f2 = b
+        return jnp.where(f2, v2, jnp.maximum(v1, v2)), f1 | f2
+
+    first = jnp.broadcast_to(first, x.shape)
+    v, _ = lax.associative_scan(comb, (x, first), axis=axis)
+    return v
+
+
+def seg_cumsum(x: jnp.ndarray, first: jnp.ndarray, axis: int = -1):
+    """Within-segment inclusive cumulative sum along ``axis``."""
+    def comb(a, b):
+        v1, f1 = a
+        v2, f2 = b
+        return jnp.where(f2, v2, v1 + v2), f1 | f2
+
+    first = jnp.broadcast_to(first, x.shape)
+    v, _ = lax.associative_scan(comb, (x, first), axis=axis)
+    return v
+
+
+def seg_start_index(first: jnp.ndarray, axis: int = -1):
+    """Index of each slot's segment start (the ``gstart`` of its group),
+    derived from the start flags alone — the oracle-side inverse of the
+    packed ``gstart`` table."""
+    n = first.shape[axis]
+    shape = [1] * first.ndim
+    shape[axis] = n
+    iota = jnp.arange(n, dtype=jnp.float32).reshape(shape)
+    iota = jnp.broadcast_to(iota, first.shape)
+    return seg_cummax(jnp.where(first, iota, -jnp.inf), first,
+                      axis=axis).astype(jnp.int32)

@@ -67,16 +67,25 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
+import warnings
 from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
+from jax.sharding import Mesh, PartitionSpec
+
+try:        # shard_map is the primary sharding path; pmap is the fallback
+    from jax.experimental.shard_map import shard_map as _shard_map
+except ImportError:                                   # pragma: no cover
+    _shard_map = None
 
 from .messages import HEADER_BYTES, CostModel
 from .pig import partition_followers, required_per_group
 from .quorums import fast_quorum, majority
+from .segscan import seg_cummax, seg_cumsum
 
 # measurement harness constants — keep identical to cluster.Cluster
 _DRAIN_S = 0.2          # post-stop drain window (Cluster.measure)
@@ -372,7 +381,7 @@ def _summarize(lat, t_fin, commit_t, active, ready, loadF, loadL, cell,
 
 
 def _group_cell(cell, steps: int, kmax: int, breq: int,
-                faulty: bool = False, nb: int = 0):
+                faulty: bool = False, nb: int = 0, kernel: str = "lax"):
     """Simulate one grid cell of the Paxos/PigPaxos group kernel.
 
     ``faulty`` (static) enables the fault-mask path: hop arrivals at a
@@ -380,6 +389,11 @@ def _group_cell(cell, steps: int, kmax: int, breq: int,
     among the currently-up group members, and slow nodes add their extra
     one-way latency to every touching hop.  The fault-free trace is
     untouched when False — the mask arrays are never read.
+
+    ``kernel`` (static) selects the reply fan-in implementation: "lax" is
+    the sort + segmented-cummax oracle below; "pallas" routes the same
+    order statistics through ``kernels.ops.seg_fanin`` (rank-counting
+    Pallas kernel — interpret mode on CPU, native on TPU).
 
     Two throughput tricks keep the scan XLA-friendly:
 
@@ -431,14 +445,6 @@ def _group_cell(cell, steps: int, kmax: int, breq: int,
     w_peer = c_rel + c_repl
     relay_work = c_fanout + npeers.astype(f32) * w_peer + c_agg  # (G,)
 
-    def seg_cummax(x):
-        def comb(a, b):
-            v1, f1 = a
-            v2, f2 = b
-            return jnp.where(f2, v2, jnp.maximum(v1, v2)), f1 | f2
-        v, _ = lax.associative_scan(comb, (x, seg_first), axis=1)
-        return v
-
     # fault-mask state (read only when ``faulty``; see module docstring)
     downL = cell["downL"]                     # (W, 2) leader down-windows
     downF = cell["downF"]                     # (F, W, 2) per-slot windows
@@ -450,15 +456,6 @@ def _group_cell(cell, steps: int, kmax: int, breq: int,
         ``win`` has shape (..., W, 2) broadcastable against t[..., None]."""
         inw = (t[..., None] >= win[..., 0]) & (t[..., None] < win[..., 1])
         return jnp.maximum(t, jnp.where(inw, win[..., 1], -jnp.inf).max(-1))
-
-    def seg_cumsum0(x):
-        """Within-group inclusive cumsum over one flat (F,) vector."""
-        def comb(a, b):
-            v1, f1 = a
-            v2, f2 = b
-            return jnp.where(f2, v2, v1 + v2), f1 | f2
-        v, _ = lax.associative_scan(comb, (x, pos == 0), axis=0)
-        return v
 
     ready0 = jnp.where(jnp.arange(kmax) < cell["k_clients"],
                        _CLIENT_START + _CLIENT_STAGGER * jnp.arange(kmax),
@@ -510,7 +507,7 @@ def _group_cell(cell, steps: int, kmax: int, breq: int,
             down0 = ((tref >= downF[:, :, 0])
                      & (tref < downF[:, :, 1])).any(-1)   # (F,)
             af = (valid & ~down0).astype(f32)
-            rank = seg_cumsum0(af) - af                   # rank among up
+            rank = seg_cumsum(af, seg_first[0], axis=0) - af  # rank among up
             cnt = jnp.zeros(G, f32).at[grp].add(af)       # (G,) up members
             k_sel = jnp.minimum(jnp.floor(u_rel * cnt[None, :]),
                                 jnp.maximum(cnt - 1.0, 0.0))   # (B, G)
@@ -601,20 +598,34 @@ def _group_cell(cell, steps: int, kmax: int, breq: int,
         # block in place with arrivals ascending, so the value at flat slot
         # f is group grp[f]'s pos[f]-th reply.
         relay_free0 = h + npeers.astype(f32)[None, :] * c_rel
-        _, arr_s = lax.sort(
-            (grp_b, jnp.where(peer_mask, arr_back, jnp.inf)), num_keys=2)
-        w_fan = jnp.maximum(
-            jnp.take_along_axis(B_r, grp_b, axis=1)
-            + (rho - 1.0) * (arr_s - L1[:, None]), 0.0) + md1
-        pref = seg_cummax(arr_s + w_fan - posf[None, :] * c_repl)
-        done_k = (posf[None, :] + 1.0) * c_repl + jnp.maximum(
-            jnp.take_along_axis(relay_free0, grp_b, axis=1), pref)
-        t_idx = jnp.clip(gstart + thresh - 2, 0, F - 1)
-        flush = jnp.where((thresh >= 2)[None, :],
-                          jnp.take_along_axis(done_k,
-                                              jnp.broadcast_to(t_idx, (B, G)),
-                                              axis=1),
-                          relay_free0)
+        kg = jnp.maximum(thresh - 2, 0)
+        if kernel == "pallas":
+            # rank-counting Pallas kernel: emits each slot's capped segment
+            # max directly (the thresh-2 order statistic), no sort needed
+            from ..kernels import ops as _kops
+            m = _kops.seg_fanin(
+                jnp.where(peer_mask, arr_back, jnp.inf),
+                jnp.take_along_axis(B_r, grp_b, axis=1),
+                grp, kg[grp], rho - 1.0, md1, c_repl, L1)
+            mg = jnp.take_along_axis(
+                m, jnp.broadcast_to(jnp.clip(gstart, 0, F - 1), (B, G)),
+                axis=1)
+            done_g = (kg.astype(f32)[None, :] + 1.0) * c_repl \
+                + jnp.maximum(relay_free0, mg)
+        else:
+            _, arr_s = lax.sort(
+                (grp_b, jnp.where(peer_mask, arr_back, jnp.inf)), num_keys=2)
+            w_fan = jnp.maximum(
+                jnp.take_along_axis(B_r, grp_b, axis=1)
+                + (rho - 1.0) * (arr_s - L1[:, None]), 0.0) + md1
+            pref = seg_cummax(arr_s + w_fan - posf[None, :] * c_repl,
+                              seg_first, axis=1)
+            done_k = (posf[None, :] + 1.0) * c_repl + jnp.maximum(
+                jnp.take_along_axis(relay_free0, grp_b, axis=1), pref)
+            t_idx = jnp.clip(gstart + thresh - 2, 0, F - 1)
+            done_g = jnp.take_along_axis(
+                done_k, jnp.broadcast_to(t_idx, (B, G)), axis=1)
+        flush = jnp.where((thresh >= 2)[None, :], done_g, relay_free0)
         agg_sent = flush + c_agg
 
         # leader FIFO over aggregates; commit at the quorum-completing one
@@ -835,27 +846,76 @@ def _epaxos_cell(cell, steps: int, kmax: int, nb: int = 0):
 
 
 # ================================================================== batching
-@functools.partial(jax.jit, static_argnames=("steps", "kmax", "kind",
-                                             "breq", "faulty", "nb"))
-def _run_cells(batch, steps: int, kmax: int, kind: str, breq: int,
-               faulty: bool = False, nb: int = 0):
-    sig = (kind, steps, kmax, breq, faulty, nb) + tuple(
-        (k,) + tuple(v.shape) for k, v in sorted(batch.items()))
-    _TRACE_COUNTS[sig] = _TRACE_COUNTS.get(sig, 0) + 1
+def _resolve_kernel(kernel: str, kind: str = "group") -> str:
+    """"auto" -> the native fan-in for the current backend ("pallas" on
+    TPU, the XLA "lax" path elsewhere).  The epaxos kernel has no grouped
+    fan-in, so it always normalizes to "lax" (avoids spurious retraces)."""
+    if kind != "group":
+        return "lax"
+    if kernel == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "lax"
+    if kernel not in ("lax", "pallas"):
+        raise ValueError(f"kernel must be auto|lax|pallas, got {kernel!r}")
+    return kernel
+
+
+def _cells_fn(batch, steps: int, kmax: int, kind: str, breq: int,
+              faulty: bool = False, nb: int = 0, kernel: str = "lax"):
+    """The unjitted whole-batch computation (vmap over cells); shared by
+    the single-device jit below and the sharded per-device bodies."""
     if kind == "group":
         return jax.vmap(lambda c: _group_cell(c, steps, kmax, breq,
-                                              faulty, nb))(batch)
+                                              faulty, nb, kernel))(batch)
     return jax.vmap(lambda c: _epaxos_cell(c, steps, kmax, nb))(batch)
 
 
+@functools.partial(jax.jit, static_argnames=("steps", "kmax", "kind",
+                                             "breq", "faulty", "nb",
+                                             "kernel"))
+def _run_cells(batch, steps: int, kmax: int, kind: str, breq: int,
+               faulty: bool = False, nb: int = 0, kernel: str = "lax"):
+    sig = (kind, steps, kmax, breq, faulty, nb, kernel) + tuple(
+        (k,) + tuple(v.shape) for k, v in sorted(batch.items()))
+    _TRACE_COUNTS[sig] = _TRACE_COUNTS.get(sig, 0) + 1
+    return _cells_fn(batch, steps, kmax, kind, breq, faulty, nb, kernel)
+
+
+def _pad_spec(configs: Sequence[SimConfig], grid) -> Dict[str, int]:
+    """The padded-shape signature a (configs, grid) batch compiles under.
+    A sharded run computes this ONCE over the whole grid and passes it to
+    every chunk's ``_stack_cells`` so all chunks share one compilation."""
+    kind = configs[0].kind
+    spec = {
+        "nreg": max(c.region_latency.shape[0] for c in configs),
+        "kmax": max(k for _, k, _ in grid),
+        "wmax": max([c.down.shape[1] for c in configs
+                     if c.down is not None] + [1]),
+    }
+    if kind == "group":
+        spec["rmax"] = max(c.rmax for c in configs)
+        spec["fmax"] = max(c.n - 1 for c in configs)
+        spec["nmax"] = 1
+        spec["nkeys_max"] = 1   # the group kernel never samples keys
+    else:
+        spec["rmax"] = spec["fmax"] = 1
+        spec["nmax"] = max(c.n for c in configs)
+        spec["nkeys_max"] = max(c.n_keys for c in configs)
+    return spec
+
+
 def _stack_cells(configs: Sequence[SimConfig], grid, duration: float,
-                 warmup: float):
-    """Stack (config_idx, clients, seed) grid points into one batch dict."""
+                 warmup: float, pad_to: Optional[Dict[str, int]] = None):
+    """Stack (config_idx, clients, seed) grid points into one batch dict.
+
+    ``pad_to`` (a ``_pad_spec`` dict, possibly from a larger grid) pins the
+    padded shapes so different chunks of one sharded run stay signature-
+    compatible with each other."""
     kind = configs[0].kind
     if any(c.kind != kind for c in configs):
         raise ValueError("cannot mix group and epaxos kernels in one batch")
-    nreg = max(c.region_latency.shape[0] for c in configs)
-    kmax = max(k for _, k, _ in grid)
+    spec = pad_to or _pad_spec(configs, grid)
+    nreg = spec["nreg"]
+    kmax = spec["kmax"]
     stop = warmup + duration
     cells: Dict[str, list] = {k: [] for k in (
         "sizes", "thresh", "grp", "pos", "gstart", "regF", "reg_lat",
@@ -864,18 +924,11 @@ def _stack_cells(configs: Sequence[SimConfig], grid, duration: float,
         "warmup", "duration", "n_followers", "reg_nodes", "fq",
         "w_follower", "downL", "downF", "slowF", "slowL",
         "key_mode", "n_keys", "conflict_rate", "key_cdf")}
-    wmax = max([c.down.shape[1] for c in configs if c.down is not None] + [1])
-    if kind == "group":
-        rmax = max(c.rmax for c in configs)
-        fmax = max(c.n - 1 for c in configs)
-        nmax = 1
-        nkeys_max = 1   # the group kernel never samples keys
-    else:
-        rmax = fmax = 1
-        nmax = max(c.n for c in configs)
-        nkeys_max = max(c.n_keys for c in configs)
-        if any(c.n != nmax for c in configs):
-            raise ValueError("epaxos batches must share one cluster size")
+    wmax = spec["wmax"]
+    rmax, fmax = spec["rmax"], spec["fmax"]
+    nmax, nkeys_max = spec["nmax"], spec["nkeys_max"]
+    if kind == "epaxos" and any(c.n != nmax for c in configs):
+        raise ValueError("epaxos batches must share one cluster size")
     for ci, k, seed in grid:
         c = configs[ci]
         sizes = np.zeros(rmax, np.int32)
@@ -971,7 +1024,8 @@ def _stack_cells(configs: Sequence[SimConfig], grid, duration: float,
 
 def simulate_grid(configs: Sequence[SimConfig], grid, duration: float,
                   warmup: float, steps: Optional[int] = None,
-                  timeline: bool = False) -> Dict[str, np.ndarray]:
+                  timeline: bool = False,
+                  kernel: str = "auto") -> Dict[str, np.ndarray]:
     """Run every (config_idx, clients, seed) grid point in ONE jitted call.
 
     Returns dict of per-cell arrays (throughput, median_s, p99_s, committed,
@@ -985,8 +1039,13 @@ def simulate_grid(configs: Sequence[SimConfig], grid, duration: float,
 
     ``timeline=True`` (implied by fault-mask configs) adds per-cell
     completion timelines (``_TL_BUCKET`` buckets).
+
+    ``kernel`` selects the group fan-in implementation ("auto" | "lax" |
+    "pallas"; see ``_group_cell``) — "auto" picks the Pallas kernel on TPU
+    and the XLA sort path elsewhere.
     """
     batch, kind, kmax = _stack_cells(configs, grid, duration, warmup)
+    kernel = _resolve_kernel(kernel, kind)
     faulty = any(c.down is not None or c.slow is not None for c in configs)
     nb = (int(np.ceil((warmup + duration + _DRAIN_S) / _TL_BUCKET)) + 1
           if (faulty or timeline) else 0)
@@ -998,7 +1057,8 @@ def simulate_grid(configs: Sequence[SimConfig], grid, duration: float,
     steps = min(steps, _MAX_STEPS)
     # the group kernel pops `breq` requests per scan step
     breq = min(8, kmax) if kind == "group" else 1
-    out = _run_cells(batch, -(-steps // breq), kmax, kind, breq, faulty, nb)
+    out = _run_cells(batch, -(-steps // breq), kmax, kind, breq, faulty, nb,
+                     kernel)
     out = {k: np.asarray(v) for k, v in out.items()}
     steps_arr = np.full(len(grid), steps, np.int32)
     if out["exhausted"].any():
@@ -1008,7 +1068,7 @@ def simulate_grid(configs: Sequence[SimConfig], grid, duration: float,
         idx = np.nonzero(out["exhausted"])[0]
         sub = {k: v[idx] for k, v in batch.items()}
         sub_out = _run_cells(sub, -(-steps // breq), kmax, kind, breq,
-                             faulty, nb)
+                             faulty, nb, kernel)
         for k, v in sub_out.items():
             out[k][idx] = np.asarray(v)
         steps_arr[idx] = steps
@@ -1016,11 +1076,145 @@ def simulate_grid(configs: Sequence[SimConfig], grid, duration: float,
     return out
 
 
+# ================================================================= sharding
+# compiled sharded runners, keyed by the full static signature (shapes,
+# step budget, device count, impl) — chunks of one sharded run hit the
+# same entry, so compile cost amortizes across the whole grid
+_SHARD_CACHE: Dict[tuple, object] = {}
+
+
+def _run_cells_sharded(batch, steps: int, kmax: int, kind: str, breq: int,
+                       faulty: bool, nb: int, kernel: str,
+                       devices, impl: str):
+    """One chunk through the device-sharded runner.  The cell axis (every
+    leaf's leading axis) is split evenly across ``devices`` — cell count
+    must be a multiple of the device count.  Inputs are DONATED: chunked
+    callers stream results to host, so device memory stays bounded by one
+    chunk regardless of grid size."""
+    D = len(devices)
+    shapes = tuple((k,) + tuple(v.shape) + (str(np.asarray(v).dtype),)
+                   for k, v in sorted(batch.items()))
+    sig = (kind, steps, kmax, breq, faulty, nb, kernel, D, impl) + shapes
+    fn = _SHARD_CACHE.get(sig)
+    if fn is None:
+        def body(b):
+            return _cells_fn(b, steps, kmax, kind, breq, faulty, nb, kernel)
+        if impl == "shard_map":
+            mesh = Mesh(np.asarray(devices), ("cells",))
+            fn = jax.jit(_shard_map(body, mesh=mesh,
+                                    in_specs=PartitionSpec("cells"),
+                                    out_specs=PartitionSpec("cells"),
+                                    check_rep=False),
+                         donate_argnums=0)
+        elif impl == "pmap":
+            pfn = jax.pmap(body, devices=devices, donate_argnums=0)
+
+            def fn(b, _p=pfn, _D=D):
+                split = {k: v.reshape((_D, v.shape[0] // _D) + v.shape[1:])
+                         for k, v in b.items()}
+                out = _p(split)
+                return {k: v.reshape((-1,) + v.shape[2:])
+                        for k, v in out.items()}
+        else:
+            raise ValueError(f"impl must be shard_map|pmap, got {impl!r}")
+        _SHARD_CACHE[sig] = fn
+    with warnings.catch_warnings():
+        # scalar per-cell inputs can never be reused for the (bigger)
+        # outputs; the donation of the large mask/key arrays is what counts
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        return fn(batch)
+
+
+def simulate_grid_sharded(configs: Sequence[SimConfig], grid,
+                          duration: float, warmup: float, *,
+                          steps: Optional[int] = None,
+                          timeline: bool = False, kernel: str = "auto",
+                          chunk: int = 4096, devices=None,
+                          impl: str = "auto") -> Dict[str, np.ndarray]:
+    """``simulate_grid`` scaled out: the cell grid is partitioned across
+    devices (``shard_map``; ``impl="pmap"`` fallback) and dispatched in
+    fixed-size chunks whose inputs are donated, so device memory is
+    bounded by one chunk and one compilation serves every chunk (the
+    padded-shape signature is pinned grid-wide via ``_pad_spec``).
+
+    On this CPU-only container, multi-device execution is exercised via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before the
+    process imports jax); on a real GPU/TPU host the same call sharding
+    applies with no code change — device count comes from
+    ``jax.devices()``.  Per-cell results are bit-identical to
+    single-device ``simulate_grid`` (cells are independent vmap lanes).
+
+    Returns the ``simulate_grid`` dict plus ``out["sharding"]``: device
+    count, impl, chunk size, and per-chunk {cells, wall_s, steps} — the
+    stream the megagrid study and the bench schema consume.
+    """
+    devices = list(devices if devices is not None else jax.devices())
+    if impl == "auto":
+        impl = "shard_map" if _shard_map is not None else "pmap"
+    D = len(devices)
+    chunk = max(chunk - chunk % D, D)
+    kind = configs[0].kind
+    kernel = _resolve_kernel(kernel, kind)
+    spec = _pad_spec(configs, grid)
+    faulty = any(c.down is not None or c.slow is not None for c in configs)
+    nb = (int(np.ceil((warmup + duration + _DRAIN_S) / _TL_BUCKET)) + 1
+          if (faulty or timeline) else 0)
+    if steps is None:
+        rate = max(_estimate_rate(configs[ci], k) for ci, k, _ in grid)
+        steps = int(rate * (warmup + duration) * 1.15) + spec["kmax"] + 64
+    steps0 = min(steps, _MAX_STEPS)
+    breq = min(8, spec["kmax"]) if kind == "group" else 1
+
+    n_cells = len(grid)
+    out: Dict[str, np.ndarray] = {}
+    steps_arr = np.empty(n_cells, np.int32)
+    meta = []
+    for lo in range(0, n_cells, chunk):
+        part = list(grid[lo:lo + chunk])
+        real = len(part)
+        part += [part[-1]] * (chunk - real)   # keep one static shape
+        batch, _, _ = _stack_cells(configs, part, duration, warmup,
+                                   pad_to=spec)
+        t0 = time.perf_counter()
+        steps_c = steps0
+        cout = _run_cells_sharded(batch, -(-steps_c // breq), spec["kmax"],
+                                  kind, breq, faulty, nb, kernel, devices,
+                                  impl)
+        cout = {k: np.array(v) for k, v in cout.items()}
+        csteps = np.full(chunk, steps_c, np.int32)
+        while cout["exhausted"][:real].any() and steps_c < _MAX_STEPS:
+            steps_c = min(steps_c * 2, _MAX_STEPS)
+            idx = np.nonzero(cout["exhausted"])[0]
+            # retry the exhausted subset, padded back to a device multiple
+            ridx = np.resize(idx, -(-len(idx) // D) * D)
+            sub = {k: v[ridx] for k, v in batch.items()}
+            sub_out = _run_cells_sharded(sub, -(-steps_c // breq),
+                                         spec["kmax"], kind, breq, faulty,
+                                         nb, kernel, devices, impl)
+            for k, v in sub_out.items():
+                cout[k][idx] = np.asarray(v)[:len(idx)]
+            csteps[idx] = steps_c
+        wall = time.perf_counter() - t0
+        for k, v in cout.items():
+            if k not in out:
+                out[k] = np.empty((n_cells,) + v.shape[1:], v.dtype)
+            out[k][lo:lo + real] = v[:real]
+        steps_arr[lo:lo + real] = csteps[:real]
+        meta.append({"cells": real, "wall_s": wall,
+                     "steps": int(csteps[:real].max())})
+    out["steps"] = steps_arr
+    out["sharding"] = {"devices": D, "impl": impl, "kernel": kernel,
+                       "chunk": chunk, "chunks": meta}
+    return out
+
+
 def simulate_scenario(protocol: str, n: int, *, pig=None, topo=None,
                       workload=None, clients: Sequence[int] = (60,),
                       seeds: Sequence[int] = (0,), duration: float = 0.6,
                       warmup: float = 0.3, leader_timeout: float = 50e-3,
-                      masks: Optional[Dict[str, np.ndarray]] = None) -> List[dict]:
+                      masks: Optional[Dict[str, np.ndarray]] = None,
+                      kernel: str = "auto") -> List[dict]:
     """One scenario's full clients x seeds grid in one compiled call.
 
     Returns one dict per (clients, seed) in ``runner`` unit order, carrying
@@ -1039,7 +1233,7 @@ def simulate_scenario(protocol: str, n: int, *, pig=None, topo=None,
     cfg = build_config(protocol, n, pig=pig, topo=topo, workload=workload,
                        masks=masks)
     grid = [(0, int(k), int(s)) for k in clients for s in seeds]
-    out = simulate_grid([cfg], grid, duration, warmup)
+    out = simulate_grid([cfg], grid, duration, warmup, kernel=kernel)
     units = []
     for i, (_, k, s) in enumerate(grid):
         u = {

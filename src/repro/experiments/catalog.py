@@ -485,3 +485,24 @@ for detect_ms in (50, 100, 200):
         engine="exact", grid_mode="curve", clients=(30,), seeds=(3,),
         duration=2.2, warmup=0.3, quick_duration=1.2,
         collect=("timeline",), quick_skip=(detect_ms == 200)))
+
+# ======================================================================
+# megagrid slices: registry-visible samples of the million-cell
+# cross-product study (experiments.megagrid).  The full run streams
+# through vectorsim.simulate_grid_sharded from the CLI; these four
+# points keep the family in the registry (summarizer, nightly gate) and
+# cross-check the study's axes against the standard runner path.
+# ======================================================================
+for n, r, prc, wan in ((9, 2, 1, False), (9, 2, 1, True),
+                       (25, 4, 0, False), (25, 4, 2, True)):
+    spec = _wan_scaled(n)[0] if wan else None
+    register(Scenario(
+        name=f"megagrid/slice/N={n}/R={r}/PRC={prc}/"
+             + ("wan3" if wan else "lan"),
+        protocol="pigpaxos", n=n, pig=PigConfig(n_groups=r, prc=prc),
+        topo=spec, backend="batch", batch_ok=True,
+        leader_timeout=400e-3 if wan else 50e-3,
+        clients=(4, 16), quick_clients=(4,),
+        seeds=tuple(range(16)), quick_seeds=(0, 1, 2, 3),
+        duration=0.1, quick_duration=0.1, warmup=0.05,
+        quick_skip=(n == 25 and prc == 2)))

@@ -642,6 +642,36 @@ def _failover(arts, quick):
     return out
 
 
+def _megagrid(arts, quick):
+    """Megagrid family: catalog ``megagrid/slice`` scenarios (replicate
+    rows) and the million-cell cross-product artifact (aggregate-only
+    entries from ``experiments.megagrid``), plus a family summary naming
+    the peak-throughput point."""
+    out, best, cells = [], None, 0
+    for name, art in sorted(arts.items()):
+        row = _mean_std_row(name, art)
+        if row is not None:                      # catalog slice entries
+            out.append(row)
+            continue
+        s = art.get("summary") or {}
+        t = s.get("throughput") or {}
+        if t.get("mean") is None:
+            continue
+        cells += s.get("cells", 0)
+        if best is None or t["max"] > best[1]:
+            best = (name, t["max"])
+        p99 = (s.get("p99_ms") or {}).get("mean")
+        out.append(csv_row(
+            name, 0, max(s.get("cells", 1), 1),
+            f"tput={t['mean']:.0f}req/s std={t['std'] or 0:.0f} "
+            f"p99={ms(p99):.2f}ms cells={s.get('cells', 0)}"))
+    if best is not None:
+        out.append(csv_row("megagrid/summary", 0, 1,
+                           f"{cells} cells; peak point {best[0]} "
+                           f"at {best[1]:.0f}req/s"))
+    return out
+
+
 SUMMARIZERS = {
     "table1": _table1, "table2": _table2,
     "fig8": _fig8, "fig9": _fig9, "fig10": _fig10, "fig11": _fig11,
@@ -651,6 +681,7 @@ SUMMARIZERS = {
     "wan": _wan, "scale": _scale,
     "avail": _avail, "storm": _storm,
     "reconfig": _reconfig, "rolling": _rolling, "failover": _failover,
+    "megagrid": _megagrid,
 }
 
 

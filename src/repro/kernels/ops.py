@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from .flash_attention import flash_attention_bhsd
 from .pig_aggregate import pig_aggregate as _pig_aggregate_kernel
 from .pig_aggregate import quantize_blockwise  # noqa: F401 (re-export)
+from .segfanin import seg_fanin_bf
 from .ssm_scan import ssm_scan_bhtd
 
 
@@ -80,3 +81,31 @@ def pig_aggregate(shards: jax.Array, scales: jax.Array,
     """shards (G, N) int8 + scales (G, N//block) f32 -> (N,) f32 sum."""
     return _pig_aggregate_kernel(shards, scales, block=block,
                                  interpret=_interpret())
+
+
+def seg_fanin(vals: jax.Array, coef: jax.Array, segid: jax.Array,
+              kcap: jax.Array, vcoef, md1, c, anchor) -> jax.Array:
+    """Segmented quorum fan-in (see ``segfanin`` for the model and its
+    preconditions).  vals/coef: (B, F) f32 (+inf = masked slot); segid /
+    kcap: (F,) per-slot segment id and order-statistic cap (both
+    segment-constant); vcoef/md1/c: scalars; anchor: (B,).  Returns (B, F):
+    each slot's capped segment max m, -inf where the admissible set is
+    empty.  Values can be traced scalars (called per scan step)."""
+    B, F = vals.shape
+    f32 = jnp.float32
+    # pad the slot axis to the TPU lane width; padded slots form their own
+    # segment (id -1) so they never contribute to a real segment's max
+    pad = (-F) % 128
+    vals = jnp.pad(vals, ((0, 0), (0, pad)), constant_values=jnp.inf)
+    coef = jnp.pad(coef.astype(f32), ((0, 0), (0, pad)))
+    sid = jnp.pad(segid.astype(f32), (0, pad), constant_values=-1.0)
+    kc = jnp.pad(kcap.astype(f32), (0, pad))
+    ones = jnp.ones((B,), f32)
+    scal = jnp.stack([vcoef * ones, md1 * ones, c * ones,
+                      jnp.broadcast_to(jnp.asarray(anchor, f32), (B,))],
+                     axis=1)
+    out = seg_fanin_bf(vals, coef,
+                       jnp.broadcast_to(sid[None, :], (B, F + pad)),
+                       jnp.broadcast_to(kc[None, :], (B, F + pad)),
+                       scal, interpret=_interpret())
+    return out[:, :F]

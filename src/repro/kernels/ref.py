@@ -52,3 +52,31 @@ def pig_aggregate_ref(shards: jax.Array, scales: jax.Array,
     nb = N // block
     x = shards.reshape(G, nb, block).astype(jnp.float32) * scales[:, :, None]
     return x.sum(axis=0).reshape(N)
+
+
+def seg_fanin_ref(vals: jax.Array, coef: jax.Array, segid: jax.Array,
+                  kcap: jax.Array, vcoef, md1, c, anchor) -> jax.Array:
+    """The production ``lax`` fan-in path (lexicographic sort + segmented
+    cumulative max, ``core.segscan``) with ``kernels.ops.seg_fanin``'s
+    signature: vals/coef (B, F), segid/kcap (F,), anchor (B,), scalars
+    vcoef/md1/c.  Same preconditions as the kernel: contiguous segments,
+    segment-constant coef/kcap, >= kcap+1 finite entries per consumed
+    segment.  Returns each slot's capped segment max (B, F)."""
+    from ..core.segscan import seg_cummax, seg_start_index
+
+    B, F = vals.shape
+    segid = segid.astype(jnp.int32)
+    sid_b = jnp.broadcast_to(segid[None, :], (B, F))
+    # two-key stable sort: segment blocks stay in place, values ascend
+    _, arr_s = jax.lax.sort((sid_b, vals), num_keys=2)
+    first = segid != jnp.concatenate([segid[:1] - 1, segid[:-1]])
+    first_b = jnp.broadcast_to(first[None, :], (B, F))
+    gsl = seg_start_index(first, axis=0)                   # (F,)
+    posf = (jnp.arange(F) - gsl).astype(jnp.float32)
+    anchor = jnp.asarray(anchor, jnp.float32).reshape(B, 1)
+    y = arr_s + jnp.maximum(coef + vcoef * (arr_s - anchor), 0.0) \
+        + md1 - posf[None, :] * c
+    pref = seg_cummax(y, first_b, axis=1)
+    idx = jnp.clip(gsl + kcap.astype(jnp.int32), 0, F - 1)
+    return jnp.take_along_axis(pref, jnp.broadcast_to(idx[None, :], (B, F)),
+                               axis=1)

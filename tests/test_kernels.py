@@ -5,9 +5,23 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")   # optional dev dep (requirements-dev.txt)
-from hypothesis import given, settings
-from hypothesis import strategies as st
+# hypothesis is an optional dev dep (requirements-dev.txt): only the
+# property tests skip without it, the deterministic sweeps always run
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:
+    def _needs_hypothesis(*_a, **_k):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    given = settings = _needs_hypothesis
+
+    class _St:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+    st = _St()
 
 from repro.kernels import ops, ref
 from repro.kernels.pig_aggregate import quantize_blockwise
@@ -130,6 +144,96 @@ def test_pig_aggregate_vs_ref(G, N, block):
     err = np.abs(np.asarray(got) - true).max()
     amax = np.abs(np.asarray(x)).max()
     assert err <= G * amax / 127.0 * 0.6
+
+
+# ---------------------------------------------------------- seg fan-in
+def _fanin_case(key, B, G, gsize, mask_per_seg=0):
+    """A vectorsim-shaped burst: F = G*gsize contiguous slots, segment-
+    constant coef/kcap, optionally one +inf-masked slot per segment."""
+    F = G * gsize
+    ks = jax.random.split(key, 4)
+    vals = jax.random.uniform(ks[0], (B, F), jnp.float32, 1.0, 2.0)
+    segid = jnp.repeat(jnp.arange(G), gsize)
+    coef = jnp.repeat(jax.random.uniform(ks[1], (B, G), jnp.float32,
+                                         0.0, 1e-3), gsize, axis=1)
+    kcap = jnp.repeat(
+        jax.random.randint(ks[2], (G,), 0, gsize - mask_per_seg),
+        gsize).astype(jnp.float32)
+    if mask_per_seg:
+        drop = jax.random.randint(ks[3], (G,), 0, gsize)
+        vals = vals.at[:, drop + jnp.arange(G) * gsize].set(jnp.inf)
+    anchor = jnp.full((B,), 1.0, jnp.float32)
+    return (vals, coef, segid, kcap, -0.5, 3e-4, 2e-5, anchor)
+
+
+@pytest.mark.parametrize("B,G,gsize", [
+    (1, 1, 4),        # single segment
+    (8, 4, 6),        # the production shape (N=25, R=4)
+    (8, 8, 16),       # wide, pads 128 -> 128 exactly
+    (3, 5, 7),        # odd everything (padding path, 35 -> 128)
+])
+@pytest.mark.parametrize("mask", [0, 1])
+def test_seg_fanin_vs_ref(B, G, gsize, mask):
+    args = _fanin_case(jax.random.PRNGKey(B * 100 + G * 10 + gsize),
+                       B, G, gsize, mask_per_seg=mask)
+    got = np.asarray(ops.seg_fanin(*args))
+    want = np.asarray(ref.seg_fanin_ref(*args))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_seg_fanin_ties_match_stable_sort():
+    """Duplicate values: the kernel's (value, index) tie-break must equal
+    lax.sort's stable order, so rank-dependent outputs agree exactly."""
+    B, G, gsize = 4, 3, 5
+    vals = jnp.tile(jnp.array([1.5, 1.25, 1.5, 1.25, 1.5], jnp.float32),
+                    (B, G))
+    segid = jnp.repeat(jnp.arange(G), gsize)
+    coef = jnp.zeros((B, G * gsize), jnp.float32)
+    kcap = jnp.full((G * gsize,), 2.0, jnp.float32)
+    anchor = jnp.ones((B,), jnp.float32)
+    args = (vals, coef, segid, kcap, -0.5, 3e-4, 2e-5, anchor)
+    np.testing.assert_array_equal(np.asarray(ops.seg_fanin(*args)),
+                                  np.asarray(ref.seg_fanin_ref(*args)))
+
+
+def test_seg_fanin_empty_admissible_set_is_neg_inf():
+    """A fully-masked segment (all followers down) yields -inf, never NaN
+    (the vcoef * inf hazard the kernel's precondition rules out)."""
+    B, F = 2, 6
+    vals = jnp.where(jnp.arange(F)[None, :] < 3, jnp.inf,
+                     jnp.ones((B, F), jnp.float32))
+    segid = jnp.repeat(jnp.arange(2), 3)
+    coef = jnp.zeros((B, F), jnp.float32)
+    kcap = jnp.ones((F,), jnp.float32)
+    out = np.asarray(ops.seg_fanin(vals, coef, segid, kcap, -0.5, 0.0,
+                                   1e-5, jnp.ones((B,), jnp.float32)))
+    assert np.all(np.isneginf(out[:, :3]))
+    assert np.all(np.isfinite(out[:, 3:]))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 4), st.lists(st.integers(2, 9), min_size=1,
+                                   max_size=5), st.integers(0, 10 ** 6))
+def test_seg_fanin_property(B, sizes, salt):
+    """Random ragged segment layouts: kernel == lax oracle bit for bit
+    (both paths are f32 with the same operation order per slot)."""
+    ks = jax.random.split(jax.random.PRNGKey(salt), 3)
+    F = sum(sizes)
+    segid = jnp.asarray(np.repeat(np.arange(len(sizes)), sizes))
+    vals = jax.random.uniform(ks[0], (B, F), jnp.float32, 0.5, 1.5)
+    coef = jnp.asarray(np.repeat(
+        np.asarray(jax.random.uniform(ks[1], (B, len(sizes)), jnp.float32,
+                                      0.0, 1e-3)), sizes, axis=1))
+    kcap = jnp.asarray(np.repeat(
+        np.asarray(jax.random.randint(ks[2], (len(sizes),), 0, 3)),
+        sizes)).astype(jnp.float32)
+    kcap = jnp.minimum(kcap, jnp.asarray(np.repeat(sizes, sizes) - 1,
+                                         jnp.float32))
+    args = (vals, coef, segid, kcap, -0.3, 1e-4, 3e-5,
+            jnp.full((B,), 0.5, jnp.float32))
+    got = np.asarray(ops.seg_fanin(*args))
+    want = np.asarray(ref.seg_fanin_ref(*args))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
 
 
 @settings(max_examples=20, deadline=None)

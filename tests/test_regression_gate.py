@@ -113,3 +113,66 @@ def test_committed_bounds_file_is_well_formed():
     # every fidelity base pairs a committed bound or at least a DES name
     for base in ref.get("fidelity", {}):
         assert not base.endswith("/batch"), base
+
+
+# ------------------------------------------------------- vectorsim payload
+def _vs_payload(**over):
+    base = {
+        "bench": "vectorsim",
+        "grid": {"cells": 4},
+        "xcheck": {"max_abs_tput_err": 0.04, "max_abs_median_err": 0.03},
+        "sweep1025": {"throughput": 1500},
+        "sharded": {"device_count": 1, "kernel": "lax",
+                    "chunks": [{"cells": 2}, {"cells": 2}]},
+    }
+    base.update(over)
+    return base
+
+
+_VS_REF = {"xcheck_max_abs_tput_err": 0.10, "xcheck_max_abs_median_err": 0.10,
+           "sweep1025_throughput": [1100, 1900], "require_sharded": True}
+
+
+def test_vectorsim_payload_in_bounds_passes():
+    from benchmarks.regression_gate import evaluate_vectorsim
+    failures, lines = evaluate_vectorsim(_vs_payload(), _VS_REF)
+    assert failures == []
+    assert sum("ok" in ln for ln in lines) == 4
+
+
+def test_vectorsim_xcheck_and_sweep_fail_out_of_bounds():
+    from benchmarks.regression_gate import evaluate_vectorsim
+    bad = _vs_payload(xcheck={"max_abs_tput_err": 0.2,
+                              "max_abs_median_err": 0.03})
+    failures, _ = evaluate_vectorsim(bad, _VS_REF)
+    assert failures and "max_abs_tput_err" in failures[0]
+    bad = _vs_payload(sweep1025={"throughput": 3000})
+    failures, _ = evaluate_vectorsim(bad, _VS_REF)
+    assert failures and "sweep1025" in failures[0]
+
+
+def test_vectorsim_missing_sharded_section_fails():
+    from benchmarks.regression_gate import evaluate_vectorsim
+    p = _vs_payload()
+    del p["sharded"]
+    failures, _ = evaluate_vectorsim(p, _VS_REF)
+    assert failures and "sharded" in failures[0]
+    # chunk cells must account for every grid cell
+    p = _vs_payload(sharded={"device_count": 1, "kernel": "lax",
+                             "chunks": [{"cells": 1}]})
+    failures, _ = evaluate_vectorsim(p, _VS_REF)
+    assert failures and "!= grid cells" in failures[0]
+
+
+def test_load_vectorsim_picks_only_vectorsim_payloads(tmp_path):
+    from benchmarks.regression_gate import load_vectorsim
+    a = _write(tmp_path, _vs_payload(), "BENCH_vectorsim.json")
+    b = _write(tmp_path, {"scenarios": []}, "other.json")
+    found = load_vectorsim([a, b])
+    assert list(found) == [a]
+
+
+def test_malformed_vectorsim_payload_is_a_gate_error():
+    from benchmarks.regression_gate import evaluate_vectorsim
+    with pytest.raises(GateError):
+        evaluate_vectorsim({"bench": "vectorsim", "xcheck": {}}, _VS_REF)

@@ -160,6 +160,99 @@ def test_exhausted_grid_retries_with_larger_budget():
     assert out["steps"][0] > 32                 # budget was doubled
 
 
+# ------------------------------------------------- sharded dispatch
+def _small_grid():
+    cfgs = [vs.build_config("pigpaxos", 9, pig=PigConfig(n_groups=2, prc=1)),
+            vs.build_config("paxos", 9)]
+    grid = [(ci, k, s) for ci in range(2) for k in (4, 8) for s in range(6)]
+    return cfgs, grid
+
+
+def test_sharded_equals_unsharded_single_device():
+    """chunked sharded dispatch == the one-call grid, bit for bit (this
+    process sees one device; the 4-device check is the subprocess test)."""
+    cfgs, grid = _small_grid()
+    want = vs.simulate_grid(cfgs, grid, 0.1, 0.05)
+    for chunk in (64, 7):                       # one chunk / ragged chunks
+        got = vs.simulate_grid_sharded(cfgs, grid, 0.1, 0.05, chunk=chunk)
+        for key in ("throughput", "median_s", "p99_s", "committed"):
+            np.testing.assert_array_equal(np.asarray(want[key]), got[key],
+                                          err_msg=f"chunk={chunk} {key}")
+        sh = got["sharding"]
+        assert sh["devices"] >= 1
+        assert sum(m["cells"] for m in sh["chunks"]) == len(grid)
+        assert all(m["wall_s"] > 0 for m in sh["chunks"])
+
+
+def test_sharded_exhausted_cells_retry():
+    cfgs, _ = _small_grid()
+    out = vs.simulate_grid_sharded(cfgs, [(0, 8, 0), (1, 8, 1)], 0.2, 0.05,
+                                   steps=32, chunk=2)
+    assert not out["exhausted"].any()
+    assert (out["steps"] > 32).all()
+
+
+def test_sharded_grid_multidevice_subprocess():
+    """shard_map AND pmap over 4 forced host devices == single device,
+    bit for bit, chunked and unchunked (subprocess keeps pytest's own
+    jax single-device)."""
+    import os
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run(
+        [sys.executable, "tests/shard_worker.py"],
+        capture_output=True, text=True, env=env, timeout=600,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "OK all" in r.stdout
+
+
+# ------------------------------------------------- pallas fan-in kernel
+def test_kernel_pallas_matches_lax_path():
+    """The Pallas segmented fan-in kernel is a drop-in for the sort-based
+    lax path: same grid, same tolerances as the DES cross-check."""
+    pig = PigConfig(n_groups=3, prc=1)
+    kw = dict(pig=pig, clients=(10, 20), seeds=(0, 1),
+              duration=0.15, warmup=0.05)
+    lax_u = vs.simulate_scenario("pigpaxos", 25, kernel="lax", **kw)
+    pal_u = vs.simulate_scenario("pigpaxos", 25, kernel="pallas", **kw)
+    for a, b in zip(lax_u, pal_u):
+        assert b["throughput"] == pytest.approx(a["throughput"], rel=1e-5)
+        assert b["median_ms"] == pytest.approx(a["median_ms"], rel=1e-4)
+        assert b["p99_ms"] == pytest.approx(a["p99_ms"], rel=1e-4)
+
+
+def test_kernel_pallas_multigroup_and_faulty():
+    """Kernel parity holds across R (segment shapes) and under fault masks
+    (down followers = +inf arrivals, the kernel's masked-slot path)."""
+    from repro.faults import crash_window
+    for r in (1, 4):
+        cfgs = [vs.build_config("pigpaxos", 13, pig=PigConfig(n_groups=r))]
+        grid = [(0, 8, s) for s in range(4)]
+        a = vs.simulate_grid(cfgs, grid, 0.1, 0.05, kernel="lax")
+        b = vs.simulate_grid(cfgs, grid, 0.1, 0.05, kernel="pallas")
+        np.testing.assert_allclose(np.asarray(a["throughput"]),
+                                   np.asarray(b["throughput"]), rtol=1e-5)
+    masks = crash_window(5, 0.02, 0.08).to_masks(13, 0.2)
+    cfgs = [vs.build_config("pigpaxos", 13, pig=PigConfig(n_groups=3),
+                            masks=masks)]
+    grid = [(0, 8, s) for s in range(4)]
+    a = vs.simulate_grid(cfgs, grid, 0.2, 0.0, kernel="lax")
+    b = vs.simulate_grid(cfgs, grid, 0.2, 0.0, kernel="pallas")
+    np.testing.assert_allclose(np.asarray(a["throughput"]),
+                               np.asarray(b["throughput"]), rtol=1e-5)
+
+
+def test_resolve_kernel():
+    assert vs._resolve_kernel("auto", "epaxos") == "lax"
+    assert vs._resolve_kernel("lax", "group") == "lax"
+    assert vs._resolve_kernel("pallas", "group") == "pallas"
+    with pytest.raises(ValueError):
+        vs._resolve_kernel("nope", "group")
+
+
 # ------------------------------------------------------ runner / spec
 def test_runner_batch_backend_artifact():
     sc = Scenario(name="t/batch", protocol="pigpaxos", n=9,
