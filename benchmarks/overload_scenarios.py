@@ -1,0 +1,24 @@
+"""Batching/pipelining and overload scenario families (ISSUE 8):
+
+- ``batching`` — leader-side request batching (up to m commands per slot,
+  one phase-2 fan-out amortized over the batch) and finite slot-pipelining
+  depths, swept at saturation on paxos/pigpaxos/epaxos.  The m=1 cells ARE
+  the unbatched baselines; paxos/pigpaxos cells also run on the batch
+  backend and the summarizer emits DES<->batch fidelity ratios the
+  regression gate bounds.
+- ``overload`` — open-loop Poisson/bursty/diurnal arrivals pushed to ~4x
+  saturation, with and without admission control
+  (``repro.runtime.AdmissionPolicy``: queue-length backpressure +
+  token-bucket shedding).  Units carry p99.9, goodput under the 50 ms SLO
+  and every shed counter; the audited smoke cells run the linearizability
+  auditor over shed/bounce/batch interleavings.
+
+Scenarios: ``repro.experiments.catalog``; this module is the
+``run.py --only`` shim."""
+from repro.experiments import report
+
+FAMILIES = ["batching", "overload"]
+
+
+def run(quick: bool = True):
+    return report.family_rows(FAMILIES, quick=quick)

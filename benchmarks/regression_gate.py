@@ -12,6 +12,15 @@ Diffs one or more fresh BENCH JSONs (as written by ``benchmarks/run.py
   window, checked as ``<base>/batch`` over ``<base>`` throughput means)
   leaves its window — the batch backend drifting away from the DES is a
   model regression even when both stay inside their own bounds;
+* a **speedup pair** (``"speedup"``: name -> {"over": base, "min": r})
+  drops below its floor — the ISSUE-8 claim that leader-side batching
+  buys >= 2x at saturation is pinned here, so a change that quietly
+  erodes the batching win fails the build;
+* an **overload scenario** (``"overload"``: name -> {"goodput_at_max":
+  [lo, hi]}) leaves its goodput window at the highest-load grid point —
+  admission control must hold goodput near capacity under ~4x offered
+  load (floor), and the no-admission baseline must still exhibit the
+  collapse the study documents (ceiling ~0);
 * any audited scenario's units report a consistency violation (always
   fatal, regardless of throughput);
 * a gated scenario is missing from the artifacts, or an artifact is
@@ -156,6 +165,19 @@ def _mean_tput(sa: dict):
         raise GateError(f"{sa.get('name')}: malformed summary ({e})") from e
 
 
+def _goodput_at_max(sa: dict) -> Tuple[float, int]:
+    """Mean goodput (completions under the SLO per second) across the units
+    at the scenario's highest client count — the deep-overload grid point."""
+    units = sa.get("units", [])
+    try:
+        cmax = max(u["clients"] for u in units)
+        gs = [u["extras"]["goodput"] for u in units if u["clients"] == cmax]
+        return sum(gs) / len(gs), cmax
+    except (KeyError, TypeError, ValueError, ZeroDivisionError) as e:
+        raise GateError(f"{sa.get('name')}: units lack overload extras "
+                        f"({e})") from e
+
+
 def evaluate(seen: Dict[str, dict], ref: dict) -> Tuple[List[str], List[str]]:
     """Run every check; return (failures, report lines).  Pure over plain
     data so tests can feed corrupted fixtures directly."""
@@ -199,6 +221,49 @@ def evaluate(seen: Dict[str, dict], ref: dict) -> Tuple[List[str], List[str]]:
         if not ok:
             failures.append(f"{base}: DES<->batch throughput ratio "
                             f"{ratio:.3f} outside [{lo}, {hi}]")
+
+    # batching speedup floors: <name> over its unbatched baseline
+    for name, spec in sorted(ref.get("speedup", {}).items()):
+        base = spec["over"]
+        fast, slow = seen.get(name), seen.get(base)
+        if fast is None or slow is None:
+            missing = name if fast is None else base
+            failures.append(f"{name}: speedup pair incomplete — "
+                            f"{missing} missing from the artifact(s)")
+            continue
+        tf, ts = _mean_tput(fast), _mean_tput(slow)
+        if not ts or tf is None:
+            failures.append(f"{name}: speedup pair has no throughput "
+                            f"(fast={tf}, base={ts})")
+            continue
+        ratio = tf / ts
+        ok = ratio >= spec["min"]
+        status = "ok" if ok else "FAIL"
+        lines.append(f"{status:4s} {name + ' [speedup]':40s} "
+                     f"over={ratio:>10.2f}x min={spec['min']}x "
+                     f"(vs {base})")
+        if not ok:
+            failures.append(f"{name}: speedup {ratio:.2f}x over {base} "
+                            f"below the {spec['min']}x floor")
+
+    # overload goodput windows at the highest-load grid point
+    for name, spec in sorted(ref.get("overload", {}).items()):
+        sa = seen.get(name)
+        if sa is None:
+            failures.append(f"{name}: MISSING from the artifact(s) — the "
+                            f"gate must not silently shrink")
+            continue
+        goodput, cmax = _goodput_at_max(sa)
+        lo, hi = spec["goodput_at_max"]
+        ok = lo <= goodput <= hi
+        status = "ok" if ok else "FAIL"
+        lines.append(f"{status:4s} {name + ' [overload]':40s} "
+                     f"goodput={goodput:>7.0f} bounds=[{lo}, {hi}] "
+                     f"(clients={cmax})")
+        if not ok:
+            failures.append(f"{name}: goodput {goodput:.0f} at the "
+                            f"highest-load point (clients={cmax}) outside "
+                            f"[{lo}, {hi}]")
 
     for name, sa in sorted(seen.items()):
         bad = [u for u in sa.get("units", [])
@@ -261,6 +326,8 @@ def main() -> None:
         sys.exit(1)
     print(f"\nregression gate passed: {len(ref.get('bounds', {}))} scenario "
           f"bounds, {len(ref.get('fidelity', {}))} fidelity pairs, "
+          f"{len(ref.get('speedup', {}))} speedup floors, "
+          f"{len(ref.get('overload', {}))} overload windows, "
           f"{len(seen)} scenarios audited for consistency verdicts")
 
 

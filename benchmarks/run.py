@@ -40,6 +40,7 @@ MODULES = [
     "fig17_heatmap",
     "fault_scenarios",
     "extra_scenarios",
+    "overload_scenarios",
     "serialization_cost",
     "analytical_sweep",
     "sim_engine_bench",
@@ -90,6 +91,9 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write all rows (+ artifact + engine stats) to a "
                          "BENCH json")
+    ap.add_argument("--plot", default=None, metavar="DIR",
+                    help="render throughput-vs-load / latency-CDF SVGs for "
+                         "every family that ran (dependency-free)")
     args = ap.parse_args()
 
     from repro import experiments
@@ -158,6 +162,10 @@ def main() -> None:
         print(f"# {m} done in {time.time()-t0:.1f}s", flush=True)
     total = time.time() - t00
     print(f"# total {total:.1f}s, failures={failures}")
+    if args.plot and artifact is not None:
+        from repro.experiments import plot
+        written = plot.render_artifact(artifact, args.plot)
+        print(f"# wrote {len(written)} plots to {args.plot}")
     if args.json:
         payload = {"rows": rows, "total_s": round(total, 1),
                    "failures": failures, "full": bool(args.full)}

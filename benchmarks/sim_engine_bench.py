@@ -45,6 +45,28 @@ def _one(engine: str, n: int = 25, groups: int = 3, clients: int = 40,
     return heap_events, deliveries, wall, committed
 
 
+def _timer_churn(label: str, events: int = 20_000, chains: int = 512):
+    """Timer-only churn: ``chains`` self-rescheduling timers with ~100us
+    exponential gaps plus a cancel/re-arm per fire (the Scheduler timer
+    regime, minus the fused message loop).  Returns (events, wall_s)."""
+    from repro.core.events import CalendarScheduler, Scheduler
+    sched = Scheduler(seed=3) if label == "heap" else CalendarScheduler(seed=3)
+    rng = sched.rng
+    backup = [None]
+
+    def fire():
+        sched.after(rng.exponential(1e-4), fire)
+        if backup[0] is not None:
+            sched.cancel(backup[0])
+        backup[0] = sched.after(1e-3, fire)
+
+    for _ in range(chains):
+        sched.after(rng.exponential(1e-4), fire)
+    t0 = time.perf_counter()
+    n = sched.run(max_events=events)
+    return n, time.perf_counter() - t0
+
+
 def run(quick: bool = True):
     out = []
     rounds = 3 if quick else 5
@@ -108,6 +130,31 @@ def run(quick: bool = True):
                        f"tput={st.throughput:.0f}req/s "
                        f"median={st.median_ms:.2f}ms wall={wall:.1f}s"))
 
+    # ---- scheduler-structure experiment: slab heap vs calendar queue ----
+    # Timer-only churn mirroring the DES timer distribution (dense chained
+    # timers + steady cancel/re-arm).  The fused message loop pushes heap
+    # tuples into Scheduler._heap directly, so the calendar queue can only
+    # ever back the timer path — the verdict records both the measured
+    # ratio and that structural constraint.
+    cal_rounds = []
+    churn = 20_000 if quick else 60_000
+    for _ in range(rounds):
+        rnd = {}
+        for label in ("heap", "calendar"):
+            rnd[label] = _timer_churn(label, events=churn)
+        cal_rounds.append(rnd["heap"][1] / rnd["calendar"][1])
+        for label in ("heap", "calendar"):
+            ev, wall = rnd[label]
+            out.append(row(f"sim_engine/scheduler/{label}", wall, ev,
+                           f"timer_events/s={ev / wall:.0f}"))
+    cal_speed = sorted(cal_rounds)[len(cal_rounds) // 2]
+    verdict = ("keep-heap" if cal_speed < 1.10 else "calendar-wins-timers")
+    verdict_note = (
+        f"{verdict}: calendar/heap wall={cal_speed:.2f}x on timer churn; "
+        "fused message loop requires the slab heap either way "
+        "(network.py pushes heap tuples directly)")
+    out.append(row("sim_engine/scheduler/verdict", 0, 1, verdict_note))
+
     payload = {
         "bench": "sim_engine",
         "workload": "pigpaxos N=25 R=3 closed-loop clients=40",
@@ -118,6 +165,8 @@ def run(quick: bool = True):
         "per_round_speedups_deliveries": [round(r, 2) for r in ratios_deliv],
         "sweep_fast_engine_R3": {str(k): v for k, v in sweep.items()},
         "sweep101_wall_s": sweep[101]["wall_s"],
+        "scheduler_calendar_vs_heap_wall": round(cal_speed, 2),
+        "scheduler_verdict": verdict_note,
     }
     with open(BENCH_PATH, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)

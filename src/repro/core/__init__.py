@@ -6,7 +6,7 @@ from .cluster import (Client, Cluster, OpenLoopClient, Stats,  # noqa: F401
                       TaggedBytes, WorkloadConfig, agreement_ok, zipf_cdf)
 from .epaxos import EPaxosNode  # noqa: F401
 from .events import Scheduler  # noqa: F401
-from .messages import Command, CostModel  # noqa: F401
+from .messages import BatchCmd, Command, CostModel  # noqa: F401
 from .network import Network, Topology, wan_topology  # noqa: F401
-from .paxos import PaxosNode  # noqa: F401
+from .paxos import BatchConfig, PaxosNode  # noqa: F401
 from .pig import DirectComm, PigComm, PigConfig  # noqa: F401

@@ -7,6 +7,7 @@ measured at the client, throughput driven by the number of clients.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
@@ -38,9 +39,22 @@ class WorkloadConfig:
     # "closed"  — one outstanding op per client, next op starts on reply
     # "poisson" — open loop: ops arrive at rate_hz per client regardless
     #             of replies (up to max_outstanding in flight)
+    # "bursty"  — open loop, ON/OFF modulated: rate_hz*burst_factor for the
+    #             first burst_on fraction of each burst_period, a reduced
+    #             OFF rate the rest — the time-average stays rate_hz
+    # "diurnal" — open loop, sinusoidally modulated:
+    #             rate(t) = rate_hz * (1 + diurnal_amp*sin(2πt/period))
+    # The modulated processes draw each inter-arrival gap from the
+    # *instantaneous* rate (deterministic per seed; exact for gaps short
+    # vs. the modulation period, which holds everywhere we sweep).
     arrival: str = "closed"
     rate_hz: float = 200.0
     max_outstanding: int = 64
+    burst_factor: float = 8.0     # ON-phase rate multiplier
+    burst_on: float = 0.1         # fraction of each period spent ON
+    burst_period: float = 1.0     # seconds
+    diurnal_period: float = 2.0   # seconds (compressed day)
+    diurnal_amp: float = 0.8      # peak-to-mean swing, in [0, 1)
     # --- payload distribution -------------------------------------------
     # When payload_choices is set, each put draws its size from the mix
     # (weights default to uniform over the choices).
@@ -53,14 +67,34 @@ class WorkloadConfig:
     # (the paper's setup) = wait forever; required for availability
     # scenarios, where requests sent to a crashed node are silently lost.
     request_timeout: Optional[float] = None
+    # What an OPEN-LOOP client does with an ok=False reply (not-the-leader
+    # bounce or an admission-control shed):
+    # "retry" — re-send after 5 ms, forever (the native behavior; right
+    #           for transient bounces like leader changes)
+    # "drop"  — abandon the op (count it in ``rejected``, free the
+    #           outstanding slot).  The open-loop overload model: a shed
+    #           request costs the server ONE cheap bounce, instead of a
+    #           5 ms retry storm from every capped-out client amplifying
+    #           the overload it was shed to relieve.
+    reject_action: str = "retry"
 
     def __post_init__(self):
         # scenarios are declarative data: a typo must fail loudly, not run a
         # mislabeled uniform/closed workload with green CI
         if self.key_dist not in ("uniform", "zipfian", "conflict"):
             raise ValueError(f"unknown key_dist {self.key_dist!r}")
-        if self.arrival not in ("closed", "poisson"):
+        if self.arrival not in ("closed", "poisson", "bursty", "diurnal"):
             raise ValueError(f"unknown arrival {self.arrival!r}")
+        if self.arrival == "bursty":
+            if not (0.0 < self.burst_on < 1.0):
+                raise ValueError("burst_on must be in (0, 1)")
+            if self.burst_factor * self.burst_on > 1.0 + 1e-12:
+                raise ValueError("burst_factor * burst_on must be <= 1 "
+                                 "(the OFF-phase rate would go negative)")
+        if self.arrival == "diurnal" and not (0.0 <= self.diurnal_amp < 1.0):
+            raise ValueError("diurnal_amp must be in [0, 1)")
+        if self.reject_action not in ("retry", "drop"):
+            raise ValueError(f"unknown reject_action {self.reject_action!r}")
 
 
 _zipf_cdf_cache: Dict[tuple, np.ndarray] = {}
@@ -239,10 +273,28 @@ class OpenLoopClient(Client):
     def __init__(self, *args, **kwargs):
         super().__init__(*args, **kwargs)
         self.outstanding: Dict[int, tuple] = {}   # seq -> (sent_at, cmd, rec)
-        self.shed = 0
+        self.shed = 0        # arrivals dropped at the client (cap reached)
+        self.rejected = 0    # ops abandoned on ok=False (reject_action="drop")
 
     def start(self) -> None:
         self._arrival()
+
+    def _rate_at(self, t: float) -> float:
+        """Instantaneous arrival rate (Hz) — constant for "poisson",
+        modulated for "bursty"/"diurnal" (see WorkloadConfig)."""
+        wl = self.wl
+        a = wl.arrival
+        if a == "bursty":
+            if (t % wl.burst_period) / wl.burst_period < wl.burst_on:
+                return wl.rate_hz * wl.burst_factor
+            off = (wl.rate_hz * max(0.0, 1.0 - wl.burst_factor * wl.burst_on)
+                   / (1.0 - wl.burst_on))
+            return max(off, 1e-9)
+        if a == "diurnal":
+            return wl.rate_hz * max(
+                1e-9, 1.0 + wl.diurnal_amp
+                * math.sin(2.0 * math.pi * t / wl.diurnal_period))
+        return wl.rate_hz
 
     def _arrival(self) -> None:
         sched = self.cluster.sched
@@ -268,7 +320,8 @@ class OpenLoopClient(Client):
                             lambda: self._timeout_seq(seq))
         else:
             self.shed += 1
-        sched.after(rng.exponential(1.0 / self.wl.rate_hz), self._arrival)
+        sched.after(rng.exponential(1.0 / self._rate_at(sched.now)),
+                    self._arrival)
 
     def deliver(self, msg: ClientReply) -> None:
         entry = self.outstanding.get(msg.seq)
@@ -276,6 +329,10 @@ class OpenLoopClient(Client):
             return   # stale duplicate
         sched = self.cluster.sched
         if not msg.ok:
+            if self.wl.reject_action == "drop":
+                del self.outstanding[msg.seq]
+                self.rejected += 1
+                return
             seq = msg.seq
             sched.after(5e-3, lambda: self._retry_seq(seq))
             return
@@ -315,7 +372,8 @@ class Cluster:
                  pig: Optional[PigConfig] = None, seed: int = 0,
                  cost: Optional[CostModel] = None, leader_timeout: float = 50e-3,
                  quorums=None, engine: str = "exact",
-                 record_history: bool = False, spare_nodes: int = 0):
+                 record_history: bool = False, spare_nodes: int = 0,
+                 batch=None, pipeline_depth: int = 0):
         """``engine`` selects the simulation engine:
 
         * ``"exact"`` (default) — fused slab engine, trace-identical to the
@@ -333,13 +391,25 @@ class Cluster:
         ``n + spare_nodes - 1``) OUTSIDE the initial membership.  They sit
         inert (non-voting learners) until ``add_node`` joins them through
         the protocol's reconfiguration path.  DES engines only.
+
+        ``batch`` (a ``core.paxos.BatchConfig``) enables leader-side
+        request batching; ``pipeline_depth`` > 0 throttles the leader to
+        that many uncommitted in-flight slots (0 = unbounded, the native
+        behavior).  DES engines only — the verbatim seed stack has no
+        batching surface.
         """
         self.protocol = protocol
         self.n = n
         self.engine = engine
         self.record_history = record_history
+        self.batch = batch
+        self.pipeline_depth = pipeline_depth
         if spare_nodes and engine == "ref":
             raise ValueError("membership change is not supported by the "
+                             "verbatim seed stack (engine='ref') — use "
+                             "'exact' or 'fast'")
+        if (batch is not None or pipeline_depth) and engine == "ref":
+            raise ValueError("batching/pipelining is not supported by the "
                              "verbatim seed stack (engine='ref') — use "
                              "'exact' or 'fast'")
         total = n + spare_nodes
@@ -366,19 +436,21 @@ class Cluster:
         self.leader_timeout = leader_timeout
         peers = list(range(n))
         self.nodes: List[Node] = []
+        bkw = ({} if engine == "ref"
+               else {"batch": batch, "pipeline_depth": pipeline_depth})
         for i in range(total):
             if protocol == "epaxos":
                 # the seed class has no recovery surface; the new engines
                 # probe stuck instances after 2 leader timeouts (fault runs)
                 ekw = ({} if engine == "ref"
-                       else {"recovery_timeout": 2 * leader_timeout})
+                       else {"recovery_timeout": 2 * leader_timeout, **bkw})
                 self.nodes.append(epaxos_cls(i, self.net, self.sched, peers,
                                              **ekw))
             else:
                 self.nodes.append(paxos_cls(i, self.net, self.sched, peers,
                                             pig=pig if protocol == "pigpaxos" else None,
                                             leader_timeout=leader_timeout,
-                                            quorums=quorums))
+                                            quorums=quorums, **bkw))
         # cluster-level membership view, fed by node callbacks as cfg
         # commands apply (client routing + the auditor's durable set)
         self.members: List[int] = list(peers)
@@ -451,7 +523,7 @@ class Cluster:
                     stop_at: float = float("inf"),
                     start_at: float = 20e-3) -> None:
         wl = workload or WorkloadConfig()
-        cls = OpenLoopClient if wl.arrival == "poisson" else Client
+        cls = Client if wl.arrival == "closed" else OpenLoopClient
         rng = self.sched.rng
         for c in range(k):
             if self.protocol == "epaxos":
@@ -546,7 +618,12 @@ def agreement_ok(cluster: Cluster) -> bool:
     for nd in cluster.nodes:
         logs.append([(s, c.client_id, c.seq, c.op, c.key) for s, c in nd.applied_log])
     ref = max(logs, key=len)
-    pos = {e[0]: i for i, e in enumerate(ref)}    # slot/inst-id -> index
+    # slot/inst-id -> FIRST index (batched slots contribute one applied
+    # entry per sub-command, so a slot id can repeat; windows start at
+    # batch boundaries, i.e. the first entry of the slot)
+    pos: Dict = {}
+    for i, e in enumerate(ref):
+        pos.setdefault(e[0], i)
     for lg in logs:
         if not lg or lg == ref[:len(lg)]:
             continue                               # prefix: the usual case

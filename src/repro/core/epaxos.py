@@ -17,11 +17,12 @@ from dataclasses import dataclass, field
 from typing import Dict, Optional
 
 from .events import Scheduler
-from .messages import (ClientReply, ClientRequest, Command, EAccept,
+from .messages import (BatchCmd, ClientReply, ClientRequest, Command, EAccept,
                        EAcceptReply, ECommit, EPrepare, EPrepareReply,
                        JoinReq, PreAccept, PreAcceptReply, Snapshot)
 from .network import Network
 from .node import Node
+from .paxos import BatchConfig
 from .quorums import fast_quorum, majority
 
 
@@ -41,6 +42,9 @@ class _Inst:
     # (epoch >= 1, recoverer_id), so they always win comparisons.
     ballot: tuple = (0, 0)
     max_ballot: tuple = (0, 0)
+    # batching/pipelining extensions (None/False on the unbatched path)
+    client_srcs: Optional[tuple] = None   # per-sub-command reply routing
+    gated: bool = False                   # counted against pipeline_depth
 
 
 @dataclass
@@ -54,7 +58,9 @@ class _Recovery:
 
 class EPaxosNode(Node):
     def __init__(self, node_id: int, net: Network, sched: Scheduler,
-                 peers: list[int], recovery_timeout: float = 100e-3):
+                 peers: list[int], recovery_timeout: float = 100e-3,
+                 batch: Optional[BatchConfig] = None,
+                 pipeline_depth: int = 0):
         super().__init__(node_id, net, sched)
         self.peers = list(peers)
         self.n = len(peers)
@@ -62,6 +68,19 @@ class EPaxosNode(Node):
         self.maj = majority(self.n)
         self.next_inum = 0
         self.insts: Dict[tuple, _Inst] = {}
+        # leaderless batching: every node batches the requests IT receives
+        # (clients pick random command leaders, so each node runs its own
+        # buffer).  pipeline_depth throttles this node's own uncommitted
+        # instances; 0 = unbounded (native behavior).
+        if pipeline_depth < 0:
+            raise ValueError("pipeline_depth must be >= 0")
+        self.batch = batch
+        self.pipeline_depth = pipeline_depth
+        self._batching = batch is not None or pipeline_depth > 0
+        self._buf: list = []            # (cmd, client_src) awaiting an inst
+        self._buf_timer: Optional[int] = None
+        self._held: list = []           # sealed batches awaiting pipeline room
+        self._inflight = 0              # own gated insts proposed, uncommitted
         # ---- explicit-prepare recovery (off unless a fault plan enables
         # it: arming probe timers on every transiently-blocked dependency
         # would perturb the golden traces and the fault-free hot path) ----
@@ -107,16 +126,82 @@ class EPaxosNode(Node):
             self.send(msg.src, ClientReply(client_id=msg.cmd.client_id,
                                            seq=msg.cmd.seq, ok=False))
             return
+        if self._batching:
+            self._enqueue(msg.cmd, msg.src)
+            return
         self._propose_cmd(msg.cmd, msg.src)
 
-    def _propose_cmd(self, cmd: Command, client_src: int) -> None:
+    # ------------------------------------------------ batching + pipelining
+    def _enqueue(self, cmd: Command, client_src: int) -> None:
+        self._buf.append((cmd, client_src))
+        b = self.batch
+        if b is None or len(self._buf) >= b.max_batch:
+            self._flush_buf()
+        elif self._buf_timer is None:
+            self._buf_timer = self.set_timer(b.max_delay_ms * 1e-3,
+                                             self._buf_timeout)
+
+    def _buf_timeout(self) -> None:
+        self._buf_timer = None
+        self._flush_buf()
+
+    def _flush_buf(self) -> None:
+        if self._buf_timer is not None:
+            self.cancel_timer(self._buf_timer)
+            self._buf_timer = None
+        if not self._buf:
+            return
+        buf = self._buf
+        self._buf = []
+        d = self.pipeline_depth
+        if d > 0 and self._inflight >= d:
+            self._held.append(buf)     # pipeline full: hold the sealed batch
+            return
+        self._propose_batch(buf)
+
+    def _propose_batch(self, buf: list) -> None:
+        gated = self.pipeline_depth > 0
+        if gated:
+            self._inflight += 1
+        if len(buf) == 1:
+            cmd, src = buf[0]
+            iid = self._propose_cmd(cmd, src)
+        else:
+            iid = self._propose_cmd(BatchCmd(cmds=tuple(c for c, _ in buf)),
+                                    client_src=-1,
+                                    client_srcs=tuple(s for _, s in buf))
+        if gated:
+            self.insts[iid].gated = True
+
+    def _release_held(self) -> None:
+        d = self.pipeline_depth
+        while self._held and (d <= 0 or self._inflight < d):
+            self._propose_batch(self._held.pop(0))
+
+    def _drop_buffers(self, bounce: bool) -> None:
+        if self._buf_timer is not None:
+            self.cancel_timer(self._buf_timer)
+            self._buf_timer = None
+        pending = self._buf + [p for b in self._held for p in b]
+        self._buf = []
+        self._held = []
+        self._inflight = 0
+        if bounce:
+            for cmd, src in pending:
+                if src >= 0:
+                    self.send(src, ClientReply(client_id=cmd.client_id,
+                                               seq=cmd.seq, ok=False))
+
+    def _propose_cmd(self, cmd: Command, client_src: int,
+                     client_srcs: Optional[tuple] = None) -> tuple:
         inst_id = (self.id, self.next_inum)
         self.next_inum += 1
         deps = self._deps_for(cmd, exclude=inst_id)
         seq = 1 + max([self.insts[d].seq for d in deps
                        if d in self.insts], default=0)
         inst = _Inst(cmd=cmd, deps=deps, seq=seq, state="preaccepted",
-                     client_src=client_src, is_mine=True)
+                     client_src=client_src, is_mine=True,
+                     client_srcs=client_srcs)
         self.insts[inst_id] = inst
         self._note_cmd(cmd, inst_id)
         # one shared instance per broadcast: receivers never mutate messages
@@ -125,6 +210,7 @@ class EPaxosNode(Node):
         for p in self.peers:
             if p != self.id:
                 self.send(p, m)
+        return inst_id
 
     def _conflicts(self, key: int, exclude: tuple) -> frozenset:
         m = self.interf.get(key)
@@ -143,6 +229,15 @@ class EPaxosNode(Node):
             if lc is not None and lc != exclude and lc not in deps:
                 deps = deps | {lc}
             return deps
+        if op == "batch":
+            # a batch interferes with whatever any sub-command interferes with
+            bs: set = set()
+            for c in cmd.cmds:
+                bs.update(self._conflicts(c.key, exclude=exclude))
+            lc = self._last_cfg
+            if lc is not None and lc != exclude:
+                bs.add(lc)
+            return frozenset(bs)
         ds: set = set()
         for m in self.interf.values():
             ds.update(m.values())
@@ -158,6 +253,9 @@ class EPaxosNode(Node):
         op = cmd.op
         if op == "put" or op == "get":
             self._note_interf(cmd.key, inst_id)
+        elif op == "batch":
+            for c in cmd.cmds:
+                self._note_interf(c.key, inst_id)
         else:
             # cfg commands live outside the per-key map (their ``key`` is a
             # node id and must not collide with data keys)
@@ -254,6 +352,11 @@ class EPaxosNode(Node):
         # a small undercount beats inflating the summed committed stat
         if inst.cmd is not None and inst.is_mine:
             self.committed_count += 1
+        if inst.gated:
+            inst.gated = False
+            self._inflight -= 1
+            if self._held:
+                self._release_held()
         m = ECommit(inst=inst_id, cmd=inst.cmd, deps=inst.deps, seq=inst.seq,
                     n_cluster=self.n)
         for p in self.peers:
@@ -371,6 +474,29 @@ class EPaxosNode(Node):
             # client's retry re-proposes the real command elsewhere
             inst.state = "executed"
             return
+        if cmd.__class__ is BatchCmd:
+            # apply sub-commands in batch order, each through the same
+            # at-most-once dedup; replicas make identical skip decisions
+            done = self._done_ops
+            results = []
+            for c in cmd.cmds:
+                op_id = (c.client_id, c.seq)
+                if op_id in done:
+                    results.append(done[op_id])
+                    continue
+                val = self.store.apply(c)
+                done[op_id] = val
+                self.applied_log.append((inst_id, c))
+                results.append(val)
+            inst.state = "executed"
+            srcs = inst.client_srcs
+            if inst.is_mine and srcs:
+                for c, src, val in zip(cmd.cmds, srcs, results):
+                    if src >= 0:
+                        self.send(src, ClientReply(client_id=c.client_id,
+                                                   seq=c.seq, ok=True,
+                                                   value=val))
+            return
         op_id = (cmd.client_id, cmd.seq)
         done = self._done_ops
         if op_id in done:
@@ -433,6 +559,8 @@ class EPaxosNode(Node):
                 members.remove(nid)
             if nid == self.id:
                 self.removed = True
+                if self._batching:
+                    self._drop_buffers(bounce=True)
         else:
             raise RuntimeError(f"unknown configuration op {cmd.op!r}")
         self._refresh_quorums()
@@ -541,6 +669,12 @@ class EPaxosNode(Node):
         if not self.crashed:
             return
         super().recover()
+        if self._batching:
+            # buffered commands are volatile: the crash lost them (clients
+            # retry; _done_ops absorbs duplicates) and gated flags re-derive
+            self._drop_buffers(bounce=False)
+            for inst in self.insts.values():
+                inst.gated = False
         if not self.recovery_enabled:
             return
         self._recover_armed.clear()

@@ -29,6 +29,7 @@ RNG consumption order.
 from __future__ import annotations
 
 import heapq
+from bisect import insort
 from typing import Callable, Optional
 
 import numpy as np
@@ -124,3 +125,143 @@ class Scheduler:
 
     def idle(self) -> bool:
         return not self._heap
+
+
+# ---------------------------------------------------------------------------
+# Calendar-queue experiment (Brown 1988).  A DES event set is near-uniform
+# in time, which is the textbook case for an O(1)-amortized calendar queue
+# vs the O(log n) binary heap.  This is an EXPERIMENT, not the engine:
+# the fused run loop (network.Network._run / _run_exact) pushes event
+# tuples straight into ``Scheduler._heap`` with heapq — the golden-trace
+# event encoding — so the calendar can only back the timer-only generic
+# loop.  ``benchmarks/sim_engine_bench.py`` races both structures on the
+# engine's timer distribution and records the adoption verdict in
+# BENCH_sim.json (``scheduler_verdict``).
+# ---------------------------------------------------------------------------
+class CalendarQueue:
+    """Priority queue of event tuples ordered by ``(t, seq)``: an array of
+    time buckets of fixed ``width``, dequeue scanning from the bucket of
+    the last-popped priority.  Amortized O(1) push/pop when events spread
+    evenly over time; degrades gracefully (direct min scan) when a year's
+    scan comes up empty.  Resizes (and re-estimates width from the live
+    event-gap distribution) when occupancy leaves the [n/2, 2n] band."""
+
+    __slots__ = ("_w", "_n", "_buckets", "_size", "_last")
+
+    def __init__(self, width: float = 1e-4, nbuckets: int = 64):
+        self._w = float(width)
+        self._n = int(nbuckets)
+        self._buckets: list[list] = [[] for _ in range(self._n)]
+        self._size = 0
+        self._last = 0.0          # priority of the last pop (monotone)
+
+    def __len__(self) -> int:
+        return self._size
+
+    def push(self, ev: tuple) -> None:
+        insort(self._buckets[int(ev[0] / self._w) % self._n], ev)
+        self._size += 1
+        if self._size > 2 * self._n:
+            self._resize(2 * self._n)
+
+    def pop(self) -> tuple:
+        if not self._size:
+            raise IndexError("pop from empty CalendarQueue")
+        w, n = self._w, self._n
+        year = int(self._last / w)
+        i = year % n
+        top = (year + 1) * w
+        for _ in range(n):
+            b = self._buckets[i]
+            if b and b[0][0] < top:
+                ev = b.pop(0)
+                self._size -= 1
+                self._last = ev[0]
+                if self._size < self._n // 2 and self._n > 64:
+                    self._resize(self._n // 2)
+                return ev
+            i = (i + 1) % n
+            top += w
+        # sparse year: the whole calendar cycle was dry — take the global
+        # minimum directly and resync the clock to it
+        ev = min((b[0] for b in self._buckets if b))
+        self._buckets[int(ev[0] / w) % n].remove(ev)
+        self._size -= 1
+        self._last = ev[0]
+        return ev
+
+    def _resize(self, m: int) -> None:
+        evs = sorted(e for b in self._buckets for e in b)
+        if len(evs) >= 2:
+            # width ~ 2x the mean gap of the upcoming events: each bucket
+            # holds a couple of events, the sweet spot for bucket scans
+            k = min(len(evs), 64)
+            gap = (evs[k - 1][0] - evs[0][0]) / max(k - 1, 1)
+            if gap > 0.0:
+                self._w = 2.0 * gap
+        self._n = m
+        self._buckets = [[] for _ in range(m)]
+        for e in evs:                     # evs sorted -> insort appends
+            insort(self._buckets[int(e[0] / self._w) % m], e)
+        self._size = len(evs)
+
+
+class CalendarScheduler(Scheduler):
+    """``Scheduler`` with the timer path backed by a :class:`CalendarQueue`
+    instead of the slab heap — same timer-id/cancellation protocol, same
+    tie-break.  Timer-only: attaching a :class:`repro.core.network.Network`
+    is refused (its fused loop owns the heap encoding)."""
+
+    __slots__ = ("_cal",)
+
+    def __init__(self, seed: int = 0, width: float = 1e-4):
+        super().__init__(seed)
+        self._cal = CalendarQueue(width=width)
+
+    def at(self, t: float, fn: Callable[[], None]) -> int:
+        gens = self._gen
+        free = self._free
+        if free:
+            slot = free.pop()
+            gen = gens[slot]
+        else:
+            slot = len(gens)
+            gens.append(0)
+            gen = 0
+        self._seq += 1
+        self._cal.push((t, self._seq, K_CALL, slot, gen, fn, None))
+        return (slot << 32) | gen
+
+    def run(self, until: float = _INF, max_events: Optional[int] = None) -> int:
+        if self._net is not None:
+            raise RuntimeError(
+                "CalendarScheduler is a timer-only experiment: the fused "
+                "network loop pushes heap tuples directly (see events.py)")
+        n = 0
+        cal = self._cal
+        gens = self._gen
+        free = self._free
+        while cal:
+            ev = cal.pop()
+            t = ev[0]
+            if t > until:
+                cal.push(ev)           # beyond horizon: put it back
+                break
+            slot = ev[3]
+            gen = ev[4]
+            free.append(slot)
+            if gens[slot] != gen:
+                continue
+            gens[slot] = gen + 1
+            self.now = t
+            ev[5]()
+            n += 1
+            if max_events is not None and n >= max_events:
+                break
+        if self.now < until < _INF:
+            self.now = until
+        self.events += n
+        return n
+
+    def idle(self) -> bool:
+        return not self._cal

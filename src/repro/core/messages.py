@@ -33,6 +33,28 @@ class Command:
 
 
 @dataclass(slots=True)
+class BatchCmd:
+    """Several client commands packed into one slot by a batching leader.
+
+    Quacks like :class:`Command` (same field names) so it can ride inside
+    the existing ``P2a``/``PreAccept``/``ECommit`` envelopes and survive
+    P1b / explicit-prepare recovery unchanged: recovery re-proposes the
+    whole batch as one opaque value, so a batch commits or recovers
+    atomically — sub-commands are never split across slots.
+    """
+    cmds: tuple = ()              # tuple[Command, ...]
+    client_id: int = -1
+    seq: int = 0
+    op: str = "batch"
+    key: int = -1
+    value: Optional[bytes] = None
+
+    def wire_size(self) -> int:
+        # 8-byte batch header (count + framing) + concatenated commands
+        return 8 + sum(c.wire_size() for c in self.cmds)
+
+
+@dataclass(slots=True)
 class Msg:
     src: int = -1
     # per-instance CPU-cost cache (CostModel.cpu_cost): broadcasts reuse one

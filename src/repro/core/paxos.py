@@ -19,8 +19,8 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, Optional
 
 from .events import Scheduler
-from .messages import (ClientReply, ClientRequest, Command, JoinReq, Msg,
-                       P1a, P1b, P2a, P2b, P3, PigAggregate, Snapshot)
+from .messages import (BatchCmd, ClientReply, ClientRequest, Command, JoinReq,
+                       Msg, P1a, P1b, P2a, P2b, P3, PigAggregate, Snapshot)
 from .network import Network
 from .node import Node
 from .pig import DirectComm, PigComm, PigConfig, _P1Aggregate
@@ -40,6 +40,27 @@ class CatchUpResp(Msg):
         return 24 + sum(16 + c.wire_size() for c in self.entries.values())
 
 
+@dataclass(frozen=True)
+class BatchConfig:
+    """Leader-side request batching (HT-Paxos-style ordering-stage batching).
+
+    The leader buffers incoming client commands and packs up to
+    ``max_batch`` of them into ONE slot (one phase-2 fan-out/fan-in — and
+    one Pig relay round — amortized across the batch).  A partial buffer
+    flushes after ``max_delay_ms``.  ``max_batch=1`` is byte-identical to
+    the unbatched engine: the buffer flushes on the first enqueue, arms no
+    timer, and proposes the bare command (no BatchCmd envelope).
+    """
+    max_batch: int = 8
+    max_delay_ms: float = 1.0
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if self.max_delay_ms < 0:
+            raise ValueError("max_delay_ms must be >= 0")
+
+
 @dataclass
 class _Slot:
     cmd: Command
@@ -49,13 +70,18 @@ class _Slot:
     pig_ids: list = field(default_factory=list)
     timer: Optional[int] = None
     retries: int = 0
+    # batching/pipelining extensions (None/False on the unbatched path)
+    client_srcs: Optional[tuple] = None   # per-sub-command reply routing
+    gated: bool = False                   # counted against pipeline_depth
 
 
 class PaxosNode(Node):
     def __init__(self, node_id: int, net: Network, sched: Scheduler,
                  peers: list[int], pig: Optional[PigConfig] = None,
                  leader_timeout: float = 50e-3,
-                 quorums: Optional["QuorumSystem"] = None):
+                 quorums: Optional["QuorumSystem"] = None,
+                 batch: Optional[BatchConfig] = None,
+                 pipeline_depth: int = 0):
         super().__init__(node_id, net, sched)
         self.peers = list(peers)
         self.n = len(peers)
@@ -86,6 +112,20 @@ class PaxosNode(Node):
         self.is_leader = False
         self.next_slot: int = 0
         self.log: Dict[int, _Slot] = {}
+        # leader-side batching + slot pipelining.  pipeline_depth == 0 is
+        # "unbounded" — the seed engine's native behavior (every request
+        # proposes immediately); depth k > 0 throttles to k uncommitted
+        # gated slots, queueing sealed batches in _held until a commit
+        # frees a pipeline stage.
+        if pipeline_depth < 0:
+            raise ValueError("pipeline_depth must be >= 0")
+        self.batch = batch
+        self.pipeline_depth = pipeline_depth
+        self._batching = batch is not None or pipeline_depth > 0
+        self._buf: list = []            # (cmd, client_src) awaiting a slot
+        self._buf_timer: Optional[int] = None
+        self._held: list = []           # sealed batches awaiting pipeline room
+        self._inflight = 0              # gated slots proposed, not committed
         self._p1_voters: set = set()
         self._p1_accepted: Dict[int, tuple] = {}
         self._p1_timer: Optional[int] = None
@@ -159,6 +199,14 @@ class PaxosNode(Node):
         self.is_leader = True
         if self._p1_timer is not None:
             self.cancel_timer(self._p1_timer)
+        if self._batching:
+            # buffered commands are volatile leader state: a crash lost them
+            # (clients retry; session dedup absorbs duplicates), and surviving
+            # log entries re-arm ungated — recovery correctness outranks the
+            # pipeline throttle for one round
+            self._drop_buffers(bounce=False)
+            for e in self.log.values():
+                e.gated = False
         # catch up slots that a quorum already committed (they are pruned
         # from P1b.accepted, so they must be *learned*, not re-proposed)
         max_ci, ci_src = self._p1_max_ci
@@ -203,6 +251,26 @@ class PaxosNode(Node):
             if e.timer is not None:
                 self.cancel_timer(e.timer)
         self.log.clear()
+        if self._batching:
+            self._drop_buffers(bounce=True)
+
+    def _drop_buffers(self, bounce: bool) -> None:
+        """Clear the batching buffers.  ``bounce=True`` (step-down) answers
+        each buffered client ok=False — the same fast not-leader bounce an
+        unbatched follower sends — so clients re-route without waiting out
+        their request timeout."""
+        if self._buf_timer is not None:
+            self.cancel_timer(self._buf_timer)
+            self._buf_timer = None
+        pending = self._buf + [p for b in self._held for p in b]
+        self._buf = []
+        self._held = []
+        self._inflight = 0
+        if bounce:
+            for cmd, src in pending:
+                if src >= 0:
+                    self.send(src, ClientReply(client_id=cmd.client_id,
+                                               seq=cmd.seq, ok=False))
 
     # -------------------------------------------------------------- phase 2
     def on_ClientRequest(self, msg: ClientRequest) -> None:
@@ -210,12 +278,67 @@ class PaxosNode(Node):
             self.send(msg.src, ClientReply(client_id=msg.cmd.client_id,
                                            seq=msg.cmd.seq, ok=False))
             return
+        if self._batching:
+            self._enqueue(msg.cmd, msg.src)
+            return
         slot = self.next_slot
         self.next_slot += 1
         self._propose_at(slot, msg.cmd, client_src=msg.src)
 
-    def _propose_at(self, slot: int, cmd: Command, client_src: int) -> None:
-        entry = _Slot(cmd=cmd, client_src=client_src)
+    # ------------------------------------------------ batching + pipelining
+    def _enqueue(self, cmd: Command, client_src: int) -> None:
+        self._buf.append((cmd, client_src))
+        b = self.batch
+        if b is None or len(self._buf) >= b.max_batch:
+            self._flush_buf()
+        elif self._buf_timer is None:
+            self._buf_timer = self.set_timer(b.max_delay_ms * 1e-3,
+                                             self._buf_timeout)
+
+    def _buf_timeout(self) -> None:
+        self._buf_timer = None
+        self._flush_buf()
+
+    def _flush_buf(self) -> None:
+        if self._buf_timer is not None:
+            self.cancel_timer(self._buf_timer)
+            self._buf_timer = None
+        if not self._buf:
+            return
+        buf = self._buf
+        self._buf = []
+        d = self.pipeline_depth
+        if d > 0 and self._inflight >= d:
+            self._held.append(buf)     # pipeline full: hold the sealed batch
+            return
+        self._propose_batch(buf)
+
+    def _propose_batch(self, buf: list) -> None:
+        slot = self.next_slot
+        self.next_slot += 1
+        gated = self.pipeline_depth > 0
+        if gated:
+            self._inflight += 1
+        if len(buf) == 1:
+            # size-1 batch proposes the bare command: identical wire bytes,
+            # replies, and session state to the unbatched engine
+            cmd, src = buf[0]
+            self._propose_at(slot, cmd, client_src=src)
+        else:
+            self._propose_at(slot, BatchCmd(cmds=tuple(c for c, _ in buf)),
+                             client_src=-1,
+                             client_srcs=tuple(s for _, s in buf))
+        if gated:
+            self.log[slot].gated = True
+
+    def _release_held(self) -> None:
+        d = self.pipeline_depth
+        while self._held and (d <= 0 or self._inflight < d):
+            self._propose_batch(self._held.pop(0))
+
+    def _propose_at(self, slot: int, cmd: Command, client_src: int,
+                    client_srcs: Optional[tuple] = None) -> None:
+        entry = _Slot(cmd=cmd, client_src=client_src, client_srcs=client_srcs)
         entry.voters.add(self.id)
         self.log[slot] = entry
         # leader accepts locally
@@ -270,6 +393,11 @@ class PaxosNode(Node):
             self.cancel_timer(entry.timer)
         self.committed[slot] = entry.cmd
         self.committed_count += 1
+        if entry.gated:
+            entry.gated = False
+            self._inflight -= 1
+            if self._held:
+                self._release_held()
         self._advance()
 
     def _apply_slot(self, s: int, cmd: Command) -> tuple:
@@ -283,7 +411,14 @@ class PaxosNode(Node):
         should be answered with ``val`` — either a fresh apply or an exact
         duplicate (timeout retry) answered from the session cache; a stale
         duplicate (seq below the session high-water mark) gets neither an
-        apply nor a reply."""
+        apply nor a reply.
+
+        A ``BatchCmd`` applies its sub-commands in order, each through the
+        same dedup logic (identical skip decisions on every replica); the
+        return value is then ``(True, [(ack, val), ...])`` — one pair per
+        sub-command, in batch order."""
+        if cmd.__class__ is BatchCmd:
+            return True, [self._apply_slot(s, c) for c in cmd.cmds]
         sess = self._session.get(cmd.client_id)
         if sess is not None and cmd.seq <= sess[0]:
             if cmd.seq == sess[0]:
@@ -311,7 +446,17 @@ class PaxosNode(Node):
             self.commit_index = s
             ack, val = self._apply_slot(s, cmd)
             e = self.log.get(s)
-            if ack and e is not None and e.client_src >= 0:
+            if e is None:
+                continue
+            if cmd.__class__ is BatchCmd:
+                srcs = e.client_srcs
+                if srcs:    # None after crash-recovery re-propose: no replies
+                    for c, src, (a, v) in zip(cmd.cmds, srcs, val):
+                        if a and src >= 0:
+                            self.send(src, ClientReply(client_id=c.client_id,
+                                                       seq=c.seq, ok=True,
+                                                       value=v))
+            elif ack and e.client_src >= 0:
                 self.send(e.client_src,
                           ClientReply(client_id=cmd.client_id, seq=cmd.seq,
                                       ok=True, value=val))

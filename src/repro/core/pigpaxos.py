@@ -18,7 +18,7 @@ from typing import Optional
 
 from .events import Scheduler
 from .network import Network
-from .paxos import PaxosNode
+from .paxos import BatchConfig, PaxosNode
 from .pig import PigConfig
 from .quorums import QuorumSystem
 
@@ -29,7 +29,10 @@ class PigPaxosNode(PaxosNode):
     def __init__(self, node_id: int, net: Network, sched: Scheduler,
                  peers: list[int], pig: Optional[PigConfig] = None,
                  leader_timeout: float = 50e-3,
-                 quorums: Optional[QuorumSystem] = None):
+                 quorums: Optional[QuorumSystem] = None,
+                 batch: Optional[BatchConfig] = None,
+                 pipeline_depth: int = 0):
         super().__init__(node_id, net, sched, peers,
                          pig=pig or PigConfig(),
-                         leader_timeout=leader_timeout, quorums=quorums)
+                         leader_timeout=leader_timeout, quorums=quorums,
+                         batch=batch, pipeline_depth=pipeline_depth)

@@ -172,16 +172,37 @@ def _expected_wires(workload) -> Dict[str, float]:
 
 def build_config(protocol: str, n: int, pig=None, topo=None, workload=None,
                  cost: Optional[CostModel] = None, label: str = "",
-                 masks: Optional[Dict[str, np.ndarray]] = None) -> SimConfig:
+                 masks: Optional[Dict[str, np.ndarray]] = None,
+                 batch_m: int = 1) -> SimConfig:
     """Lower a (protocol, n, PigConfig, Topology, WorkloadConfig) deployment
     to the array form the batched kernels consume.  ``masks`` is the fault
     lowering produced by ``repro.faults.FaultPlan.to_masks`` — down-windows
-    and slow vectors (group kernel only)."""
+    and slow vectors (group kernel only).
+
+    ``batch_m`` models leader-side request batching (``BatchConfig`` with a
+    full batch of m on every slot — the saturation regime): one "request"
+    through the kernel is a whole batch, with per-batch cost = fixed +
+    per-command marginal, exactly the DES cost model — m ClientRequest
+    ingests, ONE phase-2 fan-out carrying the batched P2a (8-byte batch
+    header + m commands), fixed-size votes/aggregates unchanged, m serial
+    client replies.  Callers divide the client count by m (m clients share
+    one slot) and scale throughput back up; ``simulate_scenario`` does both.
+    """
     cm = cost or CostModel()
     base, pb = cm.base, cm.per_byte
     w = _expected_wires(workload)
     if workload is not None and getattr(workload, "arrival", "closed") != "closed":
         raise ValueError("batch backend models closed-loop clients only")
+    if batch_m < 1:
+        raise ValueError("batch_m must be >= 1")
+    if batch_m > 1 and protocol == "epaxos":
+        raise ValueError("batch-backend batching is group-kernel only; "
+                         "batched EPaxos runs are DES-authoritative "
+                         "(leaderless per-node buffers interact with the "
+                         "conflict model)")
+    # batched P2a wire: BatchCmd = 8-byte batch header + m commands
+    w_p2a = (w["p2a"] if batch_m == 1
+             else HEADER_BYTES + 16 + 8 + batch_m * w["cmd"])
     down = slow = None
     if masks is not None:
         if protocol == "epaxos":
@@ -254,12 +275,12 @@ def build_config(protocol: str, n: int, pig=None, topo=None, workload=None,
         groups = [[f] for f in followers]
         thresh = [1] * len(groups)
         costs = {
-            "c_req": base + pb * w["req"],
-            "c_fanout": base + pb * w["p2a"],      # P2a direct
+            "c_req": batch_m * (base + pb * w["req"]),
+            "c_fanout": base + pb * w_p2a,         # P2a direct (batched)
             "c_rel": 0.0,
             "c_repl": 0.0,
             "c_agg": base + pb * w["p2b"],         # P2b direct
-            "c_replycl": base + pb * w["reply_cl"],
+            "c_replycl": batch_m * (base + pb * w["reply_cl"]),
         }
         static = True
     elif protocol == "pigpaxos":
@@ -271,14 +292,14 @@ def build_config(protocol: str, n: int, pig=None, topo=None, workload=None,
         req = required_per_group(groups, n, pig.prc,
                                  pig.single_group_majority)
         thresh = [min(q, len(g)) for q, g in zip(req, groups)]
-        pig_wrap = HEADER_BYTES + 8 + w["p2a"]     # PigFanout/PigRelayed(P2a)
+        pig_wrap = HEADER_BYTES + 8 + w_p2a        # PigFanout/PigRelayed(P2a)
         costs = {
-            "c_req": base + pb * w["req"],
+            "c_req": batch_m * (base + pb * w["req"]),
             "c_fanout": base + pb * pig_wrap,
             "c_rel": base + pb * pig_wrap,
             "c_repl": base + pb * (HEADER_BYTES + 8 + w["p2b"]),  # PigReply
             "c_agg": base + pb * (HEADER_BYTES + 16),             # PigAggregate
-            "c_replycl": base + pb * w["reply_cl"],
+            "c_replycl": batch_m * (base + pb * w["reply_cl"]),
         }
         static = not pig.rotate_relays
     else:
@@ -1214,7 +1235,7 @@ def simulate_scenario(protocol: str, n: int, *, pig=None, topo=None,
                       seeds: Sequence[int] = (0,), duration: float = 0.6,
                       warmup: float = 0.3, leader_timeout: float = 50e-3,
                       masks: Optional[Dict[str, np.ndarray]] = None,
-                      kernel: str = "auto") -> List[dict]:
+                      kernel: str = "auto", batch_m: int = 1) -> List[dict]:
     """One scenario's full clients x seeds grid in one compiled call.
 
     Returns one dict per (clients, seed) in ``runner`` unit order, carrying
@@ -1229,26 +1250,50 @@ def simulate_scenario(protocol: str, n: int, *, pig=None, topo=None,
 
     ``masks`` enables the fault path (``FaultPlan.to_masks``); fault units
     additionally carry a completion ``timeline`` in the DES extras format.
+
+    ``batch_m`` > 1 runs the leader-batching model: every ``batch_m``
+    clients share one slot (one kernel lane carries a whole batch, with the
+    per-batch cost reparameterization of ``build_config``), so client
+    counts must divide evenly; throughput/count/committed scale back up by
+    m, and latencies are corrected by the mean reply-serialization rank
+    ((m-1)/2 per-reply CPU slots — the model charges every sub-command the
+    LAST reply's completion).  This models saturated full batches; the
+    partial-batch `max_delay` regime is DES-authoritative.  Pipelined slot
+    occupancy is inherent here: the Lindley-chain leader FIFO admits new
+    slots while earlier ones are in flight, i.e. the DES default
+    ``pipeline_depth=0`` (unbounded); finite-depth throttles are
+    DES-authoritative too.
     """
     cfg = build_config(protocol, n, pig=pig, topo=topo, workload=workload,
-                       masks=masks)
-    grid = [(0, int(k), int(s)) for k in clients for s in seeds]
+                       masks=masks, batch_m=batch_m)
+    m = int(batch_m)
+    if m > 1:
+        for k in clients:
+            if int(k) % m:
+                raise ValueError(f"clients={k} not divisible by "
+                                 f"batch_m={m}: one kernel lane carries a "
+                                 f"whole batch of {m} clients")
+    grid = [(0, int(k) // m, int(s)) for k in clients for s in seeds]
     out = simulate_grid([cfg], grid, duration, warmup, kernel=kernel)
+    # mean reply rank correction (seconds); 0 when unbatched
+    lat_adj = 0.0 if m == 1 else (m - 1) / 2.0 * (cfg.costs["c_replycl"] / m)
     units = []
-    for i, (_, k, s) in enumerate(grid):
+    kidx = [int(k) for k in clients for _ in seeds]
+    sidx = [int(s) for _ in clients for s in seeds]
+    for i, (k, s) in enumerate(zip(kidx, sidx)):
         u = {
-            "retry_risk": bool(out["p99_s"][i] >= leader_timeout),
+            "retry_risk": bool(out["p99_s"][i] - lat_adj >= leader_timeout),
             "clients": k, "seed": s,
-            "throughput": float(out["throughput"][i]),
-            "mean_ms": float(out["mean_s"][i] * 1e3),
-            "median_ms": float(out["median_s"][i] * 1e3),
-            "p25_ms": float(out["p25_s"][i] * 1e3),
-            "p75_ms": float(out["p75_s"][i] * 1e3),
-            "p99_ms": float(out["p99_s"][i] * 1e3),
-            "count": int(out["count"][i]),
-            "committed": int(out["committed"][i]),
-            "leader_msgs_per_op": float(out["m_leader"][i]),
-            "follower_msgs_per_op": float(out["m_follower"][i]),
+            "throughput": float(out["throughput"][i]) * m,
+            "mean_ms": float(out["mean_s"][i] - lat_adj) * 1e3,
+            "median_ms": float(out["median_s"][i] - lat_adj) * 1e3,
+            "p25_ms": float(out["p25_s"][i] - lat_adj) * 1e3,
+            "p75_ms": float(out["p75_s"][i] - lat_adj) * 1e3,
+            "p99_ms": float(out["p99_s"][i] - lat_adj) * 1e3,
+            "count": int(out["count"][i]) * m,
+            "committed": int(out["committed"][i]) * m,
+            "leader_msgs_per_op": float(out["m_leader"][i]) / m,
+            "follower_msgs_per_op": float(out["m_follower"][i]) / m,
             "exhausted": bool(out["exhausted"][i]),
         }
         if "timeline" in out:

@@ -14,9 +14,12 @@
   compiled per engine and audited units carry consistency verdicts.
 - ``report``    — artifact -> the legacy ``name,us_per_call,derived`` rows
   that ``benchmarks/run.py`` prints (perf-trajectory contract).
+- ``plot``      — artifact -> throughput-vs-load / latency-CDF SVGs
+  (dependency-free; ``benchmarks/run.py --plot DIR``).
 """
 from . import registry  # noqa: F401
 from .registry import get, names, families, register, select  # noqa: F401
 from .runner import ARTIFACT_SCHEMA, run_families, run_scenarios  # noqa: F401
 from .scenario import Scenario, build_topology  # noqa: F401
+from . import plot  # noqa: F401
 from . import report  # noqa: F401

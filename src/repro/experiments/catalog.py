@@ -487,6 +487,134 @@ for detect_ms in (50, 100, 200):
         collect=("timeline",), quick_skip=(detect_ms == 200)))
 
 # ======================================================================
+# Leader-side batching + slot pipelining (ISSUE 8): closed-loop saturation
+# sweeps with the leader packing up to m commands per slot — one phase-2
+# fan-out/fan-in (and one Pig relay round) amortized over the batch.  The
+# m=1 cells ARE the unbatched baselines (max_batch=1 flushes on first
+# enqueue and proposes the bare command — byte-identical to the native
+# path); the regression gate requires the m=8 paxos/N=25 cell to reach
+# >= 2x its m=1 baseline.  For paxos/pigpaxos each m also runs on the
+# batch backend (vectorsim's saturated-batch cost reparameterization) and
+# the summarizer emits batch/des fidelity ratios the gate bounds to
+# [0.90, 1.10]; batched EPaxos is DES-authoritative (leaderless batching
+# has no group-kernel lowering).
+# ======================================================================
+for proto, pig in (("paxos", None),
+                   ("pigpaxos", PigConfig(n_groups=3, prc=1)),
+                   ("epaxos", None)):
+    for m in (1, 4, 8):
+        register(Scenario(
+            name=f"batching/{proto}/m={m}", protocol=proto, n=25, pig=pig,
+            engine="fast", batch={"max_batch": m, "max_delay_ms": 1.0},
+            clients=(64,), seeds=(1, 2), quick_seeds=(1,),
+            duration=0.6, warmup=0.3, quick_duration=0.3,
+            quick_skip=(m == 4 and proto != "paxos")))
+        if proto != "epaxos":
+            register(Scenario(
+                name=f"batching/{proto}/m={m}/batch", protocol=proto, n=25,
+                pig=pig, backend="batch", batch_ok=True,
+                batch={"max_batch": m, "max_delay_ms": 1.0},
+                clients=(64,), seeds=tuple(range(1, 9)), quick_seeds=(1, 2),
+                duration=0.6, warmup=0.3, quick_duration=0.3,
+                quick_skip=(m == 4 and proto != "paxos")))
+# Slot pipelining: finite in-flight budgets (depth = max uncommitted
+# proposals at the leader) under the same saturated load.  depth=0 is the
+# protocol-native unbounded default (every other cell above); small finite
+# depths trade throughput for bounded leader state — DES only (the batch
+# backend's Lindley-chain leader FIFO pipelines implicitly).
+for depth in (1, 2, 4):
+    register(Scenario(
+        name=f"batching/pipeline/depth={depth}", protocol="paxos", n=25,
+        engine="fast", batch={"max_batch": 4, "max_delay_ms": 1.0},
+        pipeline_depth=depth,
+        clients=(64,), seeds=(1,),
+        duration=0.6, warmup=0.3, quick_duration=0.3,
+        quick_skip=(depth != 2)))
+
+# ======================================================================
+# Overload + admission control (ISSUE 8): open-loop arrivals pushed past
+# saturation.  Unbatched paxos/N=25 saturates near ~2k req/s on this
+# stack, so the clients grid at rate 100 Hz/client sweeps offered load
+# from ~0.5x to ~4x saturation.  collect=("overload",) adds p99.9,
+# goodput under the 50 ms SLO (runner.OVERLOAD_SLO_MS), the offered rate
+# and every shed counter to each unit.  The paired noadm/adm cells are
+# the family's headline claim (and a regression-gate section): WITHOUT
+# admission control goodput collapses toward zero past saturation (every
+# completion blows the SLO in the unbounded queue); WITH queue-length
+# backpressure + token-bucket shedding goodput stays flat (+-10%) from
+# 2x to 4x offered load.
+# ======================================================================
+_OVL_WL = dict(arrival="poisson", rate_hz=100.0, max_outstanding=32,
+               reject_action="drop")
+# token bucket at ~0.9x the unbatched saturation rate (the classic
+# headroom rule: admit below capacity so the queue never builds), plus a
+# queue-length guard for transients the bucket's burst lets through
+_OVL_ADM = {"max_queue": 32, "rate_hz": 1800.0, "burst": 64.0}
+for label, adm in (("noadm", None), ("adm", _OVL_ADM)):
+    register(Scenario(
+        name=f"overload/paxos/{label}", protocol="paxos", n=25,
+        engine="fast", workload=WorkloadConfig(**_OVL_WL),
+        admission=adm, grid_mode="curve", collect=("overload",),
+        clients=(10, 20, 40, 80), quick_clients=(20, 80),
+        seeds=(2,), duration=0.6, warmup=0.2, quick_duration=0.4))
+# batching raises the saturation point: the same 4x offered load that
+# floors the unbatched leader is absorbed outright with m=8 slots
+register(Scenario(
+    name="overload/paxos/adm+batch", protocol="paxos", n=25,
+    engine="fast", workload=WorkloadConfig(**_OVL_WL),
+    admission=_OVL_ADM, batch={"max_batch": 8, "max_delay_ms": 0.2},
+    grid_mode="curve", collect=("overload",),
+    clients=(20, 80), seeds=(2,),
+    duration=0.6, warmup=0.2, quick_duration=0.4))
+# bursty/diurnal traces: mean offered ~2x saturation with the bursty ON
+# phase running 8x of that for 10% of each period (transient overload the
+# token bucket's burst absorbs or sheds), and a diurnal peak at ~1.8x
+for label, adm in (("bursty", None), ("bursty/adm", _OVL_ADM)):
+    register(Scenario(
+        name=f"overload/paxos/{label}", protocol="paxos", n=25,
+        engine="fast",
+        workload=WorkloadConfig(arrival="bursty", rate_hz=100.0,
+                                max_outstanding=32, reject_action="drop",
+                                burst_factor=8.0, burst_on=0.1,
+                                burst_period=0.2),
+        admission=adm, grid_mode="curve", collect=("overload",),
+        clients=(40,), seeds=(2,),
+        duration=0.6, warmup=0.2, quick_duration=0.4))
+register(Scenario(
+    name="overload/paxos/diurnal/adm", protocol="paxos", n=25,
+    engine="fast",
+    workload=WorkloadConfig(arrival="diurnal", rate_hz=100.0,
+                            max_outstanding=32, reject_action="drop",
+                            diurnal_period=0.4, diurnal_amp=0.8),
+    admission=_OVL_ADM, grid_mode="curve", collect=("overload",),
+    clients=(40,), seeds=(2,),
+    duration=0.6, warmup=0.2, quick_duration=0.4, quick_skip=True))
+# the family generalizes past plain paxos: Pig relays under overload
+register(Scenario(
+    name="overload/pigpaxos/adm", protocol="pigpaxos", n=25,
+    pig=PigConfig(n_groups=3, prc=1), engine="fast",
+    workload=WorkloadConfig(**_OVL_WL),
+    admission=_OVL_ADM, grid_mode="curve", collect=("overload",),
+    clients=(20, 80), seeds=(2,),
+    duration=0.6, warmup=0.2, quick_duration=0.4, quick_skip=True))
+# audited overload smoke (the CI PR-job cells): one admission cell and one
+# batched+admission cell with the linearizability auditor on — shedding,
+# bounce-retry loops and batch slots must not cost consistency
+register(Scenario(
+    name="overload/audit/adm", protocol="paxos", n=25,
+    engine="fast", workload=WorkloadConfig(**_OVL_WL),
+    admission=_OVL_ADM, audit=True, grid_mode="curve",
+    collect=("overload",), clients=(40,), seeds=(2,),
+    duration=0.5, warmup=0.2, quick_duration=0.4))
+register(Scenario(
+    name="overload/audit/adm+batch", protocol="paxos", n=25,
+    engine="fast", workload=WorkloadConfig(**_OVL_WL),
+    admission=_OVL_ADM, batch={"max_batch": 8, "max_delay_ms": 0.2},
+    audit=True, grid_mode="curve",
+    collect=("overload",), clients=(40,), seeds=(2,),
+    duration=0.5, warmup=0.2, quick_duration=0.4))
+
+# ======================================================================
 # megagrid slices: registry-visible samples of the million-cell
 # cross-product study (experiments.megagrid).  The full run streams
 # through vectorsim.simulate_grid_sharded from the CLI; these four

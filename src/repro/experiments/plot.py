@@ -1,0 +1,219 @@
+"""Artifact -> SVG plots, with zero plotting dependencies.
+
+The runner's JSON artifact already carries everything a figure needs
+(per-point aggregates for curve-mode scenarios, per-seed replicates with
+latency quantiles), so this module renders the two standard views directly
+as hand-built SVG — no matplotlib in the container, none required:
+
+* ``throughput_vs_load`` — one polyline per scenario of a family, offered
+  load (or client count) on x, achieved throughput on y.  For overload
+  scenarios a dashed goodput line rides along, which is the whole story of
+  that family: achieved stays up while goodput collapses without admission
+  control.
+* ``latency_cdf`` — quantile-interpolated CDF per scenario (p25/median/
+  p75/p99 and, where the overload extras recorded it, p99.9).
+
+``render_artifact`` walks a suite artifact and writes both views for every
+family that has the data to support them; ``benchmarks/run.py --plot DIR``
+is the CLI entry point.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+# Okabe-Ito palette: colorblind-safe, distinct on white
+_COLORS = ("#0072B2", "#D55E00", "#009E73", "#CC79A7",
+           "#E69F00", "#56B4E9", "#F0E442", "#000000")
+
+_W, _H = 720, 440
+_ML, _MR, _MT, _MB = 70, 24, 34, 52        # margins: left/right/top/bottom
+
+
+def _fmt(v: float) -> str:
+    if v == 0:
+        return "0"
+    if abs(v) >= 1000:
+        return f"{v / 1000:.3g}k"
+    return f"{v:.3g}"
+
+
+def _ticks(lo: float, hi: float, n: int = 5) -> List[float]:
+    if hi <= lo:
+        hi = lo + 1.0
+    step = (hi - lo) / n
+    return [lo + i * step for i in range(n + 1)]
+
+
+class _Chart:
+    """One x/y chart: polylines + axes + legend, emitted as SVG text."""
+
+    def __init__(self, title: str, xlabel: str, ylabel: str):
+        self.title, self.xlabel, self.ylabel = title, xlabel, ylabel
+        self.series: List[tuple] = []   # (label, [(x, y)], dashed)
+
+    def add(self, label: str, pts: Sequence[Tuple[float, float]],
+            dashed: bool = False) -> None:
+        pts = [(float(x), float(y)) for x, y in pts
+               if x is not None and y is not None]
+        if pts:
+            self.series.append((label, sorted(pts), dashed))
+
+    def _scale(self):
+        xs = [x for _, pts, _ in self.series for x, _ in pts]
+        ys = [y for _, pts, _ in self.series for _, y in pts]
+        x0, x1 = min(xs), max(xs)
+        y0, y1 = 0.0, max(ys)            # rate/fraction axes start at 0
+        if x1 <= x0:
+            x1 = x0 + 1.0
+        if y1 <= y0:
+            y1 = y0 + 1.0
+        pw, ph = _W - _ML - _MR, _H - _MT - _MB
+
+        def px(x):
+            return _ML + (x - x0) / (x1 - x0) * pw
+
+        def py(y):
+            return _H - _MB - (y - y0) / (y1 - y0) * ph
+
+        return (x0, x1, y0, y1, px, py)
+
+    def svg(self) -> str:
+        if not self.series:
+            return ""
+        x0, x1, y0, y1, px, py = self._scale()
+        e: List[str] = [
+            f'<svg xmlns="http://www.w3.org/2000/svg" width="{_W}" '
+            f'height="{_H}" viewBox="0 0 {_W} {_H}" '
+            f'font-family="sans-serif" font-size="11">',
+            f'<rect width="{_W}" height="{_H}" fill="white"/>',
+            f'<text x="{_W / 2}" y="20" text-anchor="middle" '
+            f'font-size="14">{self.title}</text>',
+        ]
+        # gridlines + tick labels
+        for t in _ticks(y0, y1):
+            y = py(t)
+            e.append(f'<line x1="{_ML}" y1="{y:.1f}" x2="{_W - _MR}" '
+                     f'y2="{y:.1f}" stroke="#ddd"/>')
+            e.append(f'<text x="{_ML - 6}" y="{y + 4:.1f}" '
+                     f'text-anchor="end">{_fmt(t)}</text>')
+        for t in _ticks(x0, x1):
+            x = px(t)
+            e.append(f'<line x1="{x:.1f}" y1="{_MT}" x2="{x:.1f}" '
+                     f'y2="{_H - _MB}" stroke="#eee"/>')
+            e.append(f'<text x="{x:.1f}" y="{_H - _MB + 16}" '
+                     f'text-anchor="middle">{_fmt(t)}</text>')
+        e.append(f'<rect x="{_ML}" y="{_MT}" width="{_W - _ML - _MR}" '
+                 f'height="{_H - _MT - _MB}" fill="none" stroke="#333"/>')
+        e.append(f'<text x="{_W / 2}" y="{_H - 12}" text-anchor="middle">'
+                 f'{self.xlabel}</text>')
+        e.append(f'<text x="16" y="{_H / 2}" text-anchor="middle" '
+                 f'transform="rotate(-90 16 {_H / 2})">{self.ylabel}</text>')
+        # series + legend
+        for i, (label, pts, dashed) in enumerate(self.series):
+            color = _COLORS[i % len(_COLORS)]
+            dash = ' stroke-dasharray="6 4"' if dashed else ""
+            path = " ".join(f"{px(x):.1f},{py(y):.1f}" for x, y in pts)
+            e.append(f'<polyline points="{path}" fill="none" '
+                     f'stroke="{color}" stroke-width="1.8"{dash}/>')
+            for x, y in pts:
+                e.append(f'<circle cx="{px(x):.1f}" cy="{py(y):.1f}" '
+                         f'r="2.6" fill="{color}"/>')
+            ly = _MT + 14 + 14 * i
+            e.append(f'<line x1="{_ML + 8}" y1="{ly - 4}" x2="{_ML + 30}" '
+                     f'y2="{ly - 4}" stroke="{color}" '
+                     f'stroke-width="1.8"{dash}/>')
+            e.append(f'<text x="{_ML + 34}" y="{ly}">{label}</text>')
+        e.append("</svg>")
+        return "\n".join(e)
+
+
+def _offered(sa: dict, clients: int) -> Optional[float]:
+    wl = (sa.get("spec") or {}).get("workload") or {}
+    if wl.get("arrival", "closed") != "closed":
+        return clients * wl.get("rate_hz", 0.0)
+    return None
+
+
+def _unit_goodputs(sa: dict) -> Dict[int, float]:
+    """Mean goodput per client-grid point (overload extras), where present."""
+    acc: Dict[int, List[float]] = {}
+    for u in sa.get("units", []):
+        g = (u.get("extras") or {}).get("goodput")
+        if g is not None:
+            acc.setdefault(u["clients"], []).append(g)
+    return {k: sum(v) / len(v) for k, v in acc.items()}
+
+
+def throughput_vs_load(family: str, arts: Dict[str, dict]) -> Optional[str]:
+    """Achieved throughput (and goodput, when the overload extras carry it)
+    vs offered load for every curve-mode scenario of ``family`` with at
+    least two grid points — or one, when a sibling provides the second."""
+    open_loop = any(_offered(sa, 1) is not None for sa in arts.values())
+    xlabel = "offered load (req/s)" if open_loop else "clients"
+    ch = _Chart(f"{family}: throughput vs load", xlabel, "req/s")
+    for name, sa in sorted(arts.items()):
+        pts = sa.get("points") or []
+        label = name[len(family) + 1:] or name
+        xy = []
+        gxy = []
+        goodputs = _unit_goodputs(sa)
+        for p in pts:
+            x = _offered(sa, p["clients"])
+            x = p["clients"] if x is None else x
+            xy.append((x, (p["throughput"] or {}).get("mean")))
+            if p["clients"] in goodputs:
+                gxy.append((x, goodputs[p["clients"]]))
+        ch.add(label, xy)
+        if gxy:
+            ch.add(label + " (goodput)", gxy, dashed=True)
+    if sum(len(pts) for _, pts, _ in ch.series) < 2:
+        return None
+    return ch.svg()
+
+
+# latency quantiles available on every unit; p99.9 rides in the overload
+# extras when collected
+_QUANTS = (("p25_ms", 0.25), ("median_ms", 0.50),
+           ("p75_ms", 0.75), ("p99_ms", 0.99))
+
+
+def latency_cdf(family: str, arts: Dict[str, dict]) -> Optional[str]:
+    """Quantile-interpolated latency CDF, one line per scenario (the
+    highest-load grid point of its replicates)."""
+    ch = _Chart(f"{family}: latency CDF", "latency (ms)", "P(latency <= x)")
+    for name, sa in sorted(arts.items()):
+        reps = sa.get("replicates") or []
+        if not reps:
+            continue
+        u = max(reps, key=lambda r: r["clients"])
+        pts = [(u[k], q) for k, q in _QUANTS if u.get(k) is not None]
+        p999 = (u.get("extras") or {}).get("p999_ms")
+        if p999 is not None:
+            pts.append((p999, 0.999))
+        if len(pts) >= 2:
+            ch.add(name[len(family) + 1:] or name, pts)
+    if not ch.series:
+        return None
+    return ch.svg()
+
+
+def render_artifact(artifact: dict, outdir: str) -> List[str]:
+    """Write throughput-vs-load and latency-CDF SVGs for every family in
+    ``artifact`` that has the data; returns the written paths."""
+    by_family: Dict[str, Dict[str, dict]] = {}
+    for sa in artifact.get("scenarios", []):
+        by_family.setdefault(sa["family"], {})[sa["name"]] = sa
+    os.makedirs(outdir, exist_ok=True)
+    written = []
+    for family, arts in sorted(by_family.items()):
+        for suffix, fn in (("throughput", throughput_vs_load),
+                           ("latency_cdf", latency_cdf)):
+            svg = fn(family, arts)
+            if not svg:
+                continue
+            path = os.path.join(outdir, f"{family}_{suffix}.svg")
+            with open(path, "w") as f:
+                f.write(svg)
+            written.append(path)
+    return written

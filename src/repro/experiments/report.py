@@ -457,6 +457,100 @@ def _conflict(arts, quick):
     return out
 
 
+def _batching(arts, quick):
+    """Batching/pipelining family: per-cell rows, the m=8 over m=1 speedup
+    per protocol (the gate requires >= 2x for paxos), and the DES<->batch
+    fidelity ratio per (protocol, m) where both backends ran."""
+    out = [r for name, art in sorted(arts.items())
+           if (r := _mean_std_row(name, art)) is not None]
+    by_m: Dict[tuple, Dict[int, float]] = {}
+    for name, art in arts.items():
+        parts = name.split("/")
+        if parts[1] == "pipeline":
+            continue
+        backend = "batch" if parts[-1] == "batch" else "des"
+        m = int(parts[2].split("=")[1])
+        by_m.setdefault((parts[1], backend), {})[m] = _tput(art)
+    for (proto, backend), ms_ in sorted(by_m.items()):
+        if backend == "des" and 1 in ms_ and max(ms_) > 1 and ms_[1]:
+            top = max(ms_)
+            out.append(csv_row(
+                f"batching/summary/{proto}", 0, 1,
+                f"m={top}_over_m=1 speedup="
+                f"{ms_[top] / ms_[1]:.2f}x (gate: paxos >= 2x)"))
+    for (proto, backend), ms_ in sorted(by_m.items()):
+        if backend != "des":
+            continue
+        bs = by_m.get((proto, "batch"), {})
+        for m in sorted(set(ms_) & set(bs)):
+            if ms_[m]:
+                out.append(csv_row(
+                    f"batching/{proto}/m={m}/xcheck", 0, 1,
+                    f"batch/des tput={bs[m] / ms_[m]:.2f}x "
+                    f"(saturated-batch model: expect within ~0.1 of 1.0)"))
+    return out
+
+
+def _ovl_points(art) -> List[dict]:
+    """Per-clients aggregates of the overload extras (goodput/p99.9/shed
+    live per unit, not in the runner's generic point aggregation)."""
+    by_clients: Dict[int, List[dict]] = {}
+    for u in art["units"]:
+        by_clients.setdefault(u["clients"], []).append(u)
+    pts = []
+    for k, us in sorted(by_clients.items()):
+        exs = [u.get("extras") or {} for u in us]
+        gp = [e["goodput"] for e in exs if e.get("goodput") is not None]
+        p999 = [e["p999_ms"] for e in exs if e.get("p999_ms") is not None]
+        adm = [e["admission"] for e in exs if "admission" in e]
+        pts.append({
+            "clients": k,
+            "offered": next((e["offered"] for e in exs
+                             if e.get("offered") is not None), None),
+            "throughput": (sum(u["throughput"] or 0 for u in us)
+                           / max(len(us), 1)),
+            "goodput": sum(gp) / len(gp) if gp else None,
+            "p99_ms": (sum(u["p99_ms"] or 0 for u in us) / max(len(us), 1)),
+            "p999_ms": sum(p999) / len(p999) if p999 else None,
+            "client_shed": sum(e.get("client_shed", 0) for e in exs),
+            "adm_shed": sum(a["shed_queue"] + a["shed_rate"] for a in adm),
+        })
+    return pts
+
+
+def _overload(arts, quick):
+    """Overload family: offered vs achieved vs goodput per grid point, the
+    shed counters on both sides of the admission gate, and the headline
+    noadm-vs-adm comparison at the top of the load sweep (the claim the
+    regression gate turns into a bound: goodput holds flat under 4x
+    offered load WITH admission control and collapses without)."""
+    out = []
+    top: Dict[str, dict] = {}
+    for name, art in sorted(arts.items()):
+        pts = _ovl_points(art)
+        wall = _wall(art)
+        for p in pts:
+            off = (f"{p['offered']:.0f}req/s" if p["offered"] is not None
+                   else "n/a")
+            out.append(csv_row(
+                f"{name}/clients={p['clients']}", wall / max(len(pts), 1), 1,
+                f"offered={off} achieved={p['throughput']:.0f}req/s "
+                f"goodput={ms(p['goodput']):.0f}req/s "
+                f"p99={ms(p['p99_ms']):.2f}ms p999={ms(p['p999_ms']):.2f}ms "
+                f"shed_client={p['client_shed']} shed_adm={p['adm_shed']} "
+                f"consistency={_consistency_tag(art)}"))
+        if pts:
+            top[name] = max(pts, key=lambda p: p["offered"] or 0)
+    a, n = top.get("overload/paxos/adm"), top.get("overload/paxos/noadm")
+    if a is not None and n is not None:
+        out.append(csv_row(
+            "overload/summary", 0, 1,
+            f"goodput_at_4x adm={ms(a['goodput']):.0f}req/s "
+            f"noadm={ms(n['goodput']):.0f}req/s "
+            f"(admission holds goodput; without it the SLO collapses)"))
+    return out
+
+
 # ------------------------------------------------------- fault families
 def _consistency_tag(art: dict) -> str:
     """Roll the per-unit audit verdicts up to one token for the row."""
@@ -679,6 +773,7 @@ SUMMARIZERS = {
     "fig16": _fig16, "fig17": _fig17,
     "zipf": _zipf, "openloop": _openloop, "conflict": _conflict,
     "wan": _wan, "scale": _scale,
+    "batching": _batching, "overload": _overload,
     "avail": _avail, "storm": _storm,
     "reconfig": _reconfig, "rolling": _rolling, "failover": _failover,
     "megagrid": _megagrid,

@@ -40,6 +40,10 @@ from .scenario import Scenario, build_topology
 
 ARTIFACT_SCHEMA = "repro-experiments/v1"
 TIMELINE_BUCKET_S = 0.05
+# goodput SLO for the overload family: a completion counts toward goodput
+# only if its client-observed latency (first send -> reply, including any
+# shed/bounce/retry loops) is within this budget
+OVERLOAD_SLO_MS = 50.0
 
 
 def _f(x) -> Optional[float]:
@@ -56,10 +60,13 @@ def _run_unit(payload) -> dict:
 
     sc, clients, seed, duration, warmup = payload
     t0 = time.time()
+    from repro.core import BatchConfig
+    bc = BatchConfig(**sc.batch) if sc.batch is not None else None
     c = Cluster(sc.protocol, sc.n, pig=sc.pig, seed=seed,
                 topo=build_topology(sc.topo),
                 leader_timeout=sc.leader_timeout, engine=sc.engine,
-                record_history=sc.audit, spare_nodes=sc.spare_nodes)
+                record_history=sc.audit, spare_nodes=sc.spare_nodes,
+                batch=bc, pipeline_depth=sc.pipeline_depth)
     plan = sc.fault_plan()
     evs = []
     if plan is not None:
@@ -69,6 +76,11 @@ def _run_unit(payload) -> dict:
         from repro.runtime.policy import FailoverPolicy, attach_failover
         fo_events = attach_failover(c, FailoverPolicy(**sc.failover),
                                     stop_at=warmup + duration)
+    adm_stats = None
+    if sc.admission is not None:
+        from repro.runtime.policy import AdmissionPolicy, attach_admission
+        adm_stats = attach_admission(c, AdmissionPolicy(**sc.admission),
+                                     stop_at=warmup + duration)
     st = c.measure(duration=duration, warmup=warmup, clients=clients,
                    workload=sc.workload)
     unit = {
@@ -99,6 +111,28 @@ def _run_unit(payload) -> dict:
                 if b < len(counts):
                     counts[b] += 1
         extras["timeline"] = {"bucket_s": TIMELINE_BUCKET_S, "counts": counts}
+    if "overload" in sc.collect:
+        # overload-study metrics: tail beyond p99, goodput under an SLO,
+        # offered rate, and every shed/bounce counter in the loop
+        stop = warmup + duration
+        lats = sorted(l for cl in c.clients
+                      for (t, l) in cl.latencies if warmup <= t <= stop)
+        extras["p999_ms"] = (_f(lats[min(len(lats) - 1,
+                                         int(0.999 * len(lats)))] * 1e3)
+                             if lats else None)
+        extras["slo_ms"] = OVERLOAD_SLO_MS
+        extras["goodput"] = _f(sum(1 for l in lats
+                                   if l * 1e3 <= OVERLOAD_SLO_MS) / duration)
+        wl = sc.workload
+        extras["offered"] = (_f(wl.rate_hz * clients)
+                             if wl is not None and wl.arrival != "closed"
+                             else None)
+        extras["client_shed"] = sum(getattr(cl, "shed", 0)
+                                    for cl in c.clients)
+        extras["client_rejected"] = sum(getattr(cl, "rejected", 0)
+                                        for cl in c.clients)
+    if adm_stats is not None:
+        extras["admission"] = dict(adm_stats)
     if plan is not None:
         # availability metrics: the longest client-visible completion gap
         # inside the measurement window, and the timeout re-send count
@@ -162,7 +196,8 @@ def _run_batch_scenario(sc: Scenario, rs) -> List[dict]:
         sc.protocol, sc.n, pig=sc.pig, topo=build_topology(sc.topo),
         workload=sc.workload, clients=rs.clients, seeds=rs.seeds,
         duration=rs.duration, warmup=rs.warmup,
-        leader_timeout=sc.leader_timeout, masks=masks)
+        leader_timeout=sc.leader_timeout, masks=masks,
+        batch_m=(sc.batch or {}).get("max_batch", 1))
     wall = time.time() - t0
     units = []
     for u in raw:

@@ -74,6 +74,17 @@ class Scenario:
     # failover policy kwargs (repro.runtime.FailoverPolicy) armed on every
     # DES unit: {"detect_timeout": s, "check_interval": s, "successor": ...}
     failover: Optional[dict] = None
+    # leader-side batching kwargs (repro.core.BatchConfig): {"max_batch": m,
+    # "max_delay_ms": ms}.  DES units pass these to the Cluster; batch-backend
+    # units map max_batch to vectorsim's batch_m (saturated-batch model, so
+    # max_delay_ms is ignored there and clients must divide by max_batch)
+    batch: Optional[dict] = None
+    # slot pipelining: at most this many uncommitted proposals in flight at
+    # the leader (0 = unbounded, the protocol-native default) — DES only
+    pipeline_depth: int = 0
+    # admission-control kwargs (repro.runtime.AdmissionPolicy) armed on every
+    # DES unit: {"max_queue": q, "rate_hz": r, "burst": b}
+    admission: Optional[dict] = None
     collect: Tuple[str, ...] = ()            # extras: "per_node_msgs" | "flight" | "timeline"
     # quick-mode overrides (None -> use the full-mode value / skip nothing)
     quick_clients: Optional[Tuple[int, ...]] = None
@@ -101,6 +112,35 @@ class Scenario:
             raise ValueError(
                 "batch backend does not support failover policies — "
                 "use the DES")
+        if self.admission is not None and self.backend == "batch":
+            raise ValueError(
+                "batch backend does not support admission control — "
+                "use the DES")
+        if self.pipeline_depth < 0:
+            raise ValueError("pipeline_depth must be >= 0")
+        if self.pipeline_depth and self.backend == "batch":
+            raise ValueError(
+                "batch backend pipelines implicitly (Lindley-chain leader "
+                "FIFO == unbounded depth); finite pipeline_depth needs the "
+                "DES")
+        if self.batch is not None:
+            m = self.batch.get("max_batch", 1)
+            if m < 1:
+                raise ValueError("batch.max_batch must be >= 1")
+            if self.backend == "batch":
+                if self.protocol == "epaxos":
+                    raise ValueError("batch-backend batching is group-kernel "
+                                     "only — batched EPaxos runs are DES-"
+                                     "authoritative")
+                bad = [k for k in self.clients if k % m]
+                if bad:
+                    raise ValueError(
+                        f"batch backend requires client counts divisible by "
+                        f"max_batch={m}; offending grid points: {bad}")
+        if (self.batch is not None or self.pipeline_depth) \
+                and self.engine == "ref":
+            raise ValueError("batching/pipelining is not supported by the "
+                             "verbatim seed stack (engine='ref')")
         if self.backend == "batch":
             ok_collect = {"per_node_msgs"}
             if plan is not None:

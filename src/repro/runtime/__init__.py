@@ -1,4 +1,4 @@
 from .coordination import CoordinationService  # noqa: F401
 from .elastic import ElasticController, HeartbeatMonitor  # noqa: F401
-from .policy import (ElasticityPolicy, FailoverPolicy,  # noqa: F401
-                     attach_failover)
+from .policy import (AdmissionPolicy, ElasticityPolicy,  # noqa: F401
+                     FailoverPolicy, attach_admission, attach_failover)

@@ -12,6 +12,14 @@ resharding) into policies that drive the *replication* cluster itself:
   sweeps can measure the unavailability window as a function of
   ``detect_timeout`` — independent of the protocol's own ``leader_timeout``
   retry machinery.
+* :class:`AdmissionPolicy` + :func:`attach_admission` — replica-side
+  admission control for the overload regime: queue-length backpressure
+  (shed a request when the receiving replica's queued + uncommitted work
+  exceeds a threshold) plus token-bucket shedding (cap the cluster-wide
+  sustained admit rate).  Shed requests get an immediate ``ok=False``
+  reply — the cheap bounce path — instead of a consensus slot, so admitted
+  work keeps committing within latency bounds while offered load runs past
+  saturation.
 * :class:`ElasticityPolicy` — sizing rules for PigPaxos under membership
   change: the relay-group count tracks sqrt(followers) as nodes come and go
   (§3.2's balance point between leader fan-out and relay depth).
@@ -25,6 +33,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import List, Optional
 
+from ..core.messages import ClientReply, ClientRequest
 from ..core.pig import auto_group_count
 
 _INF = float("inf")
@@ -102,6 +111,106 @@ def attach_failover(cluster, policy: FailoverPolicy,
 
     cluster.sched.after(policy.check_interval, _tick)
     return events
+
+
+@dataclass(frozen=True)
+class AdmissionPolicy:
+    """Replica-side admission control (the overload-study knob set).
+
+    * ``max_queue`` — queue-length backpressure: a request is shed when the
+      receiving replica's backlog (buffered batch commands + allocated but
+      uncommitted slots, or unexecuted instances for EPaxos) is at or above
+      this many commands.  ``0`` disables the queue check.
+    * ``rate_hz`` / ``burst`` — token-bucket shedding: the cluster admits at
+      most ``rate_hz`` sustained requests per virtual second with bursts of
+      up to ``burst`` tokens.  ``rate_hz == 0`` disables the bucket.
+
+    Shed requests are answered immediately with ``ok=False`` (the same
+    bounce clients already handle for not-the-leader), so shedding costs
+    one cheap reply instead of a consensus round."""
+
+    max_queue: int = 256
+    rate_hz: float = 0.0
+    burst: float = 64.0
+
+    def __post_init__(self):
+        if self.max_queue < 0:
+            raise ValueError("max_queue must be >= 0")
+        if self.rate_hz < 0:
+            raise ValueError("rate_hz must be >= 0")
+        if self.rate_hz > 0 and self.burst < 1:
+            raise ValueError("token bucket needs burst >= 1")
+        if self.max_queue == 0 and self.rate_hz == 0:
+            raise ValueError("AdmissionPolicy with every mechanism disabled")
+
+
+def _backlog(nd) -> int:
+    """Commands accepted but not yet committed/executed at one replica:
+    leader batch buffers + (paxos family) allocated uncommitted slots, or
+    (epaxos) committed-but-unexecuted instances."""
+    q = len(getattr(nd, "_buf", ()))
+    for b in getattr(nd, "_held", ()):
+        q += len(b)
+    ns = getattr(nd, "next_slot", None)
+    if ns is not None:
+        q += max(0, ns - 1 - nd.commit_index)
+    else:
+        q += len(getattr(nd, "_pending_exec", ()))
+    return q
+
+
+def attach_admission(cluster, policy: AdmissionPolicy,
+                     stop_at: float = _INF) -> dict:
+    """Arm ``policy`` on every node of ``cluster`` by wrapping the
+    ``ClientRequest`` handler; returns live counters ``{"admitted",
+    "shed_queue", "shed_rate"}`` that fill in as the run executes.
+
+    The token bucket is shared cluster-wide (it caps the *admitted* rate,
+    wherever requests land); the queue check is per receiving replica.
+    After ``stop_at`` the wrapper passes requests straight through."""
+    stats = {"admitted": 0, "shed_queue": 0, "shed_rate": 0}
+    bucket = {"tokens": float(policy.burst), "last": cluster.sched.now}
+    sched = cluster.sched
+
+    def _admit_rate() -> bool:
+        if policy.rate_hz <= 0:
+            return True
+        now = sched.now
+        tok = min(policy.burst,
+                  bucket["tokens"] + (now - bucket["last"]) * policy.rate_hz)
+        bucket["last"] = now
+        if tok < 1.0:
+            bucket["tokens"] = tok
+            return False
+        bucket["tokens"] = tok - 1.0
+        return True
+
+    def _wrap(nd):
+        orig = nd.on_ClientRequest
+
+        def on_ClientRequest(msg):
+            if sched.now >= stop_at:
+                orig(msg)
+                return
+            if policy.max_queue and _backlog(nd) >= policy.max_queue:
+                stats["shed_queue"] += 1
+            elif not _admit_rate():
+                stats["shed_rate"] += 1
+            else:
+                stats["admitted"] += 1
+                orig(msg)
+                return
+            cmd = msg.cmd
+            nd.send(msg.src, ClientReply(client_id=cmd.client_id,
+                                         seq=cmd.seq, ok=False, value=None))
+
+        nd.on_ClientRequest = on_ClientRequest
+        # the fused engines dispatch through the cached table, not getattr
+        nd._dispatch[ClientRequest] = on_ClientRequest
+
+    for nd in cluster.nodes:
+        _wrap(nd)
+    return stats
 
 
 @dataclass(frozen=True)

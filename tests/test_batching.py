@@ -1,0 +1,190 @@
+"""Leader-side batching / slot pipelining / admission control (ISSUE 8).
+
+Pins the tentpole's contracts:
+
+* ``BatchConfig(max_batch=1)`` is BYTE-IDENTICAL to the unbatched engine —
+  the exact engine with a degenerate batch config must reproduce the seed
+  stack's golden traces event-for-event (same heap sequence, same RNG
+  consumption, same applied logs).
+* Batching at saturation buys real throughput (the >= 2x regression-gate
+  floor for paxos/N=25 lives here too, so a local run catches the erosion
+  before CI does).
+* Finite pipeline depths bound leader state at a throughput cost but never
+  break agreement.
+* Batched runs survive a leader crash+recovery under the linearizability
+  auditor: batch buffers are dropped on crash, held batches re-proposed by
+  the new leader, per-command session dedup intact.
+* The DES<->batch-backend cross-check tolerance for batched cells is
+  pinned to the same [0.90, 1.10] window the regression gate enforces.
+* ``repro.runtime.AdmissionPolicy`` sheds by queue length and token
+  bucket, with exact counters, and open-loop clients honor
+  ``reject_action="drop"``.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (BatchConfig, Cluster, PigConfig, WorkloadConfig,
+                        agreement_ok)
+from repro.faults import audit_cluster, crash_window, apply_plan
+from repro.runtime import AdmissionPolicy, attach_admission
+
+WL_RT = WorkloadConfig(request_timeout=25e-3)
+
+
+def _applied(cluster):
+    return [[(slot, c.client_id, c.seq, c.op, c.key)
+             for slot, c in nd.applied_log] for nd in cluster.nodes]
+
+
+# ============================================== max_batch=1 golden neutrality
+@pytest.mark.parametrize("proto,pig", [
+    ("paxos", None),
+    ("pigpaxos", PigConfig(n_groups=2)),
+    ("epaxos", None),
+], ids=["paxos", "pig_r2", "epaxos"])
+def test_max_batch_1_is_bit_identical_to_seed_stack(proto, pig):
+    ref = Cluster(proto, 5, pig=pig, seed=7, engine="ref")
+    st_ref = ref.measure(duration=0.3, warmup=0.1, clients=8)
+    new = Cluster(proto, 5, pig=pig, seed=7, engine="exact",
+                  batch=BatchConfig(max_batch=1, max_delay_ms=1.0))
+    st_new = new.measure(duration=0.3, warmup=0.1, clients=8)
+    # identical virtual execution: every event fired in the same order
+    assert ref.sched.events == new.sched.events
+    assert ref.sched._seq == new.sched._seq
+    assert ref.sched.now == new.sched.now
+    assert _applied(ref) == _applied(new)
+    assert st_ref.committed == st_new.committed
+    np.testing.assert_array_equal(st_ref.msg_out, st_new.msg_out)
+    np.testing.assert_array_equal(st_ref.msg_in, st_new.msg_in)
+    assert st_ref.throughput == st_new.throughput
+    assert st_ref.median_ms == st_new.median_ms
+
+
+def test_batching_rejected_on_seed_engine():
+    with pytest.raises(ValueError, match="seed stack"):
+        Cluster("paxos", 5, engine="ref", batch=BatchConfig(max_batch=4))
+    with pytest.raises(ValueError, match="seed stack"):
+        Cluster("paxos", 5, engine="ref", pipeline_depth=2)
+
+
+# ================================================= throughput at saturation
+def test_batching_doubles_saturated_throughput_paxos_n25():
+    """The regression-gate claim, runnable locally: m=8 >= 2x m=1 on the
+    saturated paxos/N=25 cell (CI measures ~6x; 2x is the erosion floor)."""
+    tput = {}
+    for m in (1, 8):
+        c = Cluster("paxos", 25, seed=1, engine="fast",
+                    batch=BatchConfig(max_batch=m, max_delay_ms=1.0))
+        st = c.measure(duration=0.3, warmup=0.15, clients=64)
+        tput[m] = st.throughput
+        assert agreement_ok(c)
+    assert tput[8] >= 2.0 * tput[1], tput
+
+
+def test_pipeline_depth_throttles_but_preserves_agreement():
+    """depth=1 serializes slots (strictly slower than the unbounded
+    native default) yet commits and agrees; deeper pipelines recover."""
+    tput = {}
+    for depth in (0, 1, 4):
+        c = Cluster("paxos", 5, seed=3, engine="exact",
+                    pipeline_depth=depth)
+        st = c.measure(duration=0.3, warmup=0.1, clients=8)
+        assert st.committed > 0
+        assert agreement_ok(c)
+        tput[depth] = st.throughput
+    assert tput[1] < tput[0]
+    assert tput[1] <= tput[4]
+
+
+# ==================================================== faults under batching
+@pytest.mark.parametrize("proto,pig", [
+    ("paxos", None),
+    ("pigpaxos", PigConfig(n_groups=2, prc=1)),
+], ids=["paxos", "pigpaxos"])
+def test_batched_leader_crash_recovery_audits_clean(proto, pig):
+    c = Cluster(proto, 7, pig=pig, seed=5, engine="exact",
+                record_history=True,
+                batch=BatchConfig(max_batch=4, max_delay_ms=1.0))
+    apply_plan(c, crash_window(0, 0.3, 0.5), horizon=1.5)
+    st = c.measure(duration=0.7, warmup=0.1, clients=6, workload=WL_RT)
+    assert st.committed > 0
+    # service resumed after the new leader re-proposes held batches
+    post = [t for cl in c.clients for (t, _l) in cl.latencies if t > 0.55]
+    assert post
+    res = audit_cluster(c)
+    assert res.ok, (proto, res.violations)
+    c.run(until=2.0)
+    assert agreement_ok(c)
+
+
+# ================================================== DES <-> batch fidelity
+def test_des_batch_xcheck_tolerance_is_pinned():
+    """The batched paxos cell's DES<->batch throughput ratio must sit in
+    the same [0.90, 1.10] window benchmarks/reference_bounds.json gates."""
+    from repro import experiments
+    scs = [experiments.get("batching/paxos/m=8"),
+           experiments.get("batching/paxos/m=8/batch")]
+    art = experiments.run_scenarios(scs, quick=True, ignore_quick_skip=True)
+    means = {sa["name"]: sa["summary"]["throughput"]["mean"]
+             for sa in art["scenarios"]}
+    ratio = (means["batching/paxos/m=8/batch"]
+             / means["batching/paxos/m=8"])
+    assert 0.90 <= ratio <= 1.10, means
+
+
+# ======================================================== admission control
+def test_admission_policy_validation():
+    with pytest.raises(ValueError, match="max_queue"):
+        AdmissionPolicy(max_queue=-1)
+    with pytest.raises(ValueError, match="rate_hz"):
+        AdmissionPolicy(rate_hz=-1.0)
+    with pytest.raises(ValueError, match="burst"):
+        AdmissionPolicy(rate_hz=10.0, burst=0.5)
+    with pytest.raises(ValueError, match="disabled"):
+        AdmissionPolicy(max_queue=0, rate_hz=0.0)
+
+
+def test_workload_reject_action_validation():
+    with pytest.raises(ValueError, match="reject_action"):
+        WorkloadConfig(reject_action="bounce")
+
+
+def test_token_bucket_sheds_and_open_loop_drop_frees_slots():
+    """Open-loop load far above the bucket rate: the policy sheds the
+    excess, the 'drop' client abandons shed ops (no 5 ms retry storm),
+    and admissions stay within rate x time + burst."""
+    wl = WorkloadConfig(arrival="poisson", rate_hz=400.0, max_outstanding=8,
+                        reject_action="drop")
+    c = Cluster("paxos", 5, seed=2, engine="exact", record_history=True)
+    pol = AdmissionPolicy(max_queue=0, rate_hz=100.0, burst=4.0)
+    stats = attach_admission(c, pol)
+    st = c.measure(duration=0.4, warmup=0.1, clients=6, workload=wl)
+    assert stats["shed_rate"] > 0
+    assert stats["shed_queue"] == 0
+    assert sum(cl.rejected for cl in c.clients) == stats["shed_rate"]
+    # token bucket cap: admitted <= rate * elapsed + burst (+1 rounding)
+    assert stats["admitted"] <= 100.0 * c.sched.now + pol.burst + 1
+    assert st.committed > 0
+    assert audit_cluster(c).ok
+
+
+def test_queue_backpressure_sheds_under_closed_loop_saturation():
+    c = Cluster("paxos", 5, seed=4, engine="exact")
+    stats = attach_admission(c, AdmissionPolicy(max_queue=1))
+    st = c.measure(duration=0.3, warmup=0.1, clients=16, workload=WL_RT)
+    assert stats["shed_queue"] > 0
+    # closed-loop clients ride the bounce->retry path and still complete
+    assert st.committed > 0
+    assert agreement_ok(c)
+
+
+def test_scenario_validation_for_batching_knobs():
+    from repro.experiments import Scenario
+    with pytest.raises(ValueError, match="max_batch"):
+        Scenario(name="x", protocol="paxos", n=5,
+                 batch={"max_batch": 0, "max_delay_ms": 1.0})
+    with pytest.raises(ValueError, match="pipeline_depth"):
+        Scenario(name="x", protocol="paxos", n=5, pipeline_depth=-1)
+    with pytest.raises(ValueError, match="batch backend"):
+        Scenario(name="x", protocol="paxos", n=5, backend="batch",
+                 batch_ok=True, admission={"max_queue": 8})

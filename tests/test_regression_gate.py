@@ -65,6 +65,56 @@ def test_fidelity_missing_half_fails():
     assert failures and "incomplete" in failures[0]
 
 
+# ----------------------------------------------------------------- speedup
+def test_speedup_floor_passes_and_fails():
+    ref = {"speedup": {"fam/m=8": {"over": "fam/m=1", "min": 2.0}}}
+    seen = {"fam/m=1": _sa("fam/m=1", 100.0),
+            "fam/m=8": _sa("fam/m=8", 250.0)}
+    failures, lines = evaluate(seen, ref)
+    assert failures == []
+    assert any("speedup" in ln and "2.50x" in ln for ln in lines)
+    seen["fam/m=8"] = _sa("fam/m=8", 150.0)
+    failures, _ = evaluate(seen, ref)
+    assert failures and "below the 2.0x floor" in failures[0]
+
+
+def test_speedup_missing_half_fails():
+    ref = {"speedup": {"fam/m=8": {"over": "fam/m=1", "min": 2.0}}}
+    failures, _ = evaluate({"fam/m=8": _sa("fam/m=8", 250.0)}, ref)
+    assert failures and "incomplete" in failures[0]
+
+
+# ---------------------------------------------------------------- overload
+def _ovl_sa(name, goodputs_by_clients):
+    units = [{"clients": c, "extras": {"goodput": g}}
+             for c, gs in goodputs_by_clients.items() for g in gs]
+    return {"name": name, "summary": {"throughput": {"mean": 1.0}},
+            "units": units}
+
+
+def test_overload_window_uses_highest_load_point_only():
+    # goodput holds at the top point -> pass, even though low-load differs
+    sa = _ovl_sa("ovl/adm", {20: [1900.0], 80: [1700.0, 1800.0]})
+    ref = {"overload": {"ovl/adm": {"goodput_at_max": [1300, 2200]}}}
+    failures, lines = evaluate({"ovl/adm": sa}, ref)
+    assert failures == []
+    assert any("clients=80" in ln for ln in lines)
+    # collapse ceiling: the no-admission baseline must stay collapsed
+    sa = _ovl_sa("ovl/noadm", {20: [2000.0], 80: [900.0]})
+    ref = {"overload": {"ovl/noadm": {"goodput_at_max": [0, 400]}}}
+    failures, _ = evaluate({"ovl/noadm": sa}, ref)
+    assert failures and "outside" in failures[0]
+
+
+def test_overload_missing_or_malformed_fails():
+    ref = {"overload": {"ovl/adm": {"goodput_at_max": [1300, 2200]}}}
+    failures, _ = evaluate({}, ref)
+    assert failures and "MISSING" in failures[0]
+    with pytest.raises(GateError, match="overload extras"):
+        evaluate({"ovl/adm": _sa("ovl/adm", 100.0,
+                                 units=[{"clients": 80}])}, ref)
+
+
 # ------------------------------------------------------------------- audit
 def test_audit_violation_fails_regardless_of_throughput():
     sa = _sa("fam/a", 100.0,
@@ -113,6 +163,11 @@ def test_committed_bounds_file_is_well_formed():
     # every fidelity base pairs a committed bound or at least a DES name
     for base in ref.get("fidelity", {}):
         assert not base.endswith("/batch"), base
+    for name, spec in ref.get("speedup", {}).items():
+        assert spec["over"] != name and spec["min"] > 1.0, (name, spec)
+    for name, spec in ref.get("overload", {}).items():
+        lo, hi = spec["goodput_at_max"]
+        assert 0 <= lo < hi, (name, spec)
 
 
 # ------------------------------------------------------- vectorsim payload
