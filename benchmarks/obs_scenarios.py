@@ -1,0 +1,23 @@
+"""Observability scenario family (ISSUE 9):
+
+- ``obs/<proto>/traced`` — per-op distributed tracing on all three
+  protocols: sampled span trees (client -> leader -> relay -> follower ->
+  ack) decomposed into the critical-path segments (queue wait, CPU
+  service, serialization, relay aggregation, network, residual wait) that
+  sum to each op's measured latency.  The rows print the mean per-segment
+  milliseconds — the bottleneck-attribution numbers.
+- ``obs/fairness/{rotating,static}`` — fig8-style cells whose per-follower
+  busy seconds the summarizer folds into max/mean and Gini: the paper's
+  "relay rotation spreads the load" claim as an empirical comparison.
+- ``obs/pigpaxos/backlog/batch`` — the batch backend's timelines-only
+  counterpart (leader-backlog series from the vectorized kernel).
+
+Scenarios: ``repro.experiments.catalog``; this module is the
+``run.py --only`` shim."""
+from repro.experiments import report
+
+FAMILIES = ["obs"]
+
+
+def run(quick: bool = True):
+    return report.family_rows(FAMILIES, quick=quick)

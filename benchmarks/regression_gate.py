@@ -29,7 +29,16 @@ Diffs one or more fresh BENCH JSONs (as written by ``benchmarks/run.py
   it with the sharded-dispatch numbers) violates the ``"vectorsim"``
   reference section: DES<->batch xcheck error caps, the deterministic
   N=1025 sweep throughput window, or a missing ``sharded`` section
-  (wall-clock metrics are hardware-bound and deliberately NOT gated).
+  (wall-clock metrics are hardware-bound and deliberately NOT gated);
+* a ``BENCH_sim.json`` payload (``bench: "sim_engine"``) reports a
+  sampled-tracing CPU overhead above the ``"sim_engine"`` section's
+  ceiling — the obs layer's hooks must stay near-free at the catalog
+  sample rates (the gated number is the paired-minimum across
+  interleaved rounds; see ``sim_engine_bench.py`` for why);
+* the ``"obs_fairness"`` relay-fairness pair inverts: rotating relays
+  must yield a *lower* follower busy max/mean hotspot factor than static
+  relays (the paper's Fig 8 claim, recomputed from the obs sections of
+  the ``obs/fairness/*`` cells in ``BENCH_obs.json``).
 
 The DES runs in virtual time, so quick-mode throughput is deterministic per
 seed; the bounds carry a ±25% margin only to absorb *intentional*
@@ -99,6 +108,100 @@ def load_vectorsim(paths) -> Dict[str, dict]:
         if isinstance(payload, dict) and payload.get("bench") == "vectorsim":
             out[path] = payload
     return out
+
+
+def load_sim_engine(paths) -> Dict[str, dict]:
+    """``bench: "sim_engine"`` payloads among ``paths`` (BENCH_sim.json as
+    written by ``benchmarks.sim_engine_bench``), keyed by path."""
+    out: Dict[str, dict] = {}
+    for path in paths:
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, ValueError) as e:
+            raise GateError(f"{path}: unreadable artifact ({e})") from e
+        if isinstance(payload, dict) and payload.get("bench") == "sim_engine":
+            out[path] = payload
+    return out
+
+
+def evaluate_sim_engine(payload: dict, ref: dict,
+                        path: str = "BENCH_sim.json"
+                        ) -> Tuple[List[str], List[str]]:
+    """Gate one sim_engine bench payload against the ``"sim_engine"``
+    reference section: the sampled-tracing overhead ceiling (the catalog
+    obs cells run at sample_rate 0.05-0.1, so the gated fraction is the
+    production cost of the obs hooks).  Full-rate overhead is recorded in
+    the payload but informational only — nobody measures at rate 1.0."""
+    failures: List[str] = []
+    lines: List[str] = []
+    cap = ref.get("tracing_overhead_max")
+    if cap is None:
+        return failures, lines
+    try:
+        got = payload["tracing_overhead_frac"]
+    except (KeyError, TypeError) as e:
+        raise GateError(f"{path}: malformed sim_engine payload ({e})") from e
+    ok = got <= cap
+    lines.append(f"{'ok' if ok else 'FAIL':4s} "
+                 f"{'sim_engine/tracing_overhead':40s} "
+                 f"frac={got:>10.4f} cap={cap}")
+    if not ok:
+        failures.append(f"{path}: sampled-tracing overhead {got:.4f} "
+                        f"above the {cap} ceiling")
+    return failures, lines
+
+
+def _follower_hotspot(sa: dict):
+    """Follower busy max/mean from a scenario artifact's obs section
+    (representative = highest-throughput replicate, as in the report
+    summarizer)."""
+    reps = sa.get("replicates") or []
+    if not reps:
+        raise GateError(f"{sa.get('name')}: no replicates for the "
+                        f"fairness check")
+    rep = max(reps, key=lambda u: u.get("throughput") or 0.0)
+    try:
+        busy = rep["extras"]["obs"]["cpu_busy_s"]
+        n = sa["spec"]["n"]
+    except (KeyError, TypeError) as e:
+        raise GateError(f"{sa.get('name')}: replicate lacks obs busy "
+                        f"accounting ({e})") from e
+    vals = [float(busy.get(str(i), 0.0)) for i in range(1, n)]
+    if not vals or sum(vals) <= 0:
+        raise GateError(f"{sa.get('name')}: follower busy seconds are all "
+                        f"zero — obs accounting broken")
+    return max(vals) / (sum(vals) / len(vals))
+
+
+def evaluate_obs_fairness(seen: Dict[str, dict],
+                          spec: dict) -> Tuple[List[str], List[str]]:
+    """The Fig 8 relay-fairness claim as a gate: the rotating cell's
+    follower busy max/mean must stay below the static cell's AND below an
+    absolute ceiling (rotation keeps followers near-uniform)."""
+    failures: List[str] = []
+    lines: List[str] = []
+    rot_name = spec.get("rotating", "obs/fairness/rotating")
+    stat_name = spec.get("static", "obs/fairness/static")
+    rot_sa, stat_sa = seen.get(rot_name), seen.get(stat_name)
+    if rot_sa is None or stat_sa is None:
+        missing = rot_name if rot_sa is None else stat_name
+        failures.append(f"obs_fairness: {missing} MISSING from the "
+                        f"artifact(s) — the gate must not silently shrink")
+        return failures, lines
+    rot, stat = _follower_hotspot(rot_sa), _follower_hotspot(stat_sa)
+    cap = spec.get("rotating_max_over_mean_max")
+    ok = rot < stat and (cap is None or rot <= cap)
+    lines.append(f"{'ok' if ok else 'FAIL':4s} "
+                 f"{'obs/fairness [rotating<static]':40s} "
+                 f"rotating={rot:>7.2f} static={stat:.2f}"
+                 f"{'' if cap is None else f' cap={cap}'}")
+    if not ok:
+        failures.append(f"obs_fairness: follower busy max/mean "
+                        f"rotating={rot:.2f} vs static={stat:.2f} "
+                        f"(need rotating < static"
+                        f"{'' if cap is None else f' and <= {cap}'})")
+    return failures, lines
 
 
 def evaluate_vectorsim(payload: dict, ref: dict,
@@ -315,6 +418,19 @@ def main() -> None:
             vf, vl = evaluate_vectorsim(payload, vs_ref, path)
             failures += vf
             lines += vl
+        se_ref = ref.get("sim_engine", {})
+        for path, payload in load_sim_engine(args.artifacts).items():
+            sf, sl = evaluate_sim_engine(payload, se_ref, path)
+            failures += sf
+            lines += sl
+        fair_spec = ref.get("obs_fairness")
+        if fair_spec is not None and any(
+                name in seen for name in (
+                    fair_spec.get("rotating", "obs/fairness/rotating"),
+                    fair_spec.get("static", "obs/fairness/static"))):
+            ff, fl = evaluate_obs_fairness(seen, fair_spec)
+            failures += ff
+            lines += fl
     except GateError as e:
         failures, lines = [str(e)], []
     for line in lines:

@@ -41,6 +41,7 @@ MODULES = [
     "fault_scenarios",
     "extra_scenarios",
     "overload_scenarios",
+    "obs_scenarios",
     "serialization_cost",
     "analytical_sweep",
     "sim_engine_bench",
@@ -94,6 +95,10 @@ def main() -> None:
     ap.add_argument("--plot", default=None, metavar="DIR",
                     help="render throughput-vs-load / latency-CDF SVGs for "
                          "every family that ran (dependency-free)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="write the Perfetto trace-event JSON collected "
+                         "from every traced scenario unit that ran (open "
+                         "at https://ui.perfetto.dev)")
     args = ap.parse_args()
 
     from repro import experiments
@@ -166,6 +171,22 @@ def main() -> None:
         from repro.experiments import plot
         written = plot.render_artifact(artifact, args.plot)
         print(f"# wrote {len(written)} plots to {args.plot}")
+    if args.trace and artifact is not None:
+        # merge the per-unit Perfetto events the traced scenarios embedded
+        # in their obs extras into one ui.perfetto.dev-openable file
+        evs, traced_units = [], 0
+        for sa in artifact["scenarios"]:
+            for u in sa["units"]:
+                pf = ((u.get("extras") or {}).get("obs") or {}) \
+                    .get("perfetto")
+                if pf and pf.get("events"):
+                    evs.extend(pf["events"])
+                    traced_units += 1
+        with open(args.trace, "w") as f:
+            json.dump({"traceEvents": evs, "displayTimeUnit": "ms",
+                       "otherData": {"traced_units": traced_units}}, f)
+        print(f"# wrote {len(evs)} trace events from {traced_units} "
+              f"traced units to {args.trace}")
     if args.json:
         payload = {"rows": rows, "total_s": round(total, 1),
                    "failures": failures, "full": bool(args.full)}

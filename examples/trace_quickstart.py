@@ -1,0 +1,58 @@
+"""Trace quickstart: where does a PigPaxos millisecond go?
+
+1. run a traced 25-node cluster (every 10th client op gets a span tree);
+2. print one op's span waterfall (client -> leader -> relay -> followers);
+3. decompose commit latency into critical-path segments (the empirical
+   counterpart of the paper's Eq. 1-3 bottleneck terms);
+4. export a Perfetto JSON you can drop into https://ui.perfetto.dev.
+
+    PYTHONPATH=src python examples/trace_quickstart.py
+"""
+from repro.core import Cluster, PigConfig
+from repro.obs import SEGMENTS, critical_path, decompose, write_perfetto
+
+print("=== traced 25-node PigPaxos (R=5, PRC) on the event simulator ===")
+cluster = Cluster("pigpaxos", 25, pig=PigConfig(n_groups=5, prc=1), seed=2,
+                  obs={"sample_rate": 0.1, "metrics_dt": 0.01})
+stats = cluster.measure(duration=0.5, warmup=0.2, clients=40)
+tracer = cluster.obs_tracer
+print(f"  throughput: {stats.throughput:.0f} req/s, "
+      f"median latency {stats.median_ms:.2f} ms")
+s = tracer.summary()
+print(f"  traced {s['ops_finished']} of {s['ops_seen']} ops "
+      f"({s['spans']} spans)")
+
+# -- one op's waterfall -----------------------------------------------
+tid = tracer.finished[len(tracer.finished) // 2]
+spans = tracer.trace_of(tid)
+t0 = spans[0][4]
+print(f"\n=== trace {tid}: one op, {len(spans)} spans, "
+      f"{tracer.op_latency(tid) * 1e3:.2f} ms ===")
+for sid, parent, cat, node, a, b in spans[:14]:
+    off = (a - t0) * 1e3
+    bar = " " * min(40, int(off * 8)) + "#" * max(1, int((b - a) * 1e3 * 8))
+    print(f"  {cat:>5} node={node:<3} +{off:6.2f}ms "
+          f"{(b - a) * 1e3:6.3f}ms |{bar}")
+if len(spans) > 14:
+    print(f"  ... {len(spans) - 14} more spans")
+
+# -- critical-path attribution ----------------------------------------
+segs = decompose(spans)
+print("\n=== critical path: segments sum exactly to the op latency ===")
+for cat in SEGMENTS:
+    frac = segs[cat] / segs["total"] if segs["total"] else 0.0
+    print(f"  {cat:>5}: {segs[cat] * 1e3:6.3f} ms  {'#' * int(frac * 40)}")
+cp = critical_path(tracer)
+worst = max(cp["mean_ms"], key=cp["mean_ms"].get)
+print(f"  fleet mean over {cp['n_ops']} traced ops: bottleneck segment "
+      f"is '{worst}' ({cp['mean_ms'][worst]:.2f} ms/op)")
+
+# -- timelines + Perfetto export --------------------------------------
+tl = stats.timelines["series"]
+busiest = max((k for k in tl if k.startswith("busy_frac/")),
+              key=lambda k: max(tl[k]["v"], default=0.0))
+print(f"\n  hottest node: {busiest.split('/')[1]} "
+      f"(peak busy {max(tl[busiest]['v']):.0%} of a sampling period)")
+n = write_perfetto("trace_quickstart.json", tracer, limit=20_000)
+print(f"  wrote {n} Perfetto events -> trace_quickstart.json "
+      f"(open at https://ui.perfetto.dev)")

@@ -147,6 +147,12 @@ class Client:
         self._hist_cur: Optional[dict] = None
         self._last_cmd: Optional[Command] = None
         self.retries = 0                   # timeout re-sends (fault metric)
+        # observability handles (None unless Cluster(obs=...)); the tracer
+        # samples ops at issue time, the timelines gauge eats every latency
+        # (getattr: the seed RefNetwork predates the obs surface)
+        self._tracer = getattr(cluster.net, "tracer", None)
+        self._obs = getattr(cluster.net, "obs", None)
+        self._tctx = None                  # (seq, trace ctx) of a sampled op
         self.payload = bytes(workload.payload_bytes)
         self._key_cdf = (zipf_cdf(workload.n_keys, workload.zipf_theta)
                          if workload.key_dist == "zipfian" else None)
@@ -211,7 +217,19 @@ class Client:
                 "ok": False, "rtag": None,
                 "wtag": getattr(cmd.value, "tag", None)}
             self.history.append(cur)
-        self.cluster.net.send(self.net_id, self.pick_target(), ClientRequest(cmd=cmd))
+        req = ClientRequest(cmd=cmd)
+        tr = self._tracer
+        if tr is not None:
+            ctx = tr.begin_op(self.net_id, sched.now)
+            if ctx is not None:
+                self._tctx = (self.seq, ctx)
+                tr.attach(req, ctx)
+            # a new op NEVER inherits ambient ctx: the closed-loop client
+            # issues from inside the previous reply's handler, and without
+            # this the next (unsampled) op's chain would keep growing the
+            # finished trace through Network.send's ambient fallback
+            tr.cur = None
+        self.cluster.net.send(self.net_id, self.pick_target(), req)
         if self.wl.request_timeout:
             seq = self.seq
             sched.after(self.wl.request_timeout, lambda: self._resend(seq))
@@ -231,7 +249,14 @@ class Client:
                 cur["resp"] = sched.now
                 cur["ok"] = True
                 cur["rtag"] = getattr(msg.value, "tag", None)
-        self.latencies.append((sched.now, sched.now - self.sent_at))
+        lat = sched.now - self.sent_at
+        self.latencies.append((sched.now, lat))
+        tc = self._tctx
+        if tc is not None and tc[0] == msg.seq:
+            self._tracer.finish_op(tc[1], sched.now)
+            self._tctx = None
+        if self._obs is not None:
+            self._obs.latency.note(lat)
         self._issue()
 
     def _retry(self) -> None:
@@ -243,8 +268,11 @@ class Client:
         operation's result."""
         if self.cluster.sched.now >= self.stop_at:
             return
-        self.cluster.net.send(self.net_id, self.pick_target(),
-                              ClientRequest(cmd=self._last_cmd))
+        req = ClientRequest(cmd=self._last_cmd)
+        tc = self._tctx
+        if tc is not None and tc[0] == self.seq:
+            self._tracer.attach(req, tc[1])   # the retry hops join the trace
+        self.cluster.net.send(self.net_id, self.pick_target(), req)
 
     def _resend(self, seq: int) -> None:
         """Request-timeout path: re-send the SAME command (the replicas'
@@ -275,6 +303,7 @@ class OpenLoopClient(Client):
         self.outstanding: Dict[int, tuple] = {}   # seq -> (sent_at, cmd, rec)
         self.shed = 0        # arrivals dropped at the client (cap reached)
         self.rejected = 0    # ops abandoned on ok=False (reject_action="drop")
+        self._tctxs: Dict[int, tuple] = {}        # seq -> trace ctx (sampled)
 
     def start(self) -> None:
         self._arrival()
@@ -312,8 +341,14 @@ class OpenLoopClient(Client):
                        "wtag": getattr(cmd.value, "tag", None)}
                 self.history.append(rec)
             self.outstanding[self.seq] = (sched.now, cmd, rec)
-            self.cluster.net.send(self.net_id, self.pick_target(),
-                                  ClientRequest(cmd=cmd))
+            req = ClientRequest(cmd=cmd)
+            tr = self._tracer
+            if tr is not None:
+                ctx = tr.begin_op(self.net_id, sched.now)
+                if ctx is not None:
+                    self._tctxs[self.seq] = ctx
+                    tr.attach(req, ctx)
+            self.cluster.net.send(self.net_id, self.pick_target(), req)
             if self.wl.request_timeout:
                 seq = self.seq
                 sched.after(self.wl.request_timeout,
@@ -332,6 +367,9 @@ class OpenLoopClient(Client):
             if self.wl.reject_action == "drop":
                 del self.outstanding[msg.seq]
                 self.rejected += 1
+                ctx = self._tctxs.pop(msg.seq, None)
+                if ctx is not None:
+                    self._tracer.abort_op(ctx, sched.now)
                 return
             seq = msg.seq
             sched.after(5e-3, lambda: self._retry_seq(seq))
@@ -342,7 +380,13 @@ class OpenLoopClient(Client):
             rec["resp"] = sched.now
             rec["ok"] = True
             rec["rtag"] = getattr(msg.value, "tag", None)
-        self.latencies.append((sched.now, sched.now - entry[0]))
+        lat = sched.now - entry[0]
+        self.latencies.append((sched.now, lat))
+        ctx = self._tctxs.pop(msg.seq, None)
+        if ctx is not None:
+            self._tracer.finish_op(ctx, sched.now)
+        if self._obs is not None:
+            self._obs.latency.note(lat)
 
     def _retry_seq(self, seq: int) -> None:
         entry = self.outstanding.get(seq)
@@ -373,7 +417,7 @@ class Cluster:
                  cost: Optional[CostModel] = None, leader_timeout: float = 50e-3,
                  quorums=None, engine: str = "exact",
                  record_history: bool = False, spare_nodes: int = 0,
-                 batch=None, pipeline_depth: int = 0):
+                 batch=None, pipeline_depth: int = 0, obs=None):
         """``engine`` selects the simulation engine:
 
         * ``"exact"`` (default) — fused slab engine, trace-identical to the
@@ -397,6 +441,14 @@ class Cluster:
         that many uncommitted in-flight slots (0 = unbounded, the native
         behavior).  DES engines only — the verbatim seed stack has no
         batching surface.
+
+        ``obs`` (a ``repro.obs.ObsConfig``, a kwargs dict, or ``True``)
+        enables the observability layer: per-op distributed tracing
+        (``sample_rate``, event/RNG-neutral) and timeline metrics sampling
+        (``metrics_dt``).  DES engines only — the seed stack has no hook
+        surface.  Exposed afterwards as ``cluster.obs_tracer`` /
+        ``cluster.obs_timelines``; ``Stats.timelines`` carries the
+        exported series.
         """
         self.protocol = protocol
         self.n = n
@@ -432,6 +484,21 @@ class Cluster:
             paxos_cls, epaxos_cls = PaxosNode, EPaxosNode
         else:
             raise ValueError(f"unknown engine {engine!r}")
+        self.obs_cfg = None
+        self.obs_tracer = None
+        self.obs_timelines = None
+        if obs is not None and obs is not False:
+            if engine == "ref":
+                raise ValueError("observability is not supported by the "
+                                 "verbatim seed stack (engine='ref') — use "
+                                 "'exact' or 'fast'")
+            from ..obs import ObsConfig, Timelines, Tracer
+            cfg = ObsConfig.coerce(obs)
+            self.obs_cfg = cfg
+            self.obs_tracer = Tracer(cfg.sample_rate, cfg.max_spans)
+            self.net.tracer = self.obs_tracer
+            self.obs_timelines = Timelines(cfg.timeline_cap)
+            self.net.obs = self.obs_timelines
         self.pig = pig
         self.leader_timeout = leader_timeout
         peers = list(range(n))
@@ -555,6 +622,11 @@ class Cluster:
                 clients: int = 60, workload: Optional[WorkloadConfig] = None,
                 reset_stats_at_warmup: bool = True) -> "Stats":
         stop = warmup + duration
+        if (self.obs_timelines is not None
+                and self.obs_cfg.metrics_dt > 0.0):
+            from ..obs import install_sampler
+            install_sampler(self, self.obs_timelines, self.obs_cfg.metrics_dt,
+                            stop_at=stop + 0.2)
         self.add_clients(clients, workload, stop_at=stop)
         if reset_stats_at_warmup:
             self.sched.at(warmup, self.net.reset_stats)
@@ -585,6 +657,9 @@ class Stats:
     msg_out: np.ndarray = None
     flight: np.ndarray = None
     cpu_busy: Dict[int, float] = None
+    # exported observability timelines (repro.obs.Timelines.export()) when
+    # the cluster ran with obs enabled; None otherwise
+    timelines: Optional[dict] = None
 
     @classmethod
     def from_lat(cls, lats: List[float], duration: float, cluster: Cluster,
@@ -601,6 +676,9 @@ class Stats:
             msg_out=cluster.net.msgs_out[:n].copy(),
             flight=cluster.net.flight_matrix[:n, :n].copy(),
             cpu_busy=dict(cluster.net.cpu_busy),
+            timelines=(cluster.net.obs.export()
+                       if getattr(cluster.net, "obs", None) is not None
+                       else None),
         )
 
     def messages_per_op(self, node_id: int) -> float:

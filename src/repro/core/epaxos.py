@@ -45,6 +45,9 @@ class _Inst:
     # batching/pipelining extensions (None/False on the unbatched path)
     client_srcs: Optional[tuple] = None   # per-sub-command reply routing
     gated: bool = False                   # counted against pipeline_depth
+    # observability: trace ctx of the proposing op (None when untraced) —
+    # deferred execution (dep-wait) replies rejoin the span tree through it
+    trace: Optional[tuple] = None
 
 
 @dataclass
@@ -202,11 +205,16 @@ class EPaxosNode(Node):
         inst = _Inst(cmd=cmd, deps=deps, seq=seq, state="preaccepted",
                      client_src=client_src, is_mine=True,
                      client_srcs=client_srcs)
+        tr = self.net.tracer
+        if tr is not None:
+            inst.trace = tr.cur   # ambient ClientRequest ctx (None on timers)
         self.insts[inst_id] = inst
         self._note_cmd(cmd, inst_id)
         # one shared instance per broadcast: receivers never mutate messages
         m = PreAccept(inst=inst_id, cmd=cmd, deps=deps, seq=seq,
                       n_cluster=self.n)
+        if tr is not None and inst.trace is not None:
+            tr.attach(m, inst.trace)
         for p in self.peers:
             if p != self.id:
                 self.send(p, m)
@@ -302,6 +310,9 @@ class EPaxosNode(Node):
             inst.accept_acks = 1
             m = EAccept(inst=msg.inst, cmd=inst.cmd, deps=inst.deps,
                         seq=inst.seq, n_cluster=self.n)
+            tr = self.net.tracer
+            if tr is not None and inst.trace is not None:
+                tr.attach(m, inst.trace)   # slow-path round stays on-trace
             for p in self.peers:
                 if p != self.id:
                     self.send(p, m)
@@ -359,6 +370,9 @@ class EPaxosNode(Node):
                 self._release_held()
         m = ECommit(inst=inst_id, cmd=inst.cmd, deps=inst.deps, seq=inst.seq,
                     n_cluster=self.n)
+        tr = self.net.tracer
+        if tr is not None and inst.trace is not None:
+            tr.attach(m, inst.trace)
         for p in self.peers:
             if p != self.id:
                 self.send(p, m)
@@ -491,11 +505,16 @@ class EPaxosNode(Node):
             inst.state = "executed"
             srcs = inst.client_srcs
             if inst.is_mine and srcs:
+                tr = self.net.tracer
+                owner = (tr.meta[inst.trace[0]]["client"]
+                         if tr is not None and inst.trace is not None else -1)
                 for c, src, val in zip(cmd.cmds, srcs, results):
                     if src >= 0:
-                        self.send(src, ClientReply(client_id=c.client_id,
-                                                   seq=c.seq, ok=True,
-                                                   value=val))
+                        reply = ClientReply(client_id=c.client_id,
+                                            seq=c.seq, ok=True, value=val)
+                        if src == owner:
+                            tr.attach(reply, inst.trace)
+                        self.send(src, reply)
             return
         op_id = (cmd.client_id, cmd.seq)
         done = self._done_ops
@@ -520,9 +539,12 @@ class EPaxosNode(Node):
         self.applied_log.append((inst_id, cmd))
         inst.state = "executed"
         if inst.is_mine and inst.client_src >= 0:
-            self.send(inst.client_src,
-                      ClientReply(client_id=cmd.client_id,
-                                  seq=cmd.seq, ok=True, value=val))
+            reply = ClientReply(client_id=cmd.client_id,
+                                seq=cmd.seq, ok=True, value=val)
+            tr = self.net.tracer
+            if tr is not None and inst.trace is not None:
+                tr.attach(reply, inst.trace)
+            self.send(inst.client_src, reply)
 
     # ===================================================== membership change
     def propose_reconfig(self, op: str, nid: int) -> bool:

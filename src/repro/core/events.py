@@ -38,7 +38,7 @@ import numpy as np
 # consumed by network.Network (kept here so the encoding has one home).
 K_CALL = 0       # (t, seq, K_CALL, slot, gen, fn, None)
 K_TRANSMIT = 1   # (t, seq, K_TRANSMIT, src, dst, msg, cpu_cost)
-K_ARRIVE = 2     # (t, seq, K_ARRIVE, src, dst, msg, cpu_cost)
+K_ARRIVE = 2     # (t, seq, K_ARRIVE, src, dst, msg, cpu_cost, t_transmit)
 K_HANDLE = 3     # (t, seq, K_HANDLE, dst, msg, None, None)
 K_DELIVER = 4    # (t, seq, K_DELIVER, dst, msg, None, None)  fast-path hop
 
@@ -77,6 +77,31 @@ class Scheduler:
 
     def after(self, dt: float, fn: Callable[[], None]) -> int:
         return self.at(self.now + dt, fn)
+
+    def every(self, dt: float, fn: Callable[[], None],
+              stop_at: float = _INF) -> Callable[[], None]:
+        """Repeating timer: run ``fn`` every ``dt`` seconds, starting at
+        ``now + dt``, until past ``stop_at`` or until the returned cancel
+        callable is invoked.  Built on :meth:`after`, so it composes with
+        the fused network loop and slab cancellation like any timer.
+        Used by the observability sampler (`repro.obs.metrics`) and
+        latency-driven admission control (`repro.runtime.policy`)."""
+        state = {"on": True, "tid": None}
+
+        def _fire() -> None:
+            if not state["on"]:
+                return
+            fn()
+            if state["on"] and self.now + dt <= stop_at:
+                state["tid"] = self.after(dt, _fire)
+
+        def cancel() -> None:
+            state["on"] = False
+            if state["tid"] is not None:
+                self.cancel(state["tid"])
+
+        state["tid"] = self.after(dt, _fire)
+        return cancel
 
     def cancel(self, timer_id: int) -> None:
         """O(1) cancellation: bump the slot generation so the heap entry is

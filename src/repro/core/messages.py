@@ -61,6 +61,11 @@ class Msg:
     # message instance for every destination, so the cost is computed once.
     # Excluded from __eq__/__repr__ so caching never changes message identity.
     _cost: float = field(default=-1.0, compare=False, repr=False)
+    # trace context (repro.obs): (trace_id, span_id) of the span that caused
+    # this message, set once by Tracer.attach on sampled ops only.  A slot
+    # (not a side table) because the engine loops test it per event — a slot
+    # load is the only per-message tracing cost an unsampled op ever pays.
+    _tctx: Any = field(default=None, compare=False, repr=False)
 
     def wire_size(self) -> int:
         return HEADER_BYTES
@@ -134,6 +139,7 @@ class P2b(Msg):
     def __init__(self, ballot=(0, 0), slot=0, ok=True):
         self.src = -1
         self._cost = -1.0
+        self._tctx = None
         self.ballot = ballot
         self.slot = slot
         self.ok = ok
@@ -206,6 +212,7 @@ class PigReply(Msg):
     def __init__(self, pig_id=0, inner=None):
         self.src = -1
         self._cost = -1.0
+        self._tctx = None
         self.pig_id = pig_id
         self.inner = inner
 

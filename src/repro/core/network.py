@@ -120,6 +120,13 @@ class Network:
         # exact engine keeps its per-hop draws — golden traces depend on it).
         self._jitter_block: list = []
         self._jitter_idx = 0
+        # observability (repro.obs): ``tracer`` collects per-op span trees
+        # (purely observational — no events, no RNG, no message mutation, so
+        # golden traces hold even with tracing on); ``obs`` is the Timelines
+        # registry whose ring buffers reset with the rest of the stats at
+        # the warmup boundary.  Both None unless Cluster(obs=...) wired them.
+        self.tracer = None
+        self.obs = None
 
     _JITTER_BLOCK = 4096
 
@@ -211,8 +218,19 @@ class Network:
             done = start + c
             self.cpu_free[src] = done
             self._cpu_busy[src] += c
+            tr = self.tracer
+            if tr is not None:
+                ctx = msg._tctx or tr.cur
+                if ctx is not None:
+                    tr.attach(msg, ctx)
+                    tr.add_span(ctx, "ser", src, start, done)
         else:
             done = sched.now
+            tr = self.tracer
+            if tr is not None:
+                ctx = msg._tctx or tr.cur
+                if ctx is not None:
+                    tr.attach(msg, ctx)
         sched._seq = seq = sched._seq + 1
         heapq.heappush(sched._heap, (done, seq, K_TRANSMIT, src, dst, msg, c))
 
@@ -251,6 +269,14 @@ class Network:
             if lat < 0.0:
                 return                     # dropped by a lossy gray node
         arrive = done + lat
+        tr = self.tracer
+        if tr is not None:
+            ctx = msg._tctx or tr.cur
+            if ctx is not None:
+                tr.attach(msg, ctx)
+                if src < self.n_servers:
+                    tr.add_span(ctx, "ser", src, done - c, done)
+                tr.add_span(ctx, "net", src, done, arrive)
         sched._seq = seq = sched._seq + 1
         heapq.heappush(sched._heap, (arrive, seq, K_DELIVER, dst, msg, c, None))
 
@@ -300,6 +326,11 @@ class Network:
         part = self.partitioned
         deg = self._degraded
         acct = self.accounting
+        tr = self.tracer
+        # tracer cost contract: an unsampled op costs one ``_tctx`` slot
+        # load per event here — no id() call, no dict probe (the hop map
+        # is only touched for messages that actually carry a context)
+        tr_hop = tr._hop if tr is not None else None
         n = 0
         while heap:
             ev = pop(heap)
@@ -312,6 +343,21 @@ class Network:
                 dst = ev[3]
                 node = nodes[dst]
                 sched.now = t
+                if tr is not None and ev[4]._tctx is not None:
+                    # ambient ctx: sends inside the handler inherit the
+                    # hop's svc span recorded at K_ARRIVE (popped even for
+                    # crashed nodes so the hop map can't leak on this path).
+                    # Unsampled messages skip this entirely: ``cur`` is
+                    # always None between handlers (the post-handler clear
+                    # below; timer paths save/restore).
+                    mid = id(ev[4])
+                    h = tr_hop.get(mid)
+                    if h is None:
+                        tr.cur = None
+                    else:
+                        tr.cur = h.pop(dst, None)
+                        if not h:
+                            del tr_hop[mid]
                 if node is not None and not node.crashed:
                     msg = ev[4]
                     if acct:
@@ -325,6 +371,8 @@ class Network:
                         if h is None:
                             h = node._bind_handler(msg.__class__)
                         h(msg)
+                if tr is not None:
+                    tr.cur = None
             elif kind == K_ARRIVE:
                 sched.now = t
                 dst = ev[4]
@@ -339,9 +387,32 @@ class Network:
                         cpu_busy[dst] += c
                         sched._seq = seq = sched._seq + 1
                         push(heap, (done, seq, K_HANDLE, dst, ev[5], None, None))
+                        if tr is not None:
+                            ctx = ev[5]._tctx
+                            if ctx is not None:
+                                # ev[7]: transmit time (net span recorded
+                                # here so K_TRANSMIT needs no tracer hook)
+                                tr.add_span(ctx, "net", ev[3], ev[7], t)
+                                if start > t:
+                                    tr.add_span(ctx, "queue", dst, t, start)
+                                sid = tr.add_span(ctx, "svc", dst, start, done)
+                                mid = id(ev[5])
+                                h = tr_hop.get(mid)
+                                if h is None:
+                                    h = tr_hop[mid] = {}
+                                h[dst] = (ctx[0], sid)
                     else:
                         sched._seq = seq = sched._seq + 1
                         push(heap, (t, seq, K_HANDLE, dst, ev[5], None, None))
+                        if tr is not None:
+                            ctx = ev[5]._tctx
+                            if ctx is not None:
+                                tr.add_span(ctx, "net", ev[3], ev[7], t)
+                                mid = id(ev[5])
+                                h = tr_hop.get(mid)
+                                if h is None:
+                                    h = tr_hop[mid] = {}
+                                h[dst] = ctx
             elif kind == K_TRANSMIT:
                 sched.now = t
                 src = ev[3]
@@ -356,11 +427,11 @@ class Network:
                         if lat >= 0.0:     # not dropped by a gray node
                             sched._seq = seq = sched._seq + 1
                             push(heap, (t + lat, seq, K_ARRIVE, src, dst,
-                                        ev[5], ev[6]))
+                                        ev[5], ev[6], t))
                     else:
                         sched._seq = seq = sched._seq + 1
                         push(heap, (t + lat, seq, K_ARRIVE, src, dst,
-                                    ev[5], ev[6]))
+                                    ev[5], ev[6], t))
             else:  # K_CALL timer via the generation slab
                 slot = ev[3]
                 gen = ev[4]
@@ -371,6 +442,8 @@ class Network:
                 sched.now = t
                 ev[5]()
                 acct = self.accounting   # timers may toggle/reset accounting
+                tr = self.tracer
+                tr_hop = tr._hop if tr is not None else None
             n += 1
             if max_events is not None and n >= max_events:
                 break
@@ -393,6 +466,7 @@ class Network:
         free_slots = sched._free
         nsrv = self.n_servers
         acct = self.accounting
+        tr = self.tracer
         n = 0
         while heap:
             ev = pop(heap)
@@ -407,6 +481,7 @@ class Network:
                 node = nodes[dst]
                 sched.now = t
                 if node is not None and not node.crashed:
+                    msg = ev[4]
                     if dst < nsrv:
                         c = ev[5]
                         free = cpu_free[dst]
@@ -415,7 +490,15 @@ class Network:
                         cpu_free[dst] = done
                         cpu_busy[dst] += c
                         sched.now = done
-                    msg = ev[4]
+                        if tr is not None:
+                            ctx = msg._tctx
+                            if ctx is not None:
+                                if start > t:
+                                    tr.add_span(ctx, "queue", dst, t, start)
+                                sid = tr.add_span(ctx, "svc", dst, start, done)
+                                tr.cur = (ctx[0], sid)
+                    elif tr is not None:
+                        tr.cur = msg._tctx
                     if acct:
                         msgs_in[dst] += 1
                     try:
@@ -427,6 +510,8 @@ class Network:
                         if h is None:
                             h = node._bind_handler(msg.__class__)
                         h(msg)
+                    if tr is not None:
+                        tr.cur = None
             else:  # K_CALL
                 slot = ev[3]
                 gen = ev[4]
@@ -437,6 +522,7 @@ class Network:
                 sched.now = t
                 ev[5]()
                 acct = self.accounting
+                tr = self.tracer
             n += 1
             if max_events is not None and n >= max_events:
                 break
@@ -489,6 +575,8 @@ class Network:
         self._msgs_in[:] = [0] * cap
         self._flight.clear()
         self._cpu_busy[:] = [0.0] * cap
+        if self.obs is not None:
+            self.obs.reset()   # warmup samples never pollute timelines
 
     def message_load(self, node_id: int) -> int:
         self._materialize()

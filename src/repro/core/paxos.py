@@ -73,6 +73,10 @@ class _Slot:
     # batching/pipelining extensions (None/False on the unbatched path)
     client_srcs: Optional[tuple] = None   # per-sub-command reply routing
     gated: bool = False                   # counted against pipeline_depth
+    # observability: trace ctx of the op that caused this slot (None when
+    # untraced).  Carried so timer-driven re-proposals and the commit-time
+    # client reply rejoin the op's span tree (repro.obs).
+    trace: Optional[tuple] = None
 
 
 class PaxosNode(Node):
@@ -340,6 +344,11 @@ class PaxosNode(Node):
                     client_srcs: Optional[tuple] = None) -> None:
         entry = _Slot(cmd=cmd, client_src=client_src, client_srcs=client_srcs)
         entry.voters.add(self.id)
+        tr = self.net.tracer
+        if tr is not None:
+            # the ambient ctx (the ClientRequest hop that proposed, when
+            # message-driven; None from batch-flush/retry timers)
+            entry.trace = tr.cur
         self.log[slot] = entry
         # leader accepts locally
         self.accepted[slot] = (self.ballot, cmd)
@@ -352,7 +361,16 @@ class PaxosNode(Node):
         def make() -> P2a:
             return P2a(ballot=b, slot=slot, cmd=entry.cmd, commit_index=ci)
 
-        entry.pig_ids = self.comm.broadcast(make, round_key=slot) or []
+        tr = self.net.tracer
+        if tr is not None and entry.trace is not None:
+            # re-establish the op's ctx so timer-driven re-proposals (slot
+            # timeout retries) broadcast hops that rejoin its span tree
+            prev = tr.cur
+            tr.cur = entry.trace
+            entry.pig_ids = self.comm.broadcast(make, round_key=slot) or []
+            tr.cur = prev
+        else:
+            entry.pig_ids = self.comm.broadcast(make, round_key=slot) or []
         if self._learners:
             # joining learners are outside the comm's member set: feed them
             # the P2a directly so they follow the log (they never vote)
@@ -448,18 +466,28 @@ class PaxosNode(Node):
             e = self.log.get(s)
             if e is None:
                 continue
+            tr = self.net.tracer
             if cmd.__class__ is BatchCmd:
                 srcs = e.client_srcs
                 if srcs:    # None after crash-recovery re-propose: no replies
+                    owner = (tr.meta[e.trace[0]]["client"]
+                             if tr is not None and e.trace is not None
+                             else -1)
                     for c, src, (a, v) in zip(cmd.cmds, srcs, val):
                         if a and src >= 0:
-                            self.send(src, ClientReply(client_id=c.client_id,
-                                                       seq=c.seq, ok=True,
-                                                       value=v))
+                            reply = ClientReply(client_id=c.client_id,
+                                                seq=c.seq, ok=True, value=v)
+                            if src == owner:
+                                # only the slot-owning op's reply rejoins
+                                # its span tree (the batch shares one ctx)
+                                tr.attach(reply, e.trace)
+                            self.send(src, reply)
             elif ack and e.client_src >= 0:
-                self.send(e.client_src,
-                          ClientReply(client_id=cmd.client_id, seq=cmd.seq,
-                                      ok=True, value=val))
+                reply = ClientReply(client_id=cmd.client_id, seq=cmd.seq,
+                                    ok=True, value=val)
+                if tr is not None and e.trace is not None:
+                    tr.attach(reply, e.trace)
+                self.send(e.client_src, reply)
 
     # ===================================================== membership change
     def propose_reconfig(self, op: str, nid: int) -> bool:

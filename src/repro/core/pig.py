@@ -266,6 +266,15 @@ class PigComm:
             # flush threshold: min(required, group size incl. the relay)
             "thresh": min(msg.required, len(peers) + 1),
         }
+        tr = node.net.tracer
+        if tr is not None:
+            # remember the op's ctx + fan-in start so the timer-driven
+            # flush can close a "relay" (aggregation-wait) span and the
+            # PigAggregate rejoins the op's trace (repro.obs)
+            ctx = tr.cur or tr.ctx_of(msg)
+            if ctx is not None:
+                st["trace"] = ctx
+                st["t_fan"] = node.sched.now
         self._agg[msg.pig_id] = st
         # 1) act as a regular follower on the inner message (common case
         #    dispatched inline: P2a accept, skipping the process_inner frame)
@@ -424,6 +433,14 @@ class PigComm:
         p1 = [r for r in replies if isinstance(r, P1b)]
         if p1:
             agg = _P1Aggregate(agg, p1)
+        tr = self.node.net.tracer
+        if tr is not None:
+            ctx = st.get("trace")
+            if ctx is not None:
+                # the relay-aggregation window: fan-in start -> flush
+                sid = tr.add_span(ctx, "relay", self.node.id,
+                                  st["t_fan"], self.node.sched.now)
+                tr.attach(agg, (ctx[0], sid))
         self.node.send(st["leader"], agg)
         # keep the entry briefly so late votes become supplementary
         # aggregates (§4.1), then GC it

@@ -402,7 +402,8 @@ def _summarize(lat, t_fin, commit_t, active, ready, loadF, loadL, cell,
 
 
 def _group_cell(cell, steps: int, kmax: int, breq: int,
-                faulty: bool = False, nb: int = 0, kernel: str = "lax"):
+                faulty: bool = False, nb: int = 0, kernel: str = "lax",
+                obs: bool = False):
     """Simulate one grid cell of the Paxos/PigPaxos group kernel.
 
     ``faulty`` (static) enables the fault-mask path: hop arrivals at a
@@ -410,6 +411,14 @@ def _group_cell(cell, steps: int, kmax: int, breq: int,
     among the currently-up group members, and slow nodes add their extra
     one-way latency to every touching hop.  The fault-free trace is
     untouched when False — the mask arrays are never read.
+
+    ``obs`` (static) additionally emits a per-step leader-backlog series
+    (the queueing wait W_L each scan step's first popped request just
+    observed at the leader FIFO, bucketed over virtual time like the
+    completion timeline) — the batch backend's cheap counterpart of the
+    DES timeline sampler.  Requires ``nb > 0``; off by default so the
+    scan's carry/output signature (and every cached compilation) is
+    unchanged for existing callers.
 
     ``kernel`` (static) selects the reply fan-in implementation: "lax" is
     the sort + segmented-cummax oracle below; "pallas" routes the same
@@ -695,17 +704,36 @@ def _group_cell(cell, steps: int, kmax: int, breq: int,
                               mode="drop"))
         loadL = loadL + jnp.where(in_win, 2.0 * ngf + 2.0, 0.0).sum()
 
+        ys = (t_fin - t0, t_fin, commit_done, active)
+        if obs:
+            # leader-backlog observation: the wait the step's first popped
+            # request just experienced at the leader FIFO (= backlog in
+            # seconds at its arrival instant), stamped with that arrival
+            ys = ys + (jnp.where(any_active, aL[0], jnp.inf), W_L[0])
         return ((ready, cpuF, cpuL, loadF, loadL, dt_ewma, t_prev),
-                (t_fin - t0, t_fin, commit_done, active))
+                ys)
 
     carry0 = (ready0, jnp.zeros(F, f32), jnp.float32(0.0),
               jnp.zeros(F, f32), jnp.float32(0.0),
               jnp.float32(1.0), jnp.float32(0.0))
-    (ready, _, _, loadF, loadL, _, _), (lat, t_fin, commit_t, active) = \
+    (ready, _, _, loadF, loadL, _, _), ys = \
         lax.scan(step_fn, carry0, jnp.arange(steps))
-    return _summarize(lat.reshape(-1), t_fin.reshape(-1),
-                      commit_t.reshape(-1), active.reshape(-1), ready,
-                      loadF.sum(), loadL, cell, nb=nb)
+    lat, t_fin, commit_t, active = ys[:4]
+    out = _summarize(lat.reshape(-1), t_fin.reshape(-1),
+                     commit_t.reshape(-1), active.reshape(-1), ready,
+                     loadF.sum(), loadL, cell, nb=nb)
+    if obs:
+        t_obs, qlag = ys[4], ys[5]
+        ok = jnp.isfinite(t_obs) & (t_obs <= stop + _DRAIN_S)
+        tb = jnp.clip(jnp.where(ok, jnp.floor(t_obs / _TL_BUCKET), 0.0)
+                      .astype(jnp.int32), 0, nb - 1)
+        w = ok.astype(f32)
+        qsum = jnp.zeros(nb, f32).at[tb].add(qlag * w)
+        qn = jnp.zeros(nb, f32).at[tb].add(w)
+        out["leader_backlog_s"] = jnp.where(qn > 0, qsum / jnp.maximum(qn, 1.0),
+                                            0.0)
+        out["leader_backlog_n"] = qn.astype(jnp.int32)
+    return out
 
 
 # ============================================================= epaxos kernel
@@ -881,24 +909,28 @@ def _resolve_kernel(kernel: str, kind: str = "group") -> str:
 
 
 def _cells_fn(batch, steps: int, kmax: int, kind: str, breq: int,
-              faulty: bool = False, nb: int = 0, kernel: str = "lax"):
+              faulty: bool = False, nb: int = 0, kernel: str = "lax",
+              obs: bool = False):
     """The unjitted whole-batch computation (vmap over cells); shared by
     the single-device jit below and the sharded per-device bodies."""
     if kind == "group":
         return jax.vmap(lambda c: _group_cell(c, steps, kmax, breq,
-                                              faulty, nb, kernel))(batch)
+                                              faulty, nb, kernel,
+                                              obs))(batch)
     return jax.vmap(lambda c: _epaxos_cell(c, steps, kmax, nb))(batch)
 
 
 @functools.partial(jax.jit, static_argnames=("steps", "kmax", "kind",
                                              "breq", "faulty", "nb",
-                                             "kernel"))
+                                             "kernel", "obs"))
 def _run_cells(batch, steps: int, kmax: int, kind: str, breq: int,
-               faulty: bool = False, nb: int = 0, kernel: str = "lax"):
-    sig = (kind, steps, kmax, breq, faulty, nb, kernel) + tuple(
+               faulty: bool = False, nb: int = 0, kernel: str = "lax",
+               obs: bool = False):
+    sig = (kind, steps, kmax, breq, faulty, nb, kernel, obs) + tuple(
         (k,) + tuple(v.shape) for k, v in sorted(batch.items()))
     _TRACE_COUNTS[sig] = _TRACE_COUNTS.get(sig, 0) + 1
-    return _cells_fn(batch, steps, kmax, kind, breq, faulty, nb, kernel)
+    return _cells_fn(batch, steps, kmax, kind, breq, faulty, nb, kernel,
+                     obs)
 
 
 def _pad_spec(configs: Sequence[SimConfig], grid) -> Dict[str, int]:
@@ -1046,7 +1078,8 @@ def _stack_cells(configs: Sequence[SimConfig], grid, duration: float,
 def simulate_grid(configs: Sequence[SimConfig], grid, duration: float,
                   warmup: float, steps: Optional[int] = None,
                   timeline: bool = False,
-                  kernel: str = "auto") -> Dict[str, np.ndarray]:
+                  kernel: str = "auto",
+                  obs: bool = False) -> Dict[str, np.ndarray]:
     """Run every (config_idx, clients, seed) grid point in ONE jitted call.
 
     Returns dict of per-cell arrays (throughput, median_s, p99_s, committed,
@@ -1061,15 +1094,22 @@ def simulate_grid(configs: Sequence[SimConfig], grid, duration: float,
     ``timeline=True`` (implied by fault-mask configs) adds per-cell
     completion timelines (``_TL_BUCKET`` buckets).
 
+    ``obs=True`` (group kernel only) adds the per-cell leader-backlog
+    series (``leader_backlog_s`` / ``leader_backlog_n``; see
+    ``_group_cell``) on the same buckets.
+
     ``kernel`` selects the group fan-in implementation ("auto" | "lax" |
     "pallas"; see ``_group_cell``) — "auto" picks the Pallas kernel on TPU
     and the XLA sort path elsewhere.
     """
     batch, kind, kmax = _stack_cells(configs, grid, duration, warmup)
     kernel = _resolve_kernel(kernel, kind)
+    if obs and kind != "group":
+        raise ValueError("obs timelines are group-kernel only — the epaxos "
+                         "kernel has no single-leader FIFO to observe")
     faulty = any(c.down is not None or c.slow is not None for c in configs)
     nb = (int(np.ceil((warmup + duration + _DRAIN_S) / _TL_BUCKET)) + 1
-          if (faulty or timeline) else 0)
+          if (faulty or timeline or obs) else 0)
     if steps is None:
         # requests are only issued inside [0, stop); the rate bound is
         # optimistic, and the exhausted-retry loop below is the safety net
@@ -1079,7 +1119,7 @@ def simulate_grid(configs: Sequence[SimConfig], grid, duration: float,
     # the group kernel pops `breq` requests per scan step
     breq = min(8, kmax) if kind == "group" else 1
     out = _run_cells(batch, -(-steps // breq), kmax, kind, breq, faulty, nb,
-                     kernel)
+                     kernel, obs)
     out = {k: np.asarray(v) for k, v in out.items()}
     steps_arr = np.full(len(grid), steps, np.int32)
     if out["exhausted"].any():
@@ -1089,7 +1129,7 @@ def simulate_grid(configs: Sequence[SimConfig], grid, duration: float,
         idx = np.nonzero(out["exhausted"])[0]
         sub = {k: v[idx] for k, v in batch.items()}
         sub_out = _run_cells(sub, -(-steps // breq), kmax, kind, breq,
-                             faulty, nb, kernel)
+                             faulty, nb, kernel, obs)
         for k, v in sub_out.items():
             out[k][idx] = np.asarray(v)
         steps_arr[idx] = steps
@@ -1235,7 +1275,8 @@ def simulate_scenario(protocol: str, n: int, *, pig=None, topo=None,
                       seeds: Sequence[int] = (0,), duration: float = 0.6,
                       warmup: float = 0.3, leader_timeout: float = 50e-3,
                       masks: Optional[Dict[str, np.ndarray]] = None,
-                      kernel: str = "auto", batch_m: int = 1) -> List[dict]:
+                      kernel: str = "auto", batch_m: int = 1,
+                      obs: bool = False) -> List[dict]:
     """One scenario's full clients x seeds grid in one compiled call.
 
     Returns one dict per (clients, seed) in ``runner`` unit order, carrying
@@ -1263,6 +1304,12 @@ def simulate_scenario(protocol: str, n: int, *, pig=None, topo=None,
     slots while earlier ones are in flight, i.e. the DES default
     ``pipeline_depth=0`` (unbounded); finite-depth throttles are
     DES-authoritative too.
+
+    ``obs=True`` (group kernel only) adds a batch-side observability
+    extra to every unit: the leader-backlog series sampled at request
+    arrivals (mean queueing wait per ``_TL_BUCKET`` bucket + sample
+    counts) — the counterpart of the DES timeline sampler's queue-depth
+    gauges.  Full span tracing is DES-only.
     """
     cfg = build_config(protocol, n, pig=pig, topo=topo, workload=workload,
                        masks=masks, batch_m=batch_m)
@@ -1274,7 +1321,8 @@ def simulate_scenario(protocol: str, n: int, *, pig=None, topo=None,
                                  f"batch_m={m}: one kernel lane carries a "
                                  f"whole batch of {m} clients")
     grid = [(0, int(k) // m, int(s)) for k in clients for s in seeds]
-    out = simulate_grid([cfg], grid, duration, warmup, kernel=kernel)
+    out = simulate_grid([cfg], grid, duration, warmup, kernel=kernel,
+                        obs=obs)
     # mean reply rank correction (seconds); 0 when unbatched
     lat_adj = 0.0 if m == 1 else (m - 1) / 2.0 * (cfg.costs["c_replycl"] / m)
     units = []
@@ -1299,5 +1347,11 @@ def simulate_scenario(protocol: str, n: int, *, pig=None, topo=None,
         if "timeline" in out:
             u["timeline"] = {"bucket_s": _TL_BUCKET,
                              "counts": out["timeline"][i].tolist()}
+        if "leader_backlog_s" in out:
+            u["obs"] = {"leader_backlog": {
+                "bucket_s": _TL_BUCKET,
+                "mean_ms": [round(float(v) * 1e3, 6)
+                            for v in out["leader_backlog_s"][i]],
+                "n": out["leader_backlog_n"][i].tolist()}}
         units.append(u)
     return units

@@ -589,6 +589,17 @@ register(Scenario(
     admission=_OVL_ADM, grid_mode="curve", collect=("overload",),
     clients=(40,), seeds=(2,),
     duration=0.6, warmup=0.2, quick_duration=0.4, quick_skip=True))
+# latency-driven admission (ISSUE 9): shed on the observed p99 EWMA
+# against the same 50 ms SLO the goodput metric uses, head-to-head with
+# the queue-length policy above — the latadm_summary row compares
+# goodput and shed volume at 4x offered load
+register(Scenario(
+    name="overload/paxos/latadm", protocol="paxos", n=25,
+    engine="fast", workload=WorkloadConfig(**_OVL_WL),
+    admission={"slo_ms": 50.0, "check_interval": 0.005},
+    grid_mode="curve", collect=("overload",),
+    clients=(10, 20, 40, 80), quick_clients=(20, 80),
+    seeds=(2,), duration=0.6, warmup=0.2, quick_duration=0.4))
 # the family generalizes past plain paxos: Pig relays under overload
 register(Scenario(
     name="overload/pigpaxos/adm", protocol="pigpaxos", n=25,
@@ -613,6 +624,42 @@ register(Scenario(
     audit=True, grid_mode="curve",
     collect=("overload",), clients=(40,), seeds=(2,),
     duration=0.5, warmup=0.2, quick_duration=0.4))
+
+# ======================================================================
+# Observability (ISSUE 9): traced cells for all three protocols (per-op
+# span trees -> critical-path decomposition in the artifact's obs extras),
+# the relay-fairness pair (rotating vs static relays, fig8-style, with the
+# per-follower busy-seconds the fairness summarizer turns into max/mean +
+# Gini — the paper's 'rotation spreads relay load' claim as a number), and
+# a batch-backend cell carrying the leader-backlog timeline.
+# ======================================================================
+_OBS_FULL = {"sample_rate": 0.1, "metrics_dt": 0.01, "perfetto_limit": 2000}
+for proto, pig, qskip in (
+        ("pigpaxos", PigConfig(n_groups=5, prc=1), False),
+        ("paxos", None, False),
+        ("epaxos", None, True)):
+    register(Scenario(
+        name=f"obs/{proto}/traced", protocol=proto, n=25, pig=pig,
+        obs=_OBS_FULL, clients=(40,), seeds=(2,),
+        duration=0.6, warmup=0.25, quick_duration=0.3,
+        quick_skip=qskip))
+# fairness pair: same seed/load/groups, only relay rotation differs; the
+# fast engine's busy accounting is enough (no span tracing needed), so
+# sample_rate=0 keeps the cells cheap while metrics_dt still samples the
+# utilization timelines the heat-strip plot renders
+for rotate in (True, False):
+    register(Scenario(
+        name=f"obs/fairness/{'rotating' if rotate else 'static'}",
+        protocol="pigpaxos", n=25,
+        pig=PigConfig(n_groups=5, prc=1, rotate_relays=rotate),
+        engine="fast", obs={"sample_rate": 0.0, "metrics_dt": 0.01},
+        clients=(40,), seeds=(7,),
+        duration=0.6, warmup=0.25, quick_duration=0.3))
+register(Scenario(
+    name="obs/pigpaxos/backlog/batch", protocol="pigpaxos", n=25,
+    pig=PigConfig(n_groups=5, prc=1), backend="batch", batch_ok=True,
+    obs={"sample_rate": 0.0}, clients=(40,), seeds=(1, 2, 3, 4),
+    quick_seeds=(1, 2), duration=0.6, warmup=0.25, quick_duration=0.3))
 
 # ======================================================================
 # megagrid slices: registry-visible samples of the million-cell

@@ -12,10 +12,16 @@ as hand-built SVG — no matplotlib in the container, none required:
   control.
 * ``latency_cdf`` — quantile-interpolated CDF per scenario (p25/median/
   p75/p99 and, where the overload extras recorded it, p99.9).
+* ``utilization_heat`` — per-node CPU-busy heat strip over virtual time,
+  from the obs timelines (ISSUE 9): relay hotspots under static relays
+  show up as one solid red row, rotation as an even pink wash.
+* ``critpath_waterfall`` — stacked critical-path segments per traced
+  scenario (queue/svc/ser/relay/net/wait mean ms per op), the
+  bottleneck-attribution view.
 
-``render_artifact`` walks a suite artifact and writes both views for every
-family that has the data to support them; ``benchmarks/run.py --plot DIR``
-is the CLI entry point.
+``render_artifact`` walks a suite artifact and writes every view a
+family has the data to support; ``benchmarks/run.py --plot DIR`` is the
+CLI entry point.
 """
 from __future__ import annotations
 
@@ -198,9 +204,146 @@ def latency_cdf(family: str, arts: Dict[str, dict]) -> Optional[str]:
     return ch.svg()
 
 
+# ------------------------------------------------------- obs views
+def _obs_of(sa: dict) -> Optional[dict]:
+    """The obs extras of a scenario's first unit that carries them."""
+    for u in sa.get("units", []):
+        ob = (u.get("extras") or {}).get("obs")
+        if ob:
+            return ob
+    return None
+
+
+def _heat_color(f: float) -> str:
+    """0..1 busy fraction -> white-to-red ramp."""
+    f = min(max(f, 0.0), 1.0)
+    g = int(255 * (1.0 - f))
+    return f"#ff{g:02x}{g:02x}"
+
+
+def utilization_heat(family: str, arts: Dict[str, dict]) -> Optional[str]:
+    """Per-node utilization heat strip: one row per node, time on x, cell
+    color = CPU busy fraction over the sampler period — the view that makes
+    a static relay hotspot (vs rotation's even spread) visible at a glance.
+    Rendered from the first scenario of the family whose timelines carry
+    ``busy_frac/i`` series."""
+    for name, sa in sorted(arts.items()):
+        ob = _obs_of(sa)
+        series = ((ob or {}).get("timelines") or {}).get("series") or {}
+        rows = sorted((int(k.split("/")[1]), v) for k, v in series.items()
+                      if k.startswith("busy_frac/") and v["t"])
+        if not rows:
+            continue
+        t0 = min(v["t"][0] for _, v in rows)
+        t1 = max(v["t"][-1] for _, v in rows)
+        if t1 <= t0:
+            continue
+        n = len(rows)
+        rh = max(4, min(14, 360 // n))                 # row height
+        h = _MT + n * rh + _MB
+        e = [
+            f'<svg xmlns="http://www.w3.org/2000/svg" width="{_W}" '
+            f'height="{h}" viewBox="0 0 {_W} {h}" '
+            f'font-family="sans-serif" font-size="11">',
+            f'<rect width="{_W}" height="{h}" fill="white"/>',
+            f'<text x="{_W / 2}" y="20" text-anchor="middle" '
+            f'font-size="14">{name}: per-node CPU busy fraction</text>',
+        ]
+        pw = _W - _ML - _MR
+        for ri, (node, v) in enumerate(rows):
+            y = _MT + ri * rh
+            pts = list(zip(v["t"], v["v"]))
+            for j, (t, f) in enumerate(pts):
+                tn = pts[j + 1][0] if j + 1 < len(pts) else t1
+                x = _ML + (t - t0) / (t1 - t0) * pw
+                w = max((tn - t) / (t1 - t0) * pw, 0.5)
+                e.append(f'<rect x="{x:.1f}" y="{y}" width="{w:.1f}" '
+                         f'height="{rh}" fill="{_heat_color(f)}"/>')
+            if n <= 30 or node % 5 == 0:
+                e.append(f'<text x="{_ML - 6}" y="{y + rh - 1}" '
+                         f'text-anchor="end">{node}</text>')
+        e.append(f'<rect x="{_ML}" y="{_MT}" width="{pw}" '
+                 f'height="{n * rh}" fill="none" stroke="#333"/>')
+        for frac in (0.0, 0.5, 1.0):
+            x = _ML + frac * pw
+            e.append(f'<text x="{x:.1f}" y="{_MT + n * rh + 16}" '
+                     f'text-anchor="middle">'
+                     f'{_fmt(t0 + frac * (t1 - t0))}s</text>')
+        e.append(f'<text x="{_W / 2}" y="{h - 12}" text-anchor="middle">'
+                 f'virtual time (node id on y; white=idle, red=busy)</text>')
+        e.append("</svg>")
+        return "\n".join(e)
+    return None
+
+
+# critical-path segment palette, in stack order
+_SEG_ORDER = ("queue", "svc", "ser", "relay", "net", "wait")
+_SEG_COLORS = {"queue": "#D55E00", "svc": "#0072B2", "ser": "#CC79A7",
+               "relay": "#E69F00", "net": "#009E73", "wait": "#999999"}
+
+
+def critpath_waterfall(family: str, arts: Dict[str, dict]) -> Optional[str]:
+    """Critical-path waterfall: one horizontal stacked bar per traced
+    scenario, segments = mean per-op milliseconds attributed to queue wait,
+    CPU service, serialization, relay aggregation, network, and residual
+    wait — the bottleneck-attribution picture (segments sum to the mean
+    traced op latency by construction)."""
+    bars = []
+    for name, sa in sorted(arts.items()):
+        ob = _obs_of(sa)
+        cp = (ob or {}).get("critical_path") or {}
+        mean = cp.get("mean_ms") or {}
+        if mean and cp.get("n_ops"):
+            bars.append((name[len(family) + 1:] or name, mean))
+    if not bars:
+        return None
+    total_max = max(sum(m.get(s, 0.0) for s in _SEG_ORDER) for _, m in bars)
+    if total_max <= 0:
+        return None
+    bh, gap = 34, 18
+    h = _MT + 30 + len(bars) * (bh + gap) + _MB
+    pw = _W - _ML - _MR
+    e = [
+        f'<svg xmlns="http://www.w3.org/2000/svg" width="{_W}" '
+        f'height="{h}" viewBox="0 0 {_W} {h}" '
+        f'font-family="sans-serif" font-size="11">',
+        f'<rect width="{_W}" height="{h}" fill="white"/>',
+        f'<text x="{_W / 2}" y="20" text-anchor="middle" font-size="14">'
+        f'{family}: critical-path attribution (mean ms/op)</text>',
+    ]
+    lx = _ML
+    for s in _SEG_ORDER:
+        e.append(f'<rect x="{lx}" y="{_MT + 2}" width="10" height="10" '
+                 f'fill="{_SEG_COLORS[s]}"/>')
+        e.append(f'<text x="{lx + 13}" y="{_MT + 11}">{s}</text>')
+        lx += 24 + 7 * len(s)
+    for bi, (label, mean) in enumerate(bars):
+        y = _MT + 30 + bi * (bh + gap)
+        e.append(f'<text x="{_ML}" y="{y - 3}">{label} '
+                 f'(total {sum(mean.get(s, 0.0) for s in _SEG_ORDER):.2f}'
+                 f'ms)</text>')
+        x = float(_ML)
+        for s in _SEG_ORDER:
+            v = mean.get(s, 0.0)
+            if v <= 0:
+                continue
+            w = v / total_max * pw
+            e.append(f'<rect x="{x:.1f}" y="{y}" width="{w:.1f}" '
+                     f'height="{bh}" fill="{_SEG_COLORS[s]}" '
+                     f'stroke="white" stroke-width="0.5"/>')
+            if w > 34:
+                e.append(f'<text x="{x + w / 2:.1f}" y="{y + bh / 2 + 4}" '
+                         f'text-anchor="middle" fill="white">'
+                         f'{v:.2f}</text>')
+            x += w
+    e.append("</svg>")
+    return "\n".join(e)
+
+
 def render_artifact(artifact: dict, outdir: str) -> List[str]:
-    """Write throughput-vs-load and latency-CDF SVGs for every family in
-    ``artifact`` that has the data; returns the written paths."""
+    """Write throughput-vs-load, latency-CDF, utilization-heat and
+    critical-path SVGs for every family in ``artifact`` that has the data;
+    returns the written paths."""
     by_family: Dict[str, Dict[str, dict]] = {}
     for sa in artifact.get("scenarios", []):
         by_family.setdefault(sa["family"], {})[sa["name"]] = sa
@@ -208,7 +351,9 @@ def render_artifact(artifact: dict, outdir: str) -> List[str]:
     written = []
     for family, arts in sorted(by_family.items()):
         for suffix, fn in (("throughput", throughput_vs_load),
-                           ("latency_cdf", latency_cdf)):
+                           ("latency_cdf", latency_cdf),
+                           ("util_heat", utilization_heat),
+                           ("critpath", critpath_waterfall)):
             svg = fn(family, arts)
             if not svg:
                 continue

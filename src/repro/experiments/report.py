@@ -513,7 +513,10 @@ def _ovl_points(art) -> List[dict]:
             "p99_ms": (sum(u["p99_ms"] or 0 for u in us) / max(len(us), 1)),
             "p999_ms": sum(p999) / len(p999) if p999 else None,
             "client_shed": sum(e.get("client_shed", 0) for e in exs),
-            "adm_shed": sum(a["shed_queue"] + a["shed_rate"] for a in adm),
+            # queue-length policies report shed_queue/shed_rate, the
+            # latency-driven policy reports shed_latency — sum whatever ran
+            "adm_shed": sum(a.get("shed_queue", 0) + a.get("shed_rate", 0)
+                            + a.get("shed_latency", 0) for a in adm),
         })
     return pts
 
@@ -548,6 +551,14 @@ def _overload(arts, quick):
             f"goodput_at_4x adm={ms(a['goodput']):.0f}req/s "
             f"noadm={ms(n['goodput']):.0f}req/s "
             f"(admission holds goodput; without it the SLO collapses)"))
+    la = top.get("overload/paxos/latadm")
+    if la is not None and a is not None:
+        out.append(csv_row(
+            "overload/latadm_summary", 0, 1,
+            f"goodput_at_4x latency_adm={ms(la['goodput']):.0f}req/s "
+            f"queue_adm={ms(a['goodput']):.0f}req/s "
+            f"shed latency_adm={la['adm_shed']} queue_adm={a['adm_shed']} "
+            f"(head-to-head: SLO-driven shedding vs queue-length shedding)"))
     return out
 
 
@@ -736,6 +747,84 @@ def _failover(arts, quick):
     return out
 
 
+def _gini(vals) -> float:
+    """Gini coefficient of a non-negative sample (0 = perfectly even)."""
+    vals = sorted(vals)
+    n, s = len(vals), sum(vals)
+    if n == 0 or s <= 0:
+        return 0.0
+    cum = sum((i + 1) * v for i, v in enumerate(vals))
+    return (2.0 * cum / (n * s)) - (n + 1.0) / n
+
+
+def _relay_fairness(rep: dict, n: int) -> Optional[dict]:
+    """Fairness of follower busy time from the obs section's per-node CPU
+    seconds: max/mean (hotspot factor) and Gini over nodes 1..n-1."""
+    ob = (rep.get("extras") or {}).get("obs") or {}
+    busy = ob.get("cpu_busy_s") or {}
+    vals = [float(busy.get(str(i), 0.0)) for i in range(1, n)]
+    if not vals or sum(vals) <= 0:
+        return None
+    mean = sum(vals) / len(vals)
+    return {"max_over_mean": max(vals) / mean, "gini": _gini(vals)}
+
+
+def _obs(arts, quick):
+    """Observability family: per-scenario critical-path decomposition (the
+    bottleneck attribution rows), tracer volume, batch-side leader-backlog
+    series, and the relay-fairness comparison — rotating vs static relays
+    on the fig8-style cells, making the paper's 'rotation spreads the relay
+    load' claim (Fig. 8 discussion) an empirical number: max/mean and Gini
+    of per-follower busy seconds should both be lower with rotation."""
+    out = []
+    fair = {}
+    for name, art in sorted(arts.items()):
+        rep = _rep(art)
+        if rep is None:
+            continue
+        ob = (rep.get("extras") or {}).get("obs") or {}
+        f = _relay_fairness(rep, (art.get("spec") or {}).get("n", 0))
+        if (ob.get("critical_path") or {}).get("n_ops"):
+            cp = ob["critical_path"]["mean_ms"]
+            seg = " ".join(f"{k}={cp[k]:.2f}" for k in
+                           ("queue", "svc", "ser", "relay", "net", "wait")
+                           if k in cp)
+            tr = ob.get("trace") or {}
+            out.append(csv_row(
+                name, _wall(art), rep["count"],
+                f"tput={rep['throughput']:.0f}req/s "
+                f"traced={tr.get('ops_finished', 0)} "
+                f"spans={tr.get('spans', 0)} critpath_ms[{seg}]"))
+        elif "leader_backlog" in ob:
+            lb = ob["leader_backlog"]
+            qs = [v for v, c in zip(lb["mean_ms"], lb["n"]) if c]
+            mean_q = sum(qs) / len(qs) if qs else 0.0
+            out.append(csv_row(
+                name, _wall(art), rep["count"],
+                f"tput={rep['throughput']:.0f}req/s "
+                f"leader_backlog_mean={mean_q:.3f}ms "
+                f"peak={max(qs, default=0.0):.3f}ms buckets={len(qs)}"))
+        elif f is not None:
+            out.append(csv_row(
+                name, _wall(art), rep["count"],
+                f"tput={rep['throughput']:.0f}req/s "
+                f"follower_busy max/mean={f['max_over_mean']:.2f} "
+                f"gini={f['gini']:.3f}"))
+        elif (row := _mean_std_row(name, art)) is not None:
+            out.append(row)
+        if f is not None and "/fairness/" in name:
+            fair[name.rsplit("/", 1)[1]] = f
+    rot, stat = fair.get("rotating"), fair.get("static")
+    if rot is not None and stat is not None:
+        out.append(csv_row(
+            "obs/fairness/summary", 0, 1,
+            f"relay busy max/mean rotating={rot['max_over_mean']:.2f} "
+            f"static={stat['max_over_mean']:.2f} "
+            f"gini rotating={rot['gini']:.3f} static={stat['gini']:.3f} "
+            f"(paper Fig8: rotation spreads relay load -> rotating < static)"))
+    return out
+
+
 def _megagrid(arts, quick):
     """Megagrid family: catalog ``megagrid/slice`` scenarios (replicate
     rows) and the million-cell cross-product artifact (aggregate-only
@@ -776,7 +865,7 @@ SUMMARIZERS = {
     "batching": _batching, "overload": _overload,
     "avail": _avail, "storm": _storm,
     "reconfig": _reconfig, "rolling": _rolling, "failover": _failover,
-    "megagrid": _megagrid,
+    "megagrid": _megagrid, "obs": _obs,
 }
 
 

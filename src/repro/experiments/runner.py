@@ -66,7 +66,8 @@ def _run_unit(payload) -> dict:
                 topo=build_topology(sc.topo),
                 leader_timeout=sc.leader_timeout, engine=sc.engine,
                 record_history=sc.audit, spare_nodes=sc.spare_nodes,
-                batch=bc, pipeline_depth=sc.pipeline_depth)
+                batch=bc, pipeline_depth=sc.pipeline_depth,
+                obs=(dict(sc.obs) if sc.obs is not None else None))
     plan = sc.fault_plan()
     evs = []
     if plan is not None:
@@ -78,9 +79,19 @@ def _run_unit(payload) -> dict:
                                     stop_at=warmup + duration)
     adm_stats = None
     if sc.admission is not None:
-        from repro.runtime.policy import AdmissionPolicy, attach_admission
-        adm_stats = attach_admission(c, AdmissionPolicy(**sc.admission),
-                                     stop_at=warmup + duration)
+        if "slo_ms" in sc.admission:
+            from repro.runtime.policy import (LatencyAdmissionPolicy,
+                                              attach_latency_admission)
+            adm_stats = attach_latency_admission(
+                c, LatencyAdmissionPolicy(**sc.admission),
+                stop_at=warmup + duration)
+        else:
+            from repro.runtime.policy import (AdmissionPolicy,
+                                              attach_admission)
+            adm_stats = attach_admission(c, AdmissionPolicy(**sc.admission),
+                                         stop_at=warmup + duration)
+        # the metrics sampler's shed_total gauge reads these counters
+        c.admission_stats = adm_stats
     st = c.measure(duration=duration, warmup=warmup, clients=clients,
                    workload=sc.workload)
     unit = {
@@ -169,6 +180,9 @@ def _run_unit(payload) -> dict:
         extras["failover_events"] = [
             {"t": _f(e["t"]), "from": e["from"], "to": e["to"]}
             for e in fo_events]
+    if sc.obs is not None:
+        from repro.obs import obs_artifact_section
+        extras["obs"] = obs_artifact_section(c)
     if sc.audit:
         res = audit_cluster(c)
         unit["consistency"] = "ok" if res.ok else "violation"
@@ -197,7 +211,8 @@ def _run_batch_scenario(sc: Scenario, rs) -> List[dict]:
         workload=sc.workload, clients=rs.clients, seeds=rs.seeds,
         duration=rs.duration, warmup=rs.warmup,
         leader_timeout=sc.leader_timeout, masks=masks,
-        batch_m=(sc.batch or {}).get("max_batch", 1))
+        batch_m=(sc.batch or {}).get("max_batch", 1),
+        obs=sc.obs is not None)
     wall = time.time() - t0
     units = []
     for u in raw:
@@ -219,6 +234,8 @@ def _run_batch_scenario(sc: Scenario, rs) -> List[dict]:
             extras["follower_msgs_per_op"] = _f(u["follower_msgs_per_op"])
         if "timeline" in u:
             extras["timeline"] = u["timeline"]
+        if "obs" in u:
+            extras["obs"] = u["obs"]
         if plan is not None:
             unit["consistency"] = "model"
         if extras:

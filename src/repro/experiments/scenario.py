@@ -82,9 +82,19 @@ class Scenario:
     # slot pipelining: at most this many uncommitted proposals in flight at
     # the leader (0 = unbounded, the protocol-native default) — DES only
     pipeline_depth: int = 0
-    # admission-control kwargs (repro.runtime.AdmissionPolicy) armed on every
-    # DES unit: {"max_queue": q, "rate_hz": r, "burst": b}
+    # admission-control kwargs armed on every DES unit: queue-length policy
+    # (repro.runtime.AdmissionPolicy) {"max_queue": q, "rate_hz": r,
+    # "burst": b}, or — when the dict carries an "slo_ms" key — the
+    # latency-driven policy (repro.runtime.LatencyAdmissionPolicy)
+    # {"slo_ms": ms, "ewma_alpha": a, "check_interval": s, "resume_frac": f}
     admission: Optional[dict] = None
+    # observability kwargs (repro.obs.ObsConfig): {"sample_rate": r,
+    # "metrics_dt": s, ...}.  DES units get full span tracing + timeline
+    # sampling and an "obs" extras section (trace summary, critical-path
+    # decomposition, Perfetto events, timelines, per-node busy seconds);
+    # batch units get the leader-backlog series only (timelines-only —
+    # tracing needs the event-level DES)
+    obs: Optional[dict] = None
     collect: Tuple[str, ...] = ()            # extras: "per_node_msgs" | "flight" | "timeline"
     # quick-mode overrides (None -> use the full-mode value / skip nothing)
     quick_clients: Optional[Tuple[int, ...]] = None
@@ -141,6 +151,18 @@ class Scenario:
                 and self.engine == "ref":
             raise ValueError("batching/pipelining is not supported by the "
                              "verbatim seed stack (engine='ref')")
+        if self.obs is not None:
+            if self.engine == "ref":
+                raise ValueError("observability is not supported by the "
+                                 "verbatim seed stack (engine='ref')")
+            if self.backend == "batch" and self.protocol == "epaxos":
+                raise ValueError("batch-backend observability is group-"
+                                 "kernel only (single-leader backlog "
+                                 "series) — traced EPaxos runs need the "
+                                 "DES")
+            # registry-time validation of the knob values themselves
+            from repro.obs import ObsConfig
+            ObsConfig(**self.obs)
         if self.backend == "batch":
             ok_collect = {"per_node_msgs"}
             if plan is not None:

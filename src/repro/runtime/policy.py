@@ -20,6 +20,11 @@ resharding) into policies that drive the *replication* cluster itself:
   reply — the cheap bounce path — instead of a consensus slot, so admitted
   work keeps committing within latency bounds while offered load runs past
   saturation.
+* :class:`LatencyAdmissionPolicy` + :func:`attach_latency_admission` —
+  admission control driven by the *observed* commit-latency p99 EWMA (the
+  quantity the SLO is written in) instead of queue length; a scheduler tick
+  recomputes the gauge and a bang-bang breaker with hysteresis sheds while
+  it exceeds the SLO.
 * :class:`ElasticityPolicy` — sizing rules for PigPaxos under membership
   change: the relay-group count tracks sqrt(followers) as nodes come and go
   (§3.2's balance point between leader fan-out and relay depth).
@@ -200,6 +205,105 @@ def attach_admission(cluster, policy: AdmissionPolicy,
                 stats["admitted"] += 1
                 orig(msg)
                 return
+            cmd = msg.cmd
+            nd.send(msg.src, ClientReply(client_id=cmd.client_id,
+                                         seq=cmd.seq, ok=False, value=None))
+
+        nd.on_ClientRequest = on_ClientRequest
+        # the fused engines dispatch through the cached table, not getattr
+        nd._dispatch[ClientRequest] = on_ClientRequest
+
+    for nd in cluster.nodes:
+        _wrap(nd)
+    return stats
+
+
+@dataclass(frozen=True)
+class LatencyAdmissionPolicy:
+    """Admission control driven by *observed commit latency* instead of
+    queue length (the PR 8 ROADMAP remainder, enabled by the obs layer).
+
+    A self-rescheduling tick (``Scheduler.every``) recomputes a p99 EWMA
+    over the client latencies completed since the previous tick; while the
+    EWMA exceeds ``slo_ms`` every incoming request is shed with the cheap
+    ok=False bounce (a bang-bang circuit breaker — the EWMA supplies the
+    smoothing, ``resume_frac`` the hysteresis: admission resumes once the
+    EWMA falls back below ``resume_frac * slo_ms``).
+
+    Compared to :class:`AdmissionPolicy`'s queue threshold, this sheds on
+    the quantity the SLO is actually written in — it reacts later (latency
+    is a trailing indicator of queue growth) but needs no model of how
+    much queue a given latency budget buys, so it is robust to cost-model
+    and batching changes that re-scale the queue/latency relationship."""
+
+    slo_ms: float = 50.0
+    ewma_alpha: float = 0.3
+    check_interval: float = 0.01
+    resume_frac: float = 0.8
+
+    def __post_init__(self):
+        if self.slo_ms <= 0:
+            raise ValueError("slo_ms must be > 0")
+        if not (0.0 < self.ewma_alpha <= 1.0):
+            raise ValueError("ewma_alpha must be in (0, 1]")
+        if self.check_interval <= 0:
+            raise ValueError("check_interval must be > 0")
+        if not (0.0 < self.resume_frac <= 1.0):
+            raise ValueError("resume_frac must be in (0, 1]")
+
+
+def attach_latency_admission(cluster, policy: LatencyAdmissionPolicy,
+                             stop_at: float = _INF) -> dict:
+    """Arm ``policy`` on every node of ``cluster``; returns live counters
+    ``{"admitted", "shed_latency", "p99_ewma_ms", "shedding"}``.
+
+    Latencies are read from ``cluster.clients`` lazily each tick (clients
+    are created inside ``measure()``, after attach).  When the cluster runs
+    with observability enabled, the tick also records ``adm_p99_ewma_ms``
+    and ``adm_shedding`` timelines."""
+    stats = {"admitted": 0, "shed_latency": 0,
+             "p99_ewma_ms": 0.0, "shedding": False}
+    seen: dict = {}        # client id -> latencies already consumed
+    sched = cluster.sched
+
+    def _tick() -> None:
+        fresh = []
+        for cl in cluster.clients:
+            k = seen.get(cl.id, 0)
+            lats = cl.latencies
+            if len(lats) > k:
+                fresh.extend(l for _, l in lats[k:])
+                seen[cl.id] = len(lats)
+        if fresh:
+            fresh.sort()
+            p99 = fresh[min(len(fresh) - 1, int(0.99 * len(fresh)))] * 1e3
+            a = policy.ewma_alpha
+            prev = stats["p99_ewma_ms"]
+            stats["p99_ewma_ms"] = (p99 if prev == 0.0
+                                    else a * p99 + (1.0 - a) * prev)
+        e = stats["p99_ewma_ms"]
+        if stats["shedding"]:
+            if e < policy.resume_frac * policy.slo_ms:
+                stats["shedding"] = False
+        elif e > policy.slo_ms:
+            stats["shedding"] = True
+        obs = getattr(cluster.net, "obs", None)
+        if obs is not None:
+            obs.add("adm_p99_ewma_ms", sched.now, e)
+            obs.add("adm_shedding", sched.now,
+                    1.0 if stats["shedding"] else 0.0)
+
+    sched.every(policy.check_interval, _tick, stop_at=stop_at)
+
+    def _wrap(nd):
+        orig = nd.on_ClientRequest
+
+        def on_ClientRequest(msg):
+            if sched.now >= stop_at or not stats["shedding"]:
+                stats["admitted"] += 1
+                orig(msg)
+                return
+            stats["shed_latency"] += 1
             cmd = msg.cmd
             nd.send(msg.src, ClientReply(client_id=cmd.client_id,
                                          seq=cmd.seq, ok=False, value=None))

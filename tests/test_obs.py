@@ -1,0 +1,302 @@
+"""Observability invariants (ISSUE 9): tracing is a pure observer.
+
+Four contracts pin the obs layer to the engines:
+
+1. **Bit-identity** — a run with tracing enabled (any sample rate,
+   ``metrics_dt=0``) is indistinguishable from an untraced run: same
+   event count, same tie-break sequence, same applied logs, same stats.
+   This is the golden-trace guarantee extended to the obs hooks.
+2. **Span-tree well-formedness** — every finished trace is a single
+   rooted tree: exactly one root, every parent id resolves to an earlier
+   span, every closed span has ``t1 >= t0`` monotone timestamps.
+3. **Critical-path sum** — ``decompose`` partitions the op window
+   exactly, so the segment seconds sum to the measured op latency
+   (the empirical counterpart of the paper's Eq. 1-3 decomposition).
+4. **Relay fairness** — the attribution machinery reproduces Fig 8's
+   hotspot claim: rotating relays flatten per-follower CPU busy time
+   relative to a static relay assignment.
+
+Plus the latency-driven admission policy (PR 8 ROADMAP remainder), the
+scenario-registry validation rules for obs knobs, and the Stats/warmup
+timeline plumbing.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import Cluster, PigConfig
+from repro.obs import (ObsConfig, SEGMENTS, critical_path, decompose,
+                       write_perfetto)
+from repro.runtime.policy import (LatencyAdmissionPolicy,
+                                  attach_latency_admission)
+
+
+def _applied(cluster):
+    return [[(slot, c.client_id, c.seq, c.op, c.key) for slot, c in nd.applied_log]
+            for nd in cluster.nodes]
+
+
+def _run(proto, pig, engine, seed=7, obs=None):
+    c = Cluster(proto, 5, pig=pig, seed=seed, engine=engine, obs=obs)
+    st = c.measure(duration=0.3, warmup=0.1, clients=8)
+    return c, st
+
+
+def _fingerprint(c, st):
+    return (c.sched.events, c.sched._seq, c.sched.now, _applied(c),
+            st.committed, st.throughput, st.median_ms)
+
+
+CONFIGS = [
+    ("paxos", None),
+    ("pigpaxos", PigConfig(n_groups=2)),
+    ("epaxos", None),
+]
+IDS = ["paxos", "pigpaxos", "epaxos"]
+
+
+# ---------------------------------------------------------------- identity
+
+@pytest.mark.parametrize("proto,pig", CONFIGS, ids=IDS)
+@pytest.mark.parametrize("engine", ["exact", "fast"])
+def test_tracing_is_bit_identical(proto, pig, engine):
+    """Full-rate tracing, sparse sampling, sample_rate=0 (hooks installed,
+    nothing sampled) and no obs at all must produce the same execution."""
+    base_c, base_st = _run(proto, pig, engine)
+    base = _fingerprint(base_c, base_st)
+    for obs in ({"sample_rate": 1.0}, {"sample_rate": 0.1},
+                {"sample_rate": 0.0}):
+        c, st = _run(proto, pig, engine, obs=obs)
+        assert _fingerprint(c, st) == base, f"obs={obs} perturbed the run"
+        np.testing.assert_array_equal(base_st.msg_out, st.msg_out)
+        np.testing.assert_array_equal(base_st.msg_in, st.msg_in)
+
+
+@pytest.mark.parametrize("proto,pig", CONFIGS, ids=IDS)
+def test_traced_exact_matches_seed_stack(proto, pig):
+    """The golden-trace bar itself: traced exact engine vs the verbatim
+    seed stack (which has no obs hooks at all)."""
+    ref_c, ref_st = _run(proto, pig, "ref")
+    new_c, new_st = _run(proto, pig, "exact", obs={"sample_rate": 1.0})
+    assert _fingerprint(new_c, new_st) == _fingerprint(ref_c, ref_st)
+
+
+# ------------------------------------------------------------- span trees
+
+def _traced_cluster(proto="pigpaxos", pig=PigConfig(n_groups=2), **kw):
+    c, st = _run(proto, pig, "exact", obs={"sample_rate": 1.0}, **kw)
+    tr = c.obs_tracer
+    assert tr is not None and tr.finished, "no finished traces collected"
+    return c, st, tr
+
+
+@pytest.mark.parametrize("proto,pig", CONFIGS, ids=IDS)
+def test_span_trees_well_formed(proto, pig):
+    _, _, tr = _traced_cluster(proto, pig)
+    for tid in tr.finished:
+        spans = tr.trace_of(tid)
+        roots = [sp for sp in spans if sp[1] == -1]
+        assert len(roots) == 1 and roots[0] is spans[0], \
+            f"trace {tid}: expected exactly one root, first"
+        assert spans[0][2] == "op" and spans[0][5] is not None
+        for sp in spans:
+            sid, parent, cat, node, t0, t1 = sp
+            assert sid == spans.index(sp)          # ids are positional
+            if parent != -1:
+                assert 0 <= parent < sid, \
+                    f"trace {tid}: span {sid} orphaned (parent {parent})"
+            assert t1 is not None and t1 >= t0, \
+                f"trace {tid}: span {sid} not monotone ({t0} .. {t1})"
+
+
+def test_sampling_is_every_kth_op():
+    c, _, tr = _traced_cluster()
+    assert tr.sample_every == 1
+    assert tr.n_ops == tr._next_tid        # rate 1.0: every op traced
+    c2, _ = _run("pigpaxos", PigConfig(n_groups=2), "exact",
+                 obs={"sample_rate": 0.1})
+    tr2 = c2.obs_tracer
+    assert tr2.sample_every == 10
+    assert tr2._next_tid == tr2.n_ops // 10
+    c0, st0 = _run("pigpaxos", PigConfig(n_groups=2), "exact",
+                   obs={"sample_rate": 0.0})
+    assert c0.obs_tracer._next_tid == 0    # installed, samples nothing
+    assert st0.committed > 0
+
+
+def test_hop_table_drains():
+    """The per-destination hop table is popped at each K_HANDLE — after a
+    run it must not have accumulated entries (no leak, no purge pass)."""
+    _, _, tr = _traced_cluster()
+    assert len(tr._hop) == 0
+
+
+# ---------------------------------------------------------- critical path
+
+@pytest.mark.parametrize("proto,pig", CONFIGS, ids=IDS)
+def test_critical_path_segments_sum_to_latency(proto, pig):
+    _, _, tr = _traced_cluster(proto, pig)
+    for tid in tr.finished:
+        segs = decompose(tr.trace_of(tid))
+        total = sum(segs[s] for s in SEGMENTS)
+        lat = tr.op_latency(tid)
+        assert segs["total"] == pytest.approx(lat, abs=1e-12)
+        assert total == pytest.approx(lat, abs=1e-9), \
+            f"trace {tid}: segments sum {total} != latency {lat}"
+
+
+def test_critical_path_aggregate():
+    _, _, tr = _traced_cluster()
+    cp = critical_path(tr)
+    assert cp["n_ops"] == len(tr.finished)
+    assert set(cp["mean_ms"]) == set(SEGMENTS)
+    mean_total = sum(cp["mean_ms"].values())
+    lats = [tr.op_latency(t) * 1e3 for t in tr.finished]
+    assert mean_total == pytest.approx(np.mean(lats), rel=1e-9)
+    # a replicated commit spends *some* time on the wire and in service
+    assert cp["mean_ms"]["net"] > 0.0
+    assert cp["mean_ms"]["svc"] > 0.0
+
+
+def test_decompose_refuses_unfinished():
+    with pytest.raises(ValueError):
+        decompose([[0, -1, "op", 0, 0.0, None]])
+
+
+# ----------------------------------------------------------- relay fairness
+
+def test_rotating_relays_flatten_follower_load():
+    """Fig 8 claim, reproduced from the obs CPU attribution: with static
+    relays the relay nodes are hotspots (high max/mean follower busy);
+    rotation spreads the relay work evenly."""
+    ratio = {}
+    for rotate in (True, False):
+        c = Cluster("pigpaxos", 25,
+                    pig=PigConfig(n_groups=5, rotate_relays=rotate),
+                    seed=2, engine="fast")
+        st = c.measure(duration=0.4, warmup=0.1, clients=40)
+        followers = [st.cpu_busy[i] for i in range(25) if i != c.leader_id]
+        ratio[rotate] = max(followers) / np.mean(followers)
+    assert ratio[True] < ratio[False], \
+        f"rotating max/mean {ratio[True]:.2f} !< static {ratio[False]:.2f}"
+    assert ratio[True] < 1.5          # rotation keeps followers near-uniform
+
+
+# ------------------------------------------------- latency-driven admission
+
+def test_latency_admission_policy_validation():
+    for bad in ({"slo_ms": 0.0}, {"slo_ms": -1.0}, {"ewma_alpha": 0.0},
+                {"ewma_alpha": 1.5}, {"check_interval": 0.0},
+                {"resume_frac": 0.0}, {"resume_frac": 1.2}):
+        with pytest.raises(ValueError):
+            LatencyAdmissionPolicy(**bad)
+
+
+def test_latency_admission_sheds_on_slo_breach():
+    """An unattainably tight SLO must trip the breaker; a generous one
+    must never shed."""
+    def run(slo_ms):
+        c = Cluster("paxos", 5, seed=2, engine="exact")
+        stats = attach_latency_admission(
+            c, LatencyAdmissionPolicy(slo_ms=slo_ms, check_interval=0.005),
+            stop_at=0.4)
+        c.measure(duration=0.3, warmup=0.1, clients=16)
+        return stats
+
+    tight = run(slo_ms=0.5)           # commit latency is a few ms
+    assert tight["shed_latency"] > 0
+    assert tight["p99_ewma_ms"] > 0.5
+    loose = run(slo_ms=10_000.0)
+    assert loose["shed_latency"] == 0
+    assert loose["admitted"] > 0
+
+
+def test_latency_admission_records_timelines():
+    c = Cluster("paxos", 5, seed=2, engine="exact",
+                obs={"sample_rate": 0.0, "metrics_dt": 0.01})
+    attach_latency_admission(
+        c, LatencyAdmissionPolicy(slo_ms=0.5, check_interval=0.005),
+        stop_at=0.4)
+    st = c.measure(duration=0.3, warmup=0.1, clients=16)
+    series = st.timelines["series"]
+    assert "adm_p99_ewma_ms" in series and "adm_shedding" in series
+    assert max(series["adm_shedding"]["v"]) == 1.0
+
+
+# ----------------------------------------------------- scenario validation
+
+def test_scenario_rejects_obs_on_ref_engine():
+    from repro.experiments.scenario import Scenario
+    with pytest.raises(ValueError, match="observability"):
+        Scenario(name="x/ref", protocol="paxos", n=5, engine="ref",
+                 obs={"sample_rate": 1.0})
+
+
+def test_scenario_rejects_obs_on_batch_epaxos():
+    from repro.experiments.scenario import Scenario
+    with pytest.raises(ValueError, match="group-kernel"):
+        Scenario(name="x/be", protocol="epaxos", n=5, backend="batch",
+                 obs={"sample_rate": 0.0, "metrics_dt": 0.01},
+                 clients=(60,))
+
+
+def test_scenario_validates_obs_knobs():
+    from repro.experiments.scenario import Scenario
+    with pytest.raises(ValueError, match="sample_rate"):
+        Scenario(name="x/knob", protocol="paxos", n=5,
+                 obs={"sample_rate": 2.0})
+    with pytest.raises(ValueError):
+        ObsConfig(metrics_dt=-0.1)
+
+
+# -------------------------------------------------- timelines & stats plumb
+
+def test_stats_carries_timelines_and_warmup_reset():
+    warmup = 0.2
+    c = Cluster("pigpaxos", 5, pig=PigConfig(n_groups=2), seed=2,
+                engine="exact", obs={"sample_rate": 0.0, "metrics_dt": 0.02})
+    st = c.measure(duration=0.4, warmup=warmup, clients=8)
+    tl = st.timelines
+    assert tl is not None
+    series = tl["series"]
+    for name in ("busy_frac/0", "leader_qdepth", "inflight_slots",
+                 "commit_ewma_ms"):
+        assert name in series, f"missing timeline {name}"
+    # Network.reset_stats resets the ring buffers at the warmup boundary:
+    # every surviving sample is post-warmup
+    for name, s in series.items():
+        assert all(t >= warmup for t in s["t"]), \
+            f"{name} retained warmup samples: {s['t'][:3]}"
+    # the latency gauge was reset with the rings: it only counts
+    # post-warmup commits (>= because it keeps counting during drain)
+    assert tl["latency"]["count"] >= st.count > 0
+
+
+def test_stats_timelines_none_without_obs():
+    _, st = _run("paxos", None, "exact")
+    assert st.timelines is None
+
+
+# ---------------------------------------------------------------- exporters
+
+def test_perfetto_export(tmp_path):
+    _, _, tr = _traced_cluster()
+    path = tmp_path / "trace.json"
+    n = write_perfetto(str(path), tr)
+    assert n > 0
+    evs = json.loads(path.read_text())["traceEvents"]
+    assert len(evs) == n
+    for ev in evs[:50]:
+        assert ev["ph"] == "X" and ev["dur"] >= 0
+        assert {"name", "ts", "pid", "tid"} <= set(ev)
+
+
+def test_obs_artifact_section():
+    from repro.obs import obs_artifact_section
+    c, _, _ = _traced_cluster()
+    sec = obs_artifact_section(c)
+    assert sec["trace"]["ops_finished"] > 0
+    assert set(sec["critical_path"]["mean_ms"]) == set(SEGMENTS)
+    assert sec["perfetto"]["events"]
+    assert sec["cpu_busy_s"]["0"] > 0

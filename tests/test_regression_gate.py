@@ -231,3 +231,78 @@ def test_malformed_vectorsim_payload_is_a_gate_error():
     from benchmarks.regression_gate import evaluate_vectorsim
     with pytest.raises(GateError):
         evaluate_vectorsim({"bench": "vectorsim", "xcheck": {}}, _VS_REF)
+
+
+# ------------------------------------------- sim_engine tracing overhead
+def test_sim_engine_overhead_under_cap_passes():
+    from benchmarks.regression_gate import evaluate_sim_engine
+    ref = {"tracing_overhead_max": 0.05}
+    failures, lines = evaluate_sim_engine(
+        {"bench": "sim_engine", "tracing_overhead_frac": 0.012}, ref)
+    assert failures == []
+    assert any("ok" in ln and "tracing_overhead" in ln for ln in lines)
+    # no section configured -> nothing checked, nothing reported
+    assert evaluate_sim_engine({"bench": "sim_engine"}, {}) == ([], [])
+
+
+def test_sim_engine_overhead_over_cap_fails():
+    from benchmarks.regression_gate import evaluate_sim_engine
+    failures, _ = evaluate_sim_engine(
+        {"bench": "sim_engine", "tracing_overhead_frac": 0.09},
+        {"tracing_overhead_max": 0.05})
+    assert failures and "ceiling" in failures[0]
+    with pytest.raises(GateError):
+        evaluate_sim_engine({"bench": "sim_engine"},
+                            {"tracing_overhead_max": 0.05})
+
+
+def test_load_sim_engine_picks_only_sim_payloads(tmp_path):
+    from benchmarks.regression_gate import load_sim_engine
+    a = _write(tmp_path, {"bench": "sim_engine", "tracing_overhead_frac": 0.0},
+               "BENCH_sim.json")
+    b = _write(tmp_path, _vs_payload(), "BENCH_vectorsim.json")
+    assert list(load_sim_engine([a, b])) == [a]
+
+
+# ---------------------------------------------------- obs relay fairness
+def _fair_sa(name, busy):
+    return {"name": name, "summary": {"throughput": {"mean": 1000.0}},
+            "spec": {"n": 1 + len(busy)},
+            "replicates": [{"throughput": 1000.0, "extras": {"obs": {
+                "cpu_busy_s": {str(i + 1): b for i, b in enumerate(busy)}}}}]}
+
+
+_FAIR_SPEC = {"rotating": "obs/fairness/rotating",
+              "static": "obs/fairness/static",
+              "rotating_max_over_mean_max": 1.5}
+
+
+def test_obs_fairness_rotating_flatter_passes():
+    from benchmarks.regression_gate import evaluate_obs_fairness
+    seen = {"obs/fairness/rotating": _fair_sa("obs/fairness/rotating",
+                                              [1.0, 1.1, 0.9, 1.0]),
+            "obs/fairness/static": _fair_sa("obs/fairness/static",
+                                            [3.0, 0.5, 0.5, 0.5])}
+    failures, lines = evaluate_obs_fairness(seen, _FAIR_SPEC)
+    assert failures == []
+    assert any("ok" in ln and "fairness" in ln for ln in lines)
+
+
+def test_obs_fairness_inverted_or_hot_fails():
+    from benchmarks.regression_gate import evaluate_obs_fairness
+    flat = _fair_sa("obs/fairness/static", [1.0, 1.0, 1.0, 1.1])
+    hot = _fair_sa("obs/fairness/rotating", [3.0, 0.5, 0.5, 0.5])
+    failures, _ = evaluate_obs_fairness(
+        {"obs/fairness/rotating": hot, "obs/fairness/static": flat},
+        _FAIR_SPEC)
+    assert failures and "rotating" in failures[0]
+    # missing half of the pair must fail loudly, never shrink
+    failures, _ = evaluate_obs_fairness(
+        {"obs/fairness/rotating": hot}, _FAIR_SPEC)
+    assert failures and "MISSING" in failures[0]
+    # zero busy accounting is a broken obs export, not a pass
+    dead = _fair_sa("obs/fairness/rotating", [0.0, 0.0])
+    with pytest.raises(GateError):
+        evaluate_obs_fairness(
+            {"obs/fairness/rotating": dead, "obs/fairness/static": flat},
+            _FAIR_SPEC)
