@@ -1,0 +1,25 @@
+"""Read-path scenario families (ISSUE 10):
+
+- ``reads/*`` — linearizable read paths under read-heavy closed-loop
+  traffic: quorum-granted leader leases (the leader serves gets locally,
+  no commit round), PQR-style quorum reads (random majority on
+  paxos/epaxos, the geo-closest relay subgroup + leader on pigpaxos),
+  and the log read path as the baseline.  Every DES cell runs the
+  read-aware linearizability auditor; the summarizer emits the
+  leased-vs-log speedup (gated >= 2x), the Pig-vs-Paxos read-ratio
+  crossover, and DES<->batch fidelity ratios for the leased-read
+  vectorsim model (gated [0.90, 1.10]).
+- ``lease/expiry/d=*`` — leader crash + failover with the lease duration
+  swept: follower lease promises block the successor's phase 1 until the
+  old lease drains, so the measured unavailability window grows with the
+  duration (audited: no stale read may slip through the failover).
+
+Scenarios: ``repro.experiments.catalog``; this module is the
+``run.py --only`` shim."""
+from repro.experiments import report
+
+FAMILIES = ["reads", "lease"]
+
+
+def run(quick: bool = True):
+    return report.family_rows(FAMILIES, quick=quick)

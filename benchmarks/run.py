@@ -42,6 +42,7 @@ MODULES = [
     "extra_scenarios",
     "overload_scenarios",
     "obs_scenarios",
+    "read_scenarios",
     "serialization_cost",
     "analytical_sweep",
     "sim_engine_bench",

@@ -15,7 +15,8 @@ import numpy as np
 
 from .epaxos import EPaxosNode
 from .events import Scheduler
-from .messages import ClientReply, ClientRequest, Command, CostModel
+from .messages import (ClientReply, ClientRequest, Command, CostModel,
+                       ReadProbe, ReadReply)
 from .network import Network, Topology
 from .node import Node
 from .paxos import PaxosNode
@@ -27,6 +28,23 @@ class WorkloadConfig:
     n_keys: int = 1000
     payload_bytes: int = 8
     write_fraction: float = 0.5   # paper: even reads/writes, both replicated
+    # --- read paths (PR 10) ---------------------------------------------
+    # read_ratio: fraction of ops that are reads.  None (default) keeps the
+    # seed behavior — ops split by ``write_fraction`` and reads go through
+    # the log like writes (golden traces depend on this exact draw order).
+    # When set, the op mix is read_ratio reads / (1 - read_ratio) writes
+    # and clients keep a read/write latency split.
+    # read_path: how reads are served —
+    #   "log"    — through consensus, a slot per read (the seed behavior)
+    #   "lease"  — sent to the leader, served locally while it holds a
+    #              quorum lease (requires Cluster(lease=...); falls back to
+    #              the log path when the lease is not held)
+    #   "quorum" — client-side quorum read: probe a majority (PigPaxos: the
+    #              geo-closest relay subgroup + the leader, which sits in
+    #              every write quorum) for per-key commit frontiers, rinse
+    #              while accepted > applied, serve the max-applied value
+    read_ratio: Optional[float] = None
+    read_path: str = "log"
     # --- key popularity -------------------------------------------------
     # "uniform"  — every key equally likely (the paper's YCSB-like setup)
     # "zipfian"  — YCSB-style skew: P(rank k) ∝ 1/k^theta
@@ -95,6 +113,14 @@ class WorkloadConfig:
             raise ValueError("diurnal_amp must be in [0, 1)")
         if self.reject_action not in ("retry", "drop"):
             raise ValueError(f"unknown reject_action {self.reject_action!r}")
+        if self.read_ratio is not None and not (0.0 <= self.read_ratio <= 1.0):
+            raise ValueError("read_ratio must be in [0, 1]")
+        if self.read_path not in ("log", "lease", "quorum"):
+            raise ValueError(f"unknown read_path {self.read_path!r}")
+        if self.read_path == "quorum" and self.arrival != "closed":
+            raise ValueError("read_path='quorum' needs closed-loop clients — "
+                             "the probe/rinse state machine tracks one "
+                             "outstanding read per client")
 
 
 _zipf_cdf_cache: Dict[tuple, np.ndarray] = {}
@@ -165,8 +191,15 @@ class Client:
         else:
             self._payloads = None
             self._payload_cdf = None
+        # read-path state: per-op read/write latency split (read_ratio runs)
+        # and the quorum-read probe state machine (read_path="quorum")
+        self.rw_lat: tuple = ([], [])      # (read latencies, write latencies)
+        self._probe: Optional[dict] = None
+        self._rid = 0
+        self._pig_pset: Optional[tuple] = None   # cached (leader, probe set)
         # fused-loop dispatch table (see network.Network._run)
-        self._dispatch = {ClientReply: self.deliver}
+        self._dispatch = {ClientReply: self.deliver,
+                          ReadReply: self.on_ReadReply}
         cluster.net.register(self.net_id, self)
 
     def _bind_handler(self, cls):
@@ -194,7 +227,11 @@ class Client:
 
     def _make_command(self, seq: int) -> Command:
         rng = self.cluster.sched.rng
-        op = "put" if rng.random() < self.wl.write_fraction else "get"
+        # read_ratio=None keeps the seed's exact draw semantics (golden
+        # traces); when set, write_fraction is simply 1 - read_ratio
+        wf = (self.wl.write_fraction if self.wl.read_ratio is None
+              else 1.0 - self.wl.read_ratio)
+        op = "put" if rng.random() < wf else "get"
         value = self._pick_payload(rng) if op == "put" else None
         if value is not None and self.history is not None:
             value = TaggedBytes(value, (self.id, seq))
@@ -217,6 +254,9 @@ class Client:
                 "ok": False, "rtag": None,
                 "wtag": getattr(cmd.value, "tag", None)}
             self.history.append(cur)
+        if cmd.op == "get" and self.wl.read_path == "quorum":
+            self._start_quorum_read(cmd)
+            return
         req = ClientRequest(cmd=cmd)
         tr = self._tracer
         if tr is not None:
@@ -249,12 +289,142 @@ class Client:
                 cur["resp"] = sched.now
                 cur["ok"] = True
                 cur["rtag"] = getattr(msg.value, "tag", None)
+                cur["path"] = msg.path
         lat = sched.now - self.sent_at
         self.latencies.append((sched.now, lat))
+        if self.wl.read_ratio is not None:
+            self.rw_lat[0 if self._last_cmd.op == "get" else 1].append(lat)
         tc = self._tctx
         if tc is not None and tc[0] == msg.seq:
             self._tracer.finish_op(tc[1], sched.now)
             self._tctx = None
+        if self._obs is not None:
+            self._obs.latency.note(lat)
+        self._issue()
+
+    # -------------------------------------------------------- quorum reads
+    # PQR-style client-driven reads: probe a read quorum for per-key commit
+    # frontiers, rinse (re-probe) while some member has ACCEPTED a write to
+    # the key that nobody probed has APPLIED yet, then serve the max-applied
+    # value.  Every acked write is accepted at a write quorum, and the probe
+    # set intersects every write quorum (majority; PigPaxos: subgroup + the
+    # leader), so the frontier check can never miss an acked write.
+    RINSE_DELAY = 2e-3       # wait for the in-flight write to land
+    MAX_RINSE = 8            # then fall back to a log read (wedged instance)
+    PROBE_TIMEOUT = 10e-3    # re-probe a fresh set (crashed replica)
+
+    def _quorum_probe_set(self) -> list:
+        c = self.cluster
+        if c.protocol == "pigpaxos":
+            # geo-local relay subgroup + the leader.  The subgroup alone
+            # need not intersect write quorums; the leader is in every one.
+            leader = c.leader_id
+            cached = self._pig_pset
+            if cached is not None and cached[0] == leader:
+                return cached[1]
+            groups = c.nodes[leader].comm.groups_for(leader)
+            topo = c.topo
+            me = self.net_id
+            best = min(groups, key=lambda g: sum(
+                topo.base_between(me, m) for m in g) / max(len(g), 1))
+            pset = sorted(set(best) | {leader})
+            self._pig_pset = (leader, pset)
+            return pset
+        members = c.members
+        rng = c.sched.rng
+        m = len(members) // 2 + 1
+        idx = rng.permutation(len(members))[:m]
+        return [members[int(i)] for i in idx]
+
+    def _start_quorum_read(self, cmd: Command) -> None:
+        self._rid += 1
+        rid = self._rid
+        self._probe = {"rid": rid, "seq": cmd.seq, "key": cmd.key,
+                       "replies": {}, "pset": self._quorum_probe_set(),
+                       "rinse": 0}
+        self._send_probes(rid)
+
+    def _send_probes(self, rid: int) -> None:
+        pr = self._probe
+        probe = ReadProbe(key=pr["key"], rid=rid)
+        net, me = self.cluster.net, self.net_id
+        for nid in pr["pset"]:
+            net.send(me, nid, probe)
+        self.cluster.sched.after(self.PROBE_TIMEOUT,
+                                 lambda: self._probe_timeout(rid))
+
+    def _reprobe(self, rid: int, fresh_set: bool) -> None:
+        pr = self._probe
+        if pr is None or pr["rid"] != rid:
+            return
+        self._rid += 1
+        pr["rid"] = self._rid
+        pr["replies"] = {}
+        if fresh_set:
+            self._pig_pset = None
+            pr["pset"] = self._quorum_probe_set()
+        self._send_probes(pr["rid"])
+
+    def _probe_timeout(self, rid: int) -> None:
+        pr = self._probe
+        if pr is None or pr["rid"] != rid:
+            return
+        if self.cluster.sched.now >= self.stop_at:
+            self._probe = None
+            return
+        # a crashed/partitioned replica never replies: fresh set, fresh rid
+        self._reprobe(rid, fresh_set=True)
+
+    def on_ReadReply(self, msg: ReadReply) -> None:
+        pr = self._probe
+        if pr is None or msg.rid != pr["rid"]:
+            return
+        pr["replies"][msg.src] = msg
+        if len(pr["replies"]) < len(pr["pset"]):
+            return
+        reps = list(pr["replies"].values())
+        max_app = max(r.applied for r in reps)
+        max_acc = max(r.accepted for r in reps)
+        if max_acc > max_app:
+            # read repair ("rinse"): a quorum member accepted a write to
+            # this key that nobody probed has applied — wait it out
+            if pr["rinse"] < self.MAX_RINSE:
+                pr["rinse"] += 1
+                rid = pr["rid"]
+                self.cluster.sched.after(
+                    self.RINSE_DELAY,
+                    lambda: self._reprobe(rid, fresh_set=False))
+                return
+            # rinse budget exhausted (wedged write): log read settles it
+            self._probe = None
+            self._fallback_log_read()
+            return
+        best = max(reps, key=lambda r: r.applied)
+        self._probe = None
+        self._complete_quorum_read(best)
+
+    def _fallback_log_read(self) -> None:
+        self.cluster.net.send(self.net_id, self.pick_target(),
+                              ClientRequest(cmd=self._last_cmd))
+        if self.wl.request_timeout:
+            seq = self.seq
+            self.cluster.sched.after(self.wl.request_timeout,
+                                     lambda: self._resend(seq))
+
+    def _complete_quorum_read(self, best: ReadReply) -> None:
+        sched = self.cluster.sched
+        if self.history is not None:
+            cur = self._hist_cur
+            if cur is not None and cur["seq"] == self.seq \
+                    and cur["resp"] is None:
+                cur["resp"] = sched.now
+                cur["ok"] = True
+                cur["rtag"] = getattr(best.value, "tag", None)
+                cur["path"] = "quorum"
+        lat = sched.now - self.sent_at
+        self.latencies.append((sched.now, lat))
+        if self.wl.read_ratio is not None:
+            self.rw_lat[0].append(lat)
         if self._obs is not None:
             self._obs.latency.note(lat)
         self._issue()
@@ -380,8 +550,11 @@ class OpenLoopClient(Client):
             rec["resp"] = sched.now
             rec["ok"] = True
             rec["rtag"] = getattr(msg.value, "tag", None)
+            rec["path"] = msg.path
         lat = sched.now - entry[0]
         self.latencies.append((sched.now, lat))
+        if self.wl.read_ratio is not None:
+            self.rw_lat[0 if entry[1].op == "get" else 1].append(lat)
         ctx = self._tctxs.pop(msg.seq, None)
         if ctx is not None:
             self._tracer.finish_op(ctx, sched.now)
@@ -417,7 +590,7 @@ class Cluster:
                  cost: Optional[CostModel] = None, leader_timeout: float = 50e-3,
                  quorums=None, engine: str = "exact",
                  record_history: bool = False, spare_nodes: int = 0,
-                 batch=None, pipeline_depth: int = 0, obs=None):
+                 batch=None, pipeline_depth: int = 0, obs=None, lease=None):
         """``engine`` selects the simulation engine:
 
         * ``"exact"`` (default) — fused slab engine, trace-identical to the
@@ -464,6 +637,19 @@ class Cluster:
             raise ValueError("batching/pipelining is not supported by the "
                              "verbatim seed stack (engine='ref') — use "
                              "'exact' or 'fast'")
+        if lease is not None:
+            from .paxos import LeaseConfig
+            if engine == "ref":
+                raise ValueError("leader leases are not supported by the "
+                                 "verbatim seed stack (engine='ref') — use "
+                                 "'exact' or 'fast'")
+            if protocol == "epaxos":
+                raise ValueError("leader leases need a distinguished leader "
+                                 "— EPaxos is leaderless; use "
+                                 "read_path='quorum' for EPaxos reads")
+            if isinstance(lease, dict):
+                lease = LeaseConfig(**lease)
+        self.lease = lease
         total = n + spare_nodes
         self.topo = topo or Topology(n=total)
         if self.topo.n < total:
@@ -505,6 +691,17 @@ class Cluster:
         self.nodes: List[Node] = []
         bkw = ({} if engine == "ref"
                else {"batch": batch, "pipeline_depth": pipeline_depth})
+        # per-node drifting clocks (lease runs only): rate uniform in
+        # [-b, +b], a small offset for realism (offsets cancel in all
+        # elapsed-local lease comparisons).  A SEPARATE generator — the
+        # shared sched.rng draw order is pinned by golden traces.
+        if lease is not None:
+            crng = np.random.default_rng(int(seed) + 0x10EA5E)
+            b = lease.drift_bound
+            clock = [(float(crng.uniform(-b, b)),
+                      float(crng.uniform(0.0, 1e-3))) for _ in range(total)]
+        else:
+            clock = [(0.0, 0.0)] * total
         for i in range(total):
             if protocol == "epaxos":
                 # the seed class has no recovery surface; the new engines
@@ -514,10 +711,14 @@ class Cluster:
                 self.nodes.append(epaxos_cls(i, self.net, self.sched, peers,
                                              **ekw))
             else:
+                pkw = dict(bkw)
+                if engine != "ref":
+                    pkw.update(lease=lease, clock_rate=clock[i][0],
+                               clock_offset=clock[i][1])
                 self.nodes.append(paxos_cls(i, self.net, self.sched, peers,
                                             pig=pig if protocol == "pigpaxos" else None,
                                             leader_timeout=leader_timeout,
-                                            quorums=quorums, **bkw))
+                                            quorums=quorums, **pkw))
         # cluster-level membership view, fed by node callbacks as cfg
         # commands apply (client routing + the auditor's durable set)
         self.members: List[int] = list(peers)
@@ -641,6 +842,24 @@ class Cluster:
         committed = sum(getattr(nd, "committed_count", 0) for nd in self.nodes) \
             - sum(mark.values())
         return Stats.from_lat(lats, duration, self, committed)
+
+    def read_write_split(self) -> Optional[dict]:
+        """Read/write latency+count split across all clients (ms), plus the
+        number of leader-local leased reads served.  None unless the
+        workload set ``read_ratio``."""
+        reads = [l for c in self.clients for l in c.rw_lat[0]]
+        writes = [l for c in self.clients for l in c.rw_lat[1]]
+        if not reads and not writes:
+            return None
+        return {
+            "reads": len(reads), "writes": len(writes),
+            "read_mean_ms": float(np.mean(reads)) * 1e3 if reads else None,
+            "write_mean_ms": float(np.mean(writes)) * 1e3 if writes else None,
+            "read_p99_ms": (float(np.percentile(np.asarray(reads), 99)) * 1e3
+                            if reads else None),
+            "lease_reads": sum(getattr(nd, "lease_reads", 0)
+                               for nd in self.nodes),
+        }
 
 
 @dataclass

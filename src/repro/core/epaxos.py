@@ -19,7 +19,8 @@ from typing import Dict, Optional
 from .events import Scheduler
 from .messages import (BatchCmd, ClientReply, ClientRequest, Command, EAccept,
                        EAcceptReply, ECommit, EPrepare, EPrepareReply,
-                       JoinReq, PreAccept, PreAcceptReply, Snapshot)
+                       JoinReq, PreAccept, PreAcceptReply, ReadProbe,
+                       ReadReply, Snapshot)
 from .network import Network
 from .node import Node
 from .paxos import BatchConfig
@@ -94,6 +95,10 @@ class EPaxosNode(Node):
         # per-key: latest interfering instance per replica (standard EPaxos
         # optimization: depend on the most recent conflict per replica)
         self.interf: Dict[int, Dict[int, tuple]] = {}
+        # quorum-read frontier: key -> (executed-put count, wtag).  The
+        # put-count is a consistent per-key version across replicas because
+        # interfering commands execute in the same relative order everywhere.
+        self._applied_ver: Dict[int, tuple] = {}
         self._pending_exec: list = []
         # at-most-once execution: (client_id, seq) -> result.  A client
         # timeout retry can create a second instance of the same command at
@@ -501,6 +506,9 @@ class EPaxosNode(Node):
                 val = self.store.apply(c)
                 done[op_id] = val
                 self.applied_log.append((inst_id, c))
+                if c.op == "put":
+                    v = self._applied_ver.get(c.key)
+                    self._applied_ver[c.key] = ((v[0] if v else 0) + 1, op_id)
                 results.append(val)
             inst.state = "executed"
             srcs = inst.client_srcs
@@ -537,6 +545,9 @@ class EPaxosNode(Node):
         val = self.store.apply(cmd)
         done[op_id] = val
         self.applied_log.append((inst_id, cmd))
+        if cmd.op == "put":
+            v = self._applied_ver.get(cmd.key)
+            self._applied_ver[cmd.key] = ((v[0] if v else 0) + 1, op_id)
         inst.state = "executed"
         if inst.is_mine and inst.client_src >= 0:
             reply = ClientReply(client_id=cmd.client_id,
@@ -545,6 +556,31 @@ class EPaxosNode(Node):
             if tr is not None and inst.trace is not None:
                 tr.attach(reply, inst.trace)
             self.send(inst.client_src, reply)
+
+    # ========================================================== quorum reads
+    def on_ReadProbe(self, msg: ReadProbe) -> None:
+        """Per-key frontier for client-side quorum reads.  ``applied`` is
+        this replica's executed-put count for the key; ``accepted`` adds 1
+        when a known interfering instance has not executed here yet (the
+        client rinses until some quorum member has executed everything the
+        quorum knows about)."""
+        key = msg.key
+        av = self._applied_ver.get(key)
+        ver, wtag = av if av is not None else (0, None)
+        acc = ver
+        m = self.interf.get(key)
+        if m:
+            for iid in m.values():
+                inst = self.insts.get(iid)
+                if inst is None or (inst.state != "executed"
+                                    and inst.cmd is not None
+                                    and inst.cmd.op != "get"):
+                    acc = ver + 1
+                    break
+        self.send(msg.src, ReadReply(rid=msg.rid, key=key, applied=ver,
+                                     accepted=acc,
+                                     value=self.store.data.get(key),
+                                     wtag=wtag))
 
     # ===================================================== membership change
     def propose_reconfig(self, op: str, nid: int) -> bool:

@@ -93,6 +93,11 @@ class ClientReply(Msg):
     seq: int = 0
     ok: bool = True
     value: Optional[bytes] = None
+    # which read path produced this reply: "log" (through consensus),
+    # "lease" (leader-local leased read), or "quorum" (client-side quorum
+    # read).  Metadata for the history/auditor — a real implementation
+    # would not ship it, so it does not count toward wire_size().
+    path: str = "log"
 
     def wire_size(self) -> int:
         return HEADER_BYTES + 8 + (len(self.value) if self.value else 0)
@@ -178,6 +183,52 @@ class Snapshot(Msg):
         return (HEADER_BYTES + 16
                 + 24 * (len(self.store) + len(self.session) + extra)
                 + 2 * len(self.members))
+
+
+# ------------------------------------------------------ leases + read paths
+@dataclass(slots=True)
+class LeaseGrant(Msg):
+    """Leader -> members: ask for a read lease of ``duration`` seconds
+    (measured on each receiver's LOCAL clock).  A follower that acks
+    promises not to vote for a different leader until the lease expires
+    locally — so a quorum of acks lets the leader serve reads from its own
+    store without a round trip (Spinnaker-style leader leases)."""
+    ballot: tuple = (0, 0)
+    lseq: int = 0             # lease sequence number (one per renewal)
+    duration: float = 0.0     # seconds, interpreted on the receiver's clock
+
+
+@dataclass(slots=True)
+class LeaseAck(Msg):
+    """Member -> leader: the lease promise for (ballot, lseq) is in effect."""
+    ballot: tuple = (0, 0)
+    lseq: int = 0
+
+
+@dataclass(slots=True)
+class ReadProbe(Msg):
+    """Client -> replica: report your commit frontier for ``key`` (quorum
+    reads).  ``rid`` ties replies to one read attempt across rinse rounds."""
+    key: int = 0
+    rid: int = 0
+
+
+@dataclass(slots=True)
+class ReadReply(Msg):
+    """Replica -> client: per-key frontier snapshot.  ``applied`` is the
+    position of the latest locally-applied write to the key, ``accepted``
+    the highest position the replica knows MIGHT hold a write to the key
+    (accepted-but-not-applied).  The client rinses (re-probes) while any
+    quorum member's ``accepted`` exceeds the quorum's max ``applied``."""
+    rid: int = 0
+    key: int = 0
+    applied: int = -1
+    accepted: int = -1
+    value: Optional[bytes] = None
+    wtag: Any = None          # (client_id, seq) of the witnessed write
+
+    def wire_size(self) -> int:
+        return HEADER_BYTES + 16 + (len(self.value) if self.value else 0)
 
 
 # ---------------------------------------------------------------- Pig overlay

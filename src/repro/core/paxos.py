@@ -20,7 +20,8 @@ from typing import Callable, Dict, Optional
 
 from .events import Scheduler
 from .messages import (BatchCmd, ClientReply, ClientRequest, Command, JoinReq,
-                       Msg, P1a, P1b, P2a, P2b, P3, PigAggregate, Snapshot)
+                       LeaseAck, LeaseGrant, Msg, P1a, P1b, P2a, P2b, P3,
+                       PigAggregate, ReadProbe, ReadReply, Snapshot)
 from .network import Network
 from .node import Node
 from .pig import DirectComm, PigComm, PigConfig, _P1Aggregate
@@ -61,6 +62,49 @@ class BatchConfig:
             raise ValueError("max_delay_ms must be >= 0")
 
 
+@dataclass(frozen=True)
+class LeaseConfig:
+    """Leader leases for linearizable local reads (Spinnaker-style).
+
+    A quorum of ``LeaseAck``s lets the leader answer ``get`` requests from
+    its own store for ``duration_ms`` — measured on each node's LOCAL clock,
+    which drifts at an unknown per-node rate bounded by ``drift_bound``
+    (|rate error| <= drift_bound, e.g. 1e-4 = 100 ppm).  Followers holding
+    an unexpired lease promise withhold their phase-1 vote from any OTHER
+    candidate, so a new leader cannot be elected until the lease drains.
+
+    Safety under drift: the leader only believes the lease for
+    ``duration * (1 - 2*drift_bound)`` of its own clock, which is provably
+    inside every follower's promise window for any rates within the bound
+    ((1-2b)(1+b) <= 1-b).  ``lease_safety=False`` drops that margin — the
+    deliberately-broken control: under adversarial drift the leader keeps
+    serving reads after a quorum of promises has really expired, and the
+    linearizability auditor must flag the resulting stale reads.
+    """
+    duration_ms: float = 200.0
+    renew_ms: Optional[float] = None     # default: duration_ms / 3
+    drift_bound: float = 1e-4
+    lease_safety: bool = True
+
+    def __post_init__(self):
+        if self.duration_ms <= 0:
+            raise ValueError("lease duration_ms must be > 0")
+        if self.renew_ms is not None and not (0 < self.renew_ms <= self.duration_ms):
+            raise ValueError("lease renew_ms must be in (0, duration_ms]")
+        if not (0.0 <= self.drift_bound < 0.4):
+            raise ValueError("drift_bound must be in [0, 0.4) — the safety "
+                             "margin 1 - 2*drift_bound must stay positive")
+
+    @property
+    def duration_s(self) -> float:
+        return self.duration_ms * 1e-3
+
+    @property
+    def renew_s(self) -> float:
+        r = self.renew_ms if self.renew_ms is not None else self.duration_ms / 3.0
+        return r * 1e-3
+
+
 @dataclass
 class _Slot:
     cmd: Command
@@ -85,7 +129,9 @@ class PaxosNode(Node):
                  leader_timeout: float = 50e-3,
                  quorums: Optional["QuorumSystem"] = None,
                  batch: Optional[BatchConfig] = None,
-                 pipeline_depth: int = 0):
+                 pipeline_depth: int = 0,
+                 lease: Optional[LeaseConfig] = None,
+                 clock_rate: float = 0.0, clock_offset: float = 0.0):
         super().__init__(node_id, net, sched)
         self.peers = list(peers)
         self.n = len(peers)
@@ -161,8 +207,27 @@ class PaxosNode(Node):
         # the current leader / membership view for client routing and audits)
         self.on_became_leader: Optional[Callable] = None
         self.on_membership_change: Optional[Callable] = None
+        # ---- read paths: leader leases + per-key commit frontiers ----
+        # each node owns a drifting local clock: local = (1+rate)*t + offset.
+        # All lease comparisons are elapsed-local (offsets cancel); the rate
+        # term is what makes an unsafe lease margin a REAL stale-read hazard.
+        self.lease = lease
+        self.clock_rate = clock_rate
+        self.clock_offset = clock_offset
+        self._lease_seq = 0                       # leader: renewal counter
+        self._lease_acks: Dict[int, set] = {}     # lseq -> acked node ids
+        self._lease_sent_local: Dict[int, float] = {}
+        self._lease_held_until_local = float("-inf")
+        self._lease_timer: Optional[int] = None
+        self._lease_promise: Optional[tuple] = None  # (holder, expiry_local)
+        # per-key frontiers for quorum reads: applied = (slot, wtag) of the
+        # latest locally-applied put; accepted = highest slot that MIGHT
+        # hold a put to the key (accepted-but-unapplied included)
+        self._applied_frontier: Dict[int, tuple] = {}
+        self._accepted_frontier: Dict[int, int] = {}
         # metrics
         self.committed_count = 0
+        self.lease_reads = 0
 
     # ================================================================ leader
     def start_phase1(self) -> None:
@@ -244,12 +309,110 @@ class PaxosNode(Node):
             entry.voters = {self.id}       # stale-ballot votes don't count
             self.accepted[s] = (self.ballot, entry.cmd)
             self._send_p2a(s)
+        if self.lease is not None:
+            self._lease_renew()
         cb = self.on_became_leader
         if cb is not None:
             cb(self)
 
+    # ================================================================ leases
+    def local_now(self) -> float:
+        """This node's drifting local clock (lease math only — timers and
+        the network stay on simulated real time)."""
+        return (1.0 + self.clock_rate) * self.sched.now + self.clock_offset
+
+    def lease_held(self) -> bool:
+        return self.local_now() < self._lease_held_until_local
+
+    def _lease_renew(self) -> None:
+        if not self.is_leader or self.lease is None or self.crashed:
+            return
+        lz = self.lease
+        self._lease_seq += 1
+        lseq = self._lease_seq
+        # the grant-SEND instant anchors the belief window: it precedes
+        # every follower's receipt, so leader-elapsed >= follower-elapsed
+        # modulo drift (which the margin covers)
+        self._lease_sent_local[lseq] = self.local_now()
+        self._lease_acks[lseq] = {self.id}       # self-ack: own promise
+        stale = [q for q in self._lease_acks if q < lseq - 8]
+        for q in stale:
+            self._lease_acks.pop(q, None)
+            self._lease_sent_local.pop(q, None)
+        m = LeaseGrant(ballot=self.ballot, lseq=lseq, duration=lz.duration_s)
+        for p in self.members:
+            if p != self.id:
+                self.send(p, m)
+        self._lease_timer = self.set_timer(lz.renew_s, self._lease_renew)
+
+    def on_LeaseGrant(self, msg: LeaseGrant) -> None:
+        if self.joining or self.removed:
+            return
+        if msg.ballot < self.promised:
+            return        # a newer leader exists: never re-arm an old lease
+        holder = msg.ballot[1]
+        now_l = self.local_now()
+        pr = self._lease_promise
+        if pr is not None and pr[0] != holder and pr[1] > now_l:
+            return        # conflicting unexpired promise: refuse silently
+        # promise duration runs on THIS node's clock from receipt
+        self._lease_promise = (holder, now_l + msg.duration)
+        self.send(msg.src, LeaseAck(ballot=msg.ballot, lseq=msg.lseq))
+
+    def on_LeaseAck(self, msg: LeaseAck) -> None:
+        if not self.is_leader or msg.ballot != self.ballot:
+            return
+        acks = self._lease_acks.get(msg.lseq)
+        if acks is None:
+            return
+        acks.add(msg.src)
+        if len(acks) >= self.majority:
+            sent = self._lease_sent_local.get(msg.lseq)
+            if sent is None:
+                return
+            lz = self.lease
+            # the safety margin: believe only (1 - 2b) of the granted
+            # duration (measured on our clock) — see LeaseConfig docstring.
+            # lease_safety=False is the checkable broken control.
+            margin = (1.0 - 2.0 * lz.drift_bound) if lz.lease_safety else 1.0
+            until = sent + lz.duration_s * margin
+            if until > self._lease_held_until_local:
+                self._lease_held_until_local = until
+
+    def _lease_clear(self) -> None:
+        self._lease_held_until_local = float("-inf")
+        self._lease_acks.clear()
+        self._lease_sent_local.clear()
+        if self._lease_timer is not None:
+            self.cancel_timer(self._lease_timer)
+            self._lease_timer = None
+
+    # ========================================================== quorum reads
+    def on_ReadProbe(self, msg: ReadProbe) -> None:
+        key = msg.key
+        ap = self._applied_frontier.get(key)
+        acc = self._accepted_frontier.get(key, -1)
+        applied = ap[0] if ap is not None else -1
+        self.send(msg.src, ReadReply(
+            rid=msg.rid, key=key, applied=applied,
+            accepted=max(acc, applied),
+            value=self.store.data.get(key),
+            wtag=ap[1] if ap is not None else None))
+
+    def _note_accepted(self, slot: int, cmd: Command) -> None:
+        if cmd.__class__ is BatchCmd:
+            fr = self._accepted_frontier
+            for c in cmd.cmds:
+                if c.op == "put" and slot > fr.get(c.key, -1):
+                    fr[c.key] = slot
+        elif cmd.op == "put":
+            fr = self._accepted_frontier
+            if slot > fr.get(cmd.key, -1):
+                fr[cmd.key] = slot
+
     def _step_down(self, higher: tuple) -> None:
         self.is_leader = False
+        self._lease_clear()
         self._cfg_inflight = None      # a pending cfg cmd is the new leader's
         for e in self.log.values():
             if e.timer is not None:
@@ -281,6 +444,21 @@ class PaxosNode(Node):
         if not self.is_leader:
             self.send(msg.src, ClientReply(client_id=msg.cmd.client_id,
                                            seq=msg.cmd.seq, ok=False))
+            return
+        cmd = msg.cmd
+        if (self.lease is not None and cmd.op == "get"
+                and self.local_now() < self._lease_held_until_local):
+            # leased local read: the store reflects every write this leader
+            # has acked (acks happen at apply), and the lease promise quorum
+            # blocks any other leader from committing writes we can't see —
+            # no slot, no fan-out, no round trip.  Linearizable iff the
+            # belief window really is inside the promise windows (the
+            # drift-margin argument in LeaseConfig).
+            self.lease_reads += 1
+            self.send(msg.src, ClientReply(client_id=cmd.client_id,
+                                           seq=cmd.seq, ok=True,
+                                           value=self.store.data.get(cmd.key),
+                                           path="lease"))
             return
         if self._batching:
             self._enqueue(msg.cmd, msg.src)
@@ -352,6 +530,7 @@ class PaxosNode(Node):
         self.log[slot] = entry
         # leader accepts locally
         self.accepted[slot] = (self.ballot, cmd)
+        self._note_accepted(slot, cmd)
         self._send_p2a(slot)
 
     def _send_p2a(self, slot: int) -> None:
@@ -446,6 +625,7 @@ class PaxosNode(Node):
         store.applied_ops += 1
         if cmd.op == "put":
             store.data[cmd.key] = cmd.value
+            self._applied_frontier[cmd.key] = (s, (cmd.client_id, cmd.seq))
             val = None
         elif cmd.op == "get":
             val = store.data.get(cmd.key)
@@ -631,6 +811,10 @@ class PaxosNode(Node):
         # dropped and the discard timer was suppressed while down): forget
         # it so _learn_commit re-requests instead of wedging at that slot
         self._catching_up.clear()
+        # the lease BELIEF is volatile (a restarted leader must re-acquire
+        # before serving local reads); the lease PROMISE survives — the
+        # conservative direction, a restarted follower keeps withholding
+        self._lease_clear()
         if self.ballot[1] == self.id and not self.removed:
             self.is_leader = False
             self.start_phase1()
@@ -658,6 +842,7 @@ class PaxosNode(Node):
         if msg.ballot >= self.promised:
             self.promised = msg.ballot
             self.accepted[msg.slot] = (msg.ballot, msg.cmd)
+            self._note_accepted(msg.slot, msg.cmd)
             self._learn_commit(msg.commit_index, msg.src)
             if self.joining or self.removed:
                 return None    # learners/removed nodes follow but never vote
@@ -672,6 +857,15 @@ class PaxosNode(Node):
     def _promise(self, msg: P1a) -> Optional[P1b]:
         if self.joining or self.removed:
             return None        # non-members don't vote in elections either
+        pr = self._lease_promise
+        if (pr is not None and pr[0] != msg.ballot[1]
+                and pr[1] > self.local_now()):
+            # lease promise in force for another node: withhold the vote
+            # entirely (the candidate re-campaigns on its leader timeout),
+            # so a new leader is blocked until the lease drains — the
+            # availability price of leased reads, measured by the `lease`
+            # scenario family
+            return None
         if msg.ballot > self.promised:
             if self.is_leader:
                 # a live leader yielding to a higher ballot (planned handoff

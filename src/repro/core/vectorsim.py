@@ -37,6 +37,24 @@ fan-out/fan-in round), and execution waits for the predecessor's commit to
 be known (dependency-order gate).  Throughput tracks the fast DES within
 ~10% up to c=0.5 (tests/test_epaxos_recovery.py).
 
+**Leased leader reads** (group kernel only): a workload with
+``read_ratio`` > 0 and ``read_path="lease"`` models the leader serving
+reads locally under a held lease — each scan-step burst draws a per-request
+read mask (an extra fold of the step key; the write path's draw order is
+untouched), the leader FIFO becomes a varying-service Lindley chain
+(writes cost the full round's leader work, leased reads cost only
+request-ingest + reply), and read requests skip the entire follower
+fan-out: no relay hops, no follower CPU work, no aggregate fan-in, and no
+commit (``committed`` counts writes only — reads never touch the log).
+``read_path="log"`` needs no kernel support at all: log reads flow through
+phase 2 exactly like writes, so only the expected wire sizes change (gets
+carry no payload out, puts carry none back).  The lease itself is assumed
+HELD for the whole run — grant/renewal traffic, expiry windows, and clock
+drift are DES-only (that is where lease safety is audited); the batch
+model is the steady-state throughput/latency envelope of an uncontested
+lease.  Per-node message loads keep their write-path meaning (messages
+per committed write; read traffic at the leader is not counted).
+
 **Fault masks** (``repro.faults.FaultPlan.to_masks``): deterministic
 crash/recover windows and whole-run gray/slow nodes are expressible as
 time-varying per-node availability masks — a hop arriving at a down node is
@@ -50,9 +68,14 @@ runs also emit a completion timeline (50 ms buckets, same format as the DES
 Deliberately **not** modeled: partitions, drops, relay timeouts, late-vote
 supplements, open-loop arrivals, (Pig)Paxos key sampling (keys never route
 there), EPaxos fault masks (instance recovery is a DES-only protocol
-phase), and EPaxos dependency-graph wall-time (Tarjan costs no virtual
-time) — scenarios that need those stay on the DES (`Scenario.batch_ok`
-marks the eligible ones).  A crashed follower's
+phase), EPaxos dependency-graph wall-time (Tarjan costs no virtual
+time), quorum/follower reads (the probe / rinse / re-probe state machine
+has no array form — quorum-read scenarios are DES-authoritative), lease
+grant/expiry dynamics and clock drift (see the leased-reads paragraph
+above), and reads combined with fault masks, leader batching, or the
+EPaxos kernel (``build_config`` rejects those loudly) — scenarios that
+need those stay on the DES (`Scenario.batch_ok` marks the eligible
+ones).  A crashed follower's
 vote is deferred, not lost, so plans must leave every group's PRC threshold
 reachable without the down members (single crashes with ``prc >= 1``, or
 Paxos's singleton groups) — the DES relay-timeout fallback has no batch
@@ -135,6 +158,9 @@ class SimConfig:
     n_keys: int = 1000
     conflict_rate: float = 0.0
     key_cdf: Optional[np.ndarray] = None
+    # leased-leader-read model (group kernel only): fraction of requests
+    # served locally at the leader under a held lease (0 = write path only)
+    read_ratio: float = 0.0
 
     @property
     def rmax(self) -> int:
@@ -152,6 +178,8 @@ def _expected_wires(workload) -> Dict[str, float]:
     payload = 8.0
     if workload is not None:
         wf = float(workload.write_fraction)
+        if getattr(workload, "read_ratio", None) is not None:
+            wf = 1.0 - float(workload.read_ratio)
         if workload.payload_choices:
             w = np.asarray(workload.payload_weights
                            or [1.0] * len(workload.payload_choices), float)
@@ -200,6 +228,37 @@ def build_config(protocol: str, n: int, pig=None, topo=None, workload=None,
                          "batched EPaxos runs are DES-authoritative "
                          "(leaderless per-node buffers interact with the "
                          "conflict model)")
+    # leased-read model eligibility (see the module docstring): only the
+    # group kernel's single-leader FIFO has a lease to serve reads under
+    rr = (getattr(workload, "read_ratio", None)
+          if workload is not None else None)
+    rpath = (getattr(workload, "read_path", "log")
+             if workload is not None else "log")
+    lease_rr = 0.0
+    if rr is not None and float(rr) > 0.0:
+        if rpath == "quorum":
+            raise ValueError(
+                "batch backend models log and leased leader reads only; "
+                "quorum reads (probe / rinse / re-probe rounds) have no "
+                "array form — quorum-read scenarios are DES-authoritative")
+        if rpath == "lease":
+            if protocol == "epaxos":
+                raise ValueError(
+                    "leased reads are group-kernel only: epaxos is "
+                    "leaderless (no leader lease to serve reads under) — "
+                    "epaxos read scenarios need the DES quorum-read path")
+            if masks is not None:
+                raise ValueError(
+                    "leased reads with fault masks need the DES: the "
+                    "batch lease model assumes the lease is held for the "
+                    "whole run, which a down-window invalidates")
+            if batch_m > 1:
+                raise ValueError(
+                    "leased reads with leader batching are "
+                    "DES-authoritative (reads bypass the batch buffer, so "
+                    "the full-batch cost reparameterization no longer "
+                    "describes the leader's service distribution)")
+            lease_rr = float(rr)
     # batched P2a wire: BatchCmd = 8-byte batch header + m commands
     w_p2a = (w["p2a"] if batch_m == 1
              else HEADER_BYTES + 16 + 8 + batch_m * w["cmd"])
@@ -318,7 +377,8 @@ def build_config(protocol: str, n: int, pig=None, topo=None, workload=None,
         kind="group", n=n, members=members, sizes=sizes, thresh=tarr,
         static_relay=static, majority=majority(n), region_of=region_of,
         region_latency=region_latency, jitter=jitter, costs=costs,
-        label=label or f"{protocol}/N={n}/R={rmax}", down=down, slow=slow)
+        label=label or f"{protocol}/N={n}/R={rmax}", down=down, slow=slow,
+        read_ratio=lease_rr)
 
 
 # ================================================================ rate bound
@@ -347,6 +407,16 @@ def _estimate_rate(cfg: SimConfig, k: int) -> float:
     b_in = float(np.median(np.median(reg_lat, axis=0)))
     rt = (2 * b_cl + 2 * b_med + 2 * b_in + 6 * cfg.jitter + leader_cpu
           + c["c_fanout"] + float(sizes.max()) * (c["c_rel"] + c["c_repl"]))
+    rr = cfg.read_ratio
+    if rr > 0.0:
+        # leased reads skip the fan-out entirely: leader work shrinks to
+        # ingest + reply, followers see only the write fraction, and the
+        # read round trip is two client hops plus the leader service
+        w_read = c["c_req"] + c["c_replycl"]
+        leader_cpu = rr * w_read + (1.0 - rr) * leader_cpu
+        fol_bound = (fol_bound / (1.0 - rr)
+                     if rr < 1.0 else float("inf"))
+        rt = rr * (2 * b_cl + 2 * cfg.jitter + w_read) + (1.0 - rr) * rt
     return min(1.0 / leader_cpu, fol_bound, k / rt)
 
 
@@ -403,7 +473,7 @@ def _summarize(lat, t_fin, commit_t, active, ready, loadF, loadL, cell,
 
 def _group_cell(cell, steps: int, kmax: int, breq: int,
                 faulty: bool = False, nb: int = 0, kernel: str = "lax",
-                obs: bool = False):
+                obs: bool = False, read: bool = False):
     """Simulate one grid cell of the Paxos/PigPaxos group kernel.
 
     ``faulty`` (static) enables the fault-mask path: hop arrivals at a
@@ -424,6 +494,17 @@ def _group_cell(cell, steps: int, kmax: int, breq: int,
     the sort + segmented-cummax oracle below; "pallas" routes the same
     order statistics through ``kernels.ops.seg_fanin`` (rank-counting
     Pallas kernel — interpret mode on CPU, native on TPU).
+
+    ``read`` (static) enables the leased-leader-read model: each burst
+    draws a per-request read mask (an EXTRA fold of the step key, so the
+    write path's draw order is bit-identical to read=False), the leader
+    ingress Lindley chain runs with per-request service (full round work
+    for writes, ingest+reply for leased reads — exclusive prefix sums
+    replace the constant-work ``kk_b * T_l`` terms), and read lanes skip
+    the follower pipeline: no backlog contribution, no message loads, no
+    commit (``commit_done = inf``), and the client reply returns straight
+    from the leader.  When False the original constant-service expression
+    is kept verbatim so existing compilations are unchanged.
 
     Two throughput tricks keep the scan XLA-friendly:
 
@@ -516,14 +597,27 @@ def _group_cell(cell, steps: int, kmax: int, breq: int,
             # a request arriving at a down leader waits out the window
             # (the DES client's timeout retries land right after recovery)
             aL = defer(aL + slowL, downL)
-        start_b = jnp.maximum(lax.cummax(aL - kk_b * T_l) + kk_b * T_l,
-                              cpuL + kk_b * T_l)
+        if read:
+            # leased reads serve at the leader only: service is ingest +
+            # reply, writes keep the full round's work.  The exclusive
+            # prefix sum Wc generalizes the constant-work kk_b * T_l chain
+            # (it reduces to it when every service equals T_l).
+            u_read = jax.random.uniform(jax.random.fold_in(k2, 1), (B,))
+            is_read = u_read < cell["read_ratio"]
+            w_serve = jnp.where(is_read, c_req + c_replycl, T_l)
+            Wc = jnp.cumsum(w_serve) - w_serve
+            start_b = jnp.maximum(lax.cummax(aL - Wc) + Wc, cpuL + Wc)
+            cpuL_next = jnp.maximum(
+                cpuL, jnp.where(active, start_b + w_serve, -jnp.inf).max())
+        else:
+            start_b = jnp.maximum(lax.cummax(aL - kk_b * T_l) + kk_b * T_l,
+                                  cpuL + kk_b * T_l)
+            cpuL_next = jnp.maximum(
+                cpuL, jnp.where(active, start_b + T_l, -jnp.inf).max())
         W_L = start_b - aL
         L1 = start_b + c_req
         fan_done = L1[:, None] + (kk_r[None, :] + 1.0) * c_fanout
         cpuL2 = L1 + ngf * c_fanout
-        cpuL_next = jnp.maximum(
-            cpuL, jnp.where(active, start_b + T_l, -jnp.inf).max())
 
         # rotating-relay choice.  Fault path: sample uniformly among the
         # group members that are UP at the burst's pacing point (the DES
@@ -680,11 +774,19 @@ def _group_cell(cell, steps: int, kmax: int, breq: int,
         t_fin = reply_done + reg_lat[leader_reg, 0] + e_cl[:, 1]
         if faulty:
             t_fin = t_fin + slowL
+        if read:
+            # leased reads never enter the log: the reply leaves the leader
+            # at service completion, and commit_done = inf keeps them out
+            # of `committed` and every commit-windowed load
+            read_fin = (start_b + w_serve + reg_lat[leader_reg, 0]
+                        + e_cl[:, 1])
+            commit_done = jnp.where(is_read, jnp.inf, commit_done)
+            t_fin = jnp.where(is_read, read_fin, t_fin)
 
         # state updates: follower backlogs grow by the burst's per-node WORK
         # from the anchor (the first active request's pacing point — every
         # round touches every follower, so that is the first toucher)
-        act_b = active[:, None]
+        act_b = ((active & ~is_read) if read else active)[:, None]
         add_w = (jnp.where(act_b & peer_mask, w_peer, 0.0).sum(axis=0)
                  .at[jnp.where(act_b & grp_mask[None, :], rel_idx, F)]
                  .add(jnp.broadcast_to(relay_work, (B, G)), mode="drop"))
@@ -710,6 +812,8 @@ def _group_cell(cell, steps: int, kmax: int, breq: int,
             # request just experienced at the leader FIFO (= backlog in
             # seconds at its arrival instant), stamped with that arrival
             ys = ys + (jnp.where(any_active, aL[0], jnp.inf), W_L[0])
+        if read:
+            ys = ys + (is_read,)
         return ((ready, cpuF, cpuL, loadF, loadL, dt_ewma, t_prev),
                 ys)
 
@@ -733,6 +837,24 @@ def _group_cell(cell, steps: int, kmax: int, breq: int,
         out["leader_backlog_s"] = jnp.where(qn > 0, qsum / jnp.maximum(qn, 1.0),
                                             0.0)
         out["leader_backlog_n"] = qn.astype(jnp.int32)
+    if read:
+        # read/write latency split over the same measurement window the
+        # headline latencies use (DES counterpart: Cluster.read_write_split)
+        isr = ys[-1].reshape(-1)
+        latf, tf = lat.reshape(-1), t_fin.reshape(-1)
+        in_lat = active.reshape(-1) & (tf >= cell["warmup"]) \
+            & (tf <= cell["stop"])
+        rm, wm = in_lat & isr, in_lat & ~isr
+        rn, wn = rm.sum(), wm.sum()
+        out["read_count"], out["write_count"] = rn, wn
+        out["read_mean_s"] = jnp.where(
+            rn > 0, jnp.where(rm, latf, 0.0).sum()
+            / jnp.maximum(rn.astype(f32), 1.0), jnp.nan)
+        out["write_mean_s"] = jnp.where(
+            wn > 0, jnp.where(wm, latf, 0.0).sum()
+            / jnp.maximum(wn.astype(f32), 1.0), jnp.nan)
+        out["read_p99_s"] = _pct(jnp.sort(jnp.where(rm, latf, jnp.inf)),
+                                 rn, 0.99)
     return out
 
 
@@ -910,27 +1032,27 @@ def _resolve_kernel(kernel: str, kind: str = "group") -> str:
 
 def _cells_fn(batch, steps: int, kmax: int, kind: str, breq: int,
               faulty: bool = False, nb: int = 0, kernel: str = "lax",
-              obs: bool = False):
+              obs: bool = False, read: bool = False):
     """The unjitted whole-batch computation (vmap over cells); shared by
     the single-device jit below and the sharded per-device bodies."""
     if kind == "group":
         return jax.vmap(lambda c: _group_cell(c, steps, kmax, breq,
                                               faulty, nb, kernel,
-                                              obs))(batch)
+                                              obs, read))(batch)
     return jax.vmap(lambda c: _epaxos_cell(c, steps, kmax, nb))(batch)
 
 
 @functools.partial(jax.jit, static_argnames=("steps", "kmax", "kind",
                                              "breq", "faulty", "nb",
-                                             "kernel", "obs"))
+                                             "kernel", "obs", "read"))
 def _run_cells(batch, steps: int, kmax: int, kind: str, breq: int,
                faulty: bool = False, nb: int = 0, kernel: str = "lax",
-               obs: bool = False):
-    sig = (kind, steps, kmax, breq, faulty, nb, kernel, obs) + tuple(
+               obs: bool = False, read: bool = False):
+    sig = (kind, steps, kmax, breq, faulty, nb, kernel, obs, read) + tuple(
         (k,) + tuple(v.shape) for k, v in sorted(batch.items()))
     _TRACE_COUNTS[sig] = _TRACE_COUNTS.get(sig, 0) + 1
     return _cells_fn(batch, steps, kmax, kind, breq, faulty, nb, kernel,
-                     obs)
+                     obs, read)
 
 
 def _pad_spec(configs: Sequence[SimConfig], grid) -> Dict[str, int]:
@@ -976,7 +1098,7 @@ def _stack_cells(configs: Sequence[SimConfig], grid, duration: float,
         "majority", "n_groups", "static_relay", "k_clients", "key", "stop",
         "warmup", "duration", "n_followers", "reg_nodes", "fq",
         "w_follower", "downL", "downF", "slowF", "slowL",
-        "key_mode", "n_keys", "conflict_rate", "key_cdf")}
+        "key_mode", "n_keys", "conflict_rate", "key_cdf", "read_ratio")}
     wmax = spec["wmax"]
     rmax, fmax = spec["rmax"], spec["fmax"]
     nmax, nkeys_max = spec["nmax"], spec["nkeys_max"]
@@ -1064,9 +1186,13 @@ def _stack_cells(configs: Sequence[SimConfig], grid, duration: float,
             wf = (len(szs) * (c.costs["c_fanout"] + c.costs["c_agg"])
                   + 2.0 * float((szs - 1).sum())
                   * (c.costs["c_rel"] + c.costs["c_repl"])) / max(c.n - 1, 1)
+            # leased reads add no follower work: the utilization estimate
+            # sees per-op work scaled to the write fraction
+            wf *= 1.0 - c.read_ratio
         else:
             wf = 0.0
         cells["w_follower"].append(np.float32(wf))
+        cells["read_ratio"].append(np.float32(c.read_ratio))
         cells["reg_nodes"].append(
             np.asarray(c.region_of[:nmax] if kind == "epaxos"
                        else np.zeros(1), np.int32))
@@ -1108,6 +1234,7 @@ def simulate_grid(configs: Sequence[SimConfig], grid, duration: float,
         raise ValueError("obs timelines are group-kernel only — the epaxos "
                          "kernel has no single-leader FIFO to observe")
     faulty = any(c.down is not None or c.slow is not None for c in configs)
+    read = any(c.read_ratio > 0.0 for c in configs)
     nb = (int(np.ceil((warmup + duration + _DRAIN_S) / _TL_BUCKET)) + 1
           if (faulty or timeline or obs) else 0)
     if steps is None:
@@ -1119,7 +1246,7 @@ def simulate_grid(configs: Sequence[SimConfig], grid, duration: float,
     # the group kernel pops `breq` requests per scan step
     breq = min(8, kmax) if kind == "group" else 1
     out = _run_cells(batch, -(-steps // breq), kmax, kind, breq, faulty, nb,
-                     kernel, obs)
+                     kernel, obs, read)
     out = {k: np.asarray(v) for k, v in out.items()}
     steps_arr = np.full(len(grid), steps, np.int32)
     if out["exhausted"].any():
@@ -1129,7 +1256,7 @@ def simulate_grid(configs: Sequence[SimConfig], grid, duration: float,
         idx = np.nonzero(out["exhausted"])[0]
         sub = {k: v[idx] for k, v in batch.items()}
         sub_out = _run_cells(sub, -(-steps // breq), kmax, kind, breq,
-                             faulty, nb, kernel, obs)
+                             faulty, nb, kernel, obs, read)
         for k, v in sub_out.items():
             out[k][idx] = np.asarray(v)
         steps_arr[idx] = steps
@@ -1146,7 +1273,7 @@ _SHARD_CACHE: Dict[tuple, object] = {}
 
 def _run_cells_sharded(batch, steps: int, kmax: int, kind: str, breq: int,
                        faulty: bool, nb: int, kernel: str,
-                       devices, impl: str):
+                       devices, impl: str, read: bool = False):
     """One chunk through the device-sharded runner.  The cell axis (every
     leaf's leading axis) is split evenly across ``devices`` — cell count
     must be a multiple of the device count.  Inputs are DONATED: chunked
@@ -1155,11 +1282,13 @@ def _run_cells_sharded(batch, steps: int, kmax: int, kind: str, breq: int,
     D = len(devices)
     shapes = tuple((k,) + tuple(v.shape) + (str(np.asarray(v).dtype),)
                    for k, v in sorted(batch.items()))
-    sig = (kind, steps, kmax, breq, faulty, nb, kernel, D, impl) + shapes
+    sig = (kind, steps, kmax, breq, faulty, nb, kernel, D, impl,
+           read) + shapes
     fn = _SHARD_CACHE.get(sig)
     if fn is None:
         def body(b):
-            return _cells_fn(b, steps, kmax, kind, breq, faulty, nb, kernel)
+            return _cells_fn(b, steps, kmax, kind, breq, faulty, nb,
+                             kernel, read=read)
         if impl == "shard_map":
             mesh = Mesh(np.asarray(devices), ("cells",))
             fn = jax.jit(_shard_map(body, mesh=mesh,
@@ -1219,6 +1348,7 @@ def simulate_grid_sharded(configs: Sequence[SimConfig], grid,
     kernel = _resolve_kernel(kernel, kind)
     spec = _pad_spec(configs, grid)
     faulty = any(c.down is not None or c.slow is not None for c in configs)
+    read = any(c.read_ratio > 0.0 for c in configs)
     nb = (int(np.ceil((warmup + duration + _DRAIN_S) / _TL_BUCKET)) + 1
           if (faulty or timeline) else 0)
     if steps is None:
@@ -1241,7 +1371,7 @@ def simulate_grid_sharded(configs: Sequence[SimConfig], grid,
         steps_c = steps0
         cout = _run_cells_sharded(batch, -(-steps_c // breq), spec["kmax"],
                                   kind, breq, faulty, nb, kernel, devices,
-                                  impl)
+                                  impl, read)
         cout = {k: np.array(v) for k, v in cout.items()}
         csteps = np.full(chunk, steps_c, np.int32)
         while cout["exhausted"][:real].any() and steps_c < _MAX_STEPS:
@@ -1252,7 +1382,7 @@ def simulate_grid_sharded(configs: Sequence[SimConfig], grid,
             sub = {k: v[ridx] for k, v in batch.items()}
             sub_out = _run_cells_sharded(sub, -(-steps_c // breq),
                                          spec["kmax"], kind, breq, faulty,
-                                         nb, kernel, devices, impl)
+                                         nb, kernel, devices, impl, read)
             for k, v in sub_out.items():
                 cout[k][idx] = np.asarray(v)[:len(idx)]
             csteps[idx] = steps_c
@@ -1353,5 +1483,14 @@ def simulate_scenario(protocol: str, n: int, *, pig=None, topo=None,
                 "mean_ms": [round(float(v) * 1e3, 6)
                             for v in out["leader_backlog_s"][i]],
                 "n": out["leader_backlog_n"][i].tolist()}}
+        if "read_count" in out:
+            # leased-read split (DES counterpart: Cluster.read_write_split)
+            u["rw"] = {
+                "reads": int(out["read_count"][i]),
+                "writes": int(out["write_count"][i]),
+                "read_mean_ms": float(out["read_mean_s"][i]) * 1e3,
+                "write_mean_ms": float(out["write_mean_s"][i]) * 1e3,
+                "read_p99_ms": float(out["read_p99_s"][i]) * 1e3,
+            }
         units.append(u)
     return units

@@ -681,3 +681,91 @@ for n, r, prc, wan in ((9, 2, 1, False), (9, 2, 1, True),
         seeds=tuple(range(16)), quick_seeds=(0, 1, 2, 3),
         duration=0.1, quick_duration=0.1, warmup=0.05,
         quick_skip=(n == 25 and prc == 2)))
+
+# ======================================================================
+# Read paths (ISSUE 10): leader leases + quorum reads under read-heavy
+# closed-loop traffic, every DES cell under the read-aware auditor
+# (stale / phantom / inverted non-logged reads are hard violations).
+#
+#   reads/*/lease/r=R   — quorum-granted leader lease, leader serves gets
+#                         locally (no log round); r sweeps the crossover:
+#                         at r=0 Pig's relay fan-out beats Paxos on write
+#                         throughput, at r=0.9 the lease path collapses
+#                         both protocols onto the leader and plain Paxos
+#                         catches back up — the crossover summarizer row.
+#   reads/*/log/r=0.9   — the same read mix through the replicated log
+#                         (the paper's only read path): the speedup
+#                         denominator for the >= 2x leased-read gate.
+#   reads/*/quorum, /subgroup — client-side quorum reads (PQR-style
+#                         probe + rinse): a random majority on paxos /
+#                         epaxos, the geo-closest relay subgroup + leader
+#                         on pigpaxos ("subgroup").
+#   reads/wan/*         — the fig10 three-region WAN: geo-routed subgroup
+#                         probes answer from the client's region while
+#                         random-majority probes pay cross-region RTTs.
+# The paxos lease/log r=0.9 cells also run on the batch backend
+# (vectorsim's leased-read Lindley model) — the reads summarizer emits
+# DES<->batch fidelity ratios the regression gate bounds to [0.90, 1.10].
+# ======================================================================
+_LEASE = {"duration_ms": 200.0}
+for proto, pig in (("paxos", None), ("pigpaxos", PigConfig(n_groups=3, prc=1))):
+    for r in (0.0, 0.5, 0.9):
+        register(Scenario(
+            name=f"reads/{proto}/lease/r={r}", protocol=proto, n=25,
+            pig=pig,
+            workload=WorkloadConfig(read_ratio=r, read_path="lease"),
+            lease=_LEASE, audit=True,
+            clients=(60,), seeds=(1, 2), quick_seeds=(1,),
+            duration=0.6, warmup=0.3, quick_duration=0.3))
+    register(Scenario(
+        name=f"reads/{proto}/log/r=0.9", protocol=proto, n=25, pig=pig,
+        workload=WorkloadConfig(read_ratio=0.9, read_path="log"),
+        audit=True, clients=(60,), seeds=(1, 2), quick_seeds=(1,),
+        duration=0.6, warmup=0.3, quick_duration=0.3))
+for path in ("lease", "log"):
+    register(Scenario(
+        name=f"reads/paxos/{path}/r=0.9/batch", protocol="paxos", n=25,
+        backend="batch", batch_ok=True,
+        workload=WorkloadConfig(read_ratio=0.9, read_path=path),
+        lease=_LEASE if path == "lease" else None,
+        clients=(60,), seeds=tuple(range(1, 9)), quick_seeds=(1, 2),
+        duration=0.6, warmup=0.3, quick_duration=0.3))
+for proto, pig, label in (
+        ("paxos", None, "quorum"),
+        ("epaxos", None, "quorum"),
+        ("pigpaxos", PigConfig(n_groups=3, prc=1), "subgroup")):
+    register(Scenario(
+        name=f"reads/{proto}/{label}/r=0.9", protocol=proto, n=25, pig=pig,
+        workload=WorkloadConfig(read_ratio=0.9, read_path="quorum"),
+        audit=True, clients=(60,), seeds=(1, 2), quick_seeds=(1,),
+        duration=0.6, warmup=0.3, quick_duration=0.3))
+for proto, pig in (
+        ("pigpaxos", PigConfig(n_groups=3, groups=_WAN3_GROUPS, prc=1)),
+        ("paxos", None)):
+    register(Scenario(
+        name=f"reads/wan/{proto}/quorum", protocol=proto, n=15, pig=pig,
+        topo=_WAN3, leader_timeout=400e-3,
+        workload=WorkloadConfig(read_ratio=0.9, read_path="quorum"),
+        audit=True, grid_mode="curve", clients=(30,), seeds=(2,),
+        duration=1.5, warmup=0.4, quick_duration=0.8,
+        quick_skip=(proto == "paxos")))
+
+# lease: expiry/failover availability windows.  The leader crashes at
+# t=0.8 and never recovers; the failover policy elects a successor, but
+# follower lease PROMISES block the new leader's phase 1 until the old
+# lease drains — so the measured unavailability window must grow with the
+# lease duration (the safety/availability trade every lease system makes).
+# The auditor stays on: no read served across the failover may be stale.
+_LEASE_FO = {"detect_timeout": 0.05, "check_interval": 0.01,
+             "successor": "next"}
+for d in (50, 400):
+    register(Scenario(
+        name=f"lease/expiry/d={d}ms", protocol="pigpaxos", n=25,
+        pig=PigConfig(n_groups=3, prc=1),
+        workload=WorkloadConfig(read_ratio=0.5, read_path="lease",
+                                request_timeout=25e-3),
+        lease={"duration_ms": float(d)},
+        faults=crash_window(0, 0.8), audit=True, failover=_LEASE_FO,
+        grid_mode="curve", clients=(30,), seeds=(3,),
+        duration=2.2, warmup=0.3, quick_duration=1.2,
+        collect=("timeline",)))

@@ -67,7 +67,8 @@ def _run_unit(payload) -> dict:
                 leader_timeout=sc.leader_timeout, engine=sc.engine,
                 record_history=sc.audit, spare_nodes=sc.spare_nodes,
                 batch=bc, pipeline_depth=sc.pipeline_depth,
-                obs=(dict(sc.obs) if sc.obs is not None else None))
+                obs=(dict(sc.obs) if sc.obs is not None else None),
+                lease=(dict(sc.lease) if sc.lease is not None else None))
     plan = sc.fault_plan()
     evs = []
     if plan is not None:
@@ -144,6 +145,12 @@ def _run_unit(payload) -> dict:
                                         for cl in c.clients)
     if adm_stats is not None:
         extras["admission"] = dict(adm_stats)
+    rw = (c.read_write_split()
+          if sc.workload is not None and sc.workload.read_ratio is not None
+          else None)
+    if rw is not None:
+        extras["rw"] = {k: (_f(v) if isinstance(v, float) else v)
+                        for k, v in rw.items()}
     if plan is not None:
         # availability metrics: the longest client-visible completion gap
         # inside the measurement window, and the timeout re-send count
@@ -236,6 +243,9 @@ def _run_batch_scenario(sc: Scenario, rs) -> List[dict]:
             extras["timeline"] = u["timeline"]
         if "obs" in u:
             extras["obs"] = u["obs"]
+        if "rw" in u:
+            extras["rw"] = {k: (_f(v) if isinstance(v, float) else v)
+                            for k, v in u["rw"].items()}
         if plan is not None:
             unit["consistency"] = "model"
         if extras:

@@ -82,6 +82,13 @@ class Scenario:
     # slot pipelining: at most this many uncommitted proposals in flight at
     # the leader (0 = unbounded, the protocol-native default) — DES only
     pipeline_depth: int = 0
+    # leader-lease kwargs (repro.core.paxos.LeaseConfig): {"duration_ms": d,
+    # "renew_ms": r, "drift_bound": b, "lease_safety": True}.  Arms quorum-
+    # granted leader leases on every (pig)paxos node; required for workloads
+    # with read_path="lease".  DES units also get per-node clock rate/offset
+    # draws (the drift model the lease margin defends against); batch units
+    # model an uncontested held lease (see vectorsim's docstring)
+    lease: Optional[dict] = None
     # admission-control kwargs armed on every DES unit: queue-length policy
     # (repro.runtime.AdmissionPolicy) {"max_queue": q, "rate_hz": r,
     # "burst": b}, or — when the dict carries an "slo_ms" key — the
@@ -163,6 +170,49 @@ class Scenario:
             # registry-time validation of the knob values themselves
             from repro.obs import ObsConfig
             ObsConfig(**self.obs)
+        rr = (self.workload.read_ratio
+              if self.workload is not None else None)
+        rpath = (self.workload.read_path
+                 if self.workload is not None else "log")
+        if rr is not None and rr > 0.0 and self.engine == "ref":
+            raise ValueError(
+                "read_ratio workloads are not supported by the verbatim "
+                "seed stack (engine='ref'): the seed client has no read "
+                "op kind — use engine='exact' or 'fast'")
+        if self.lease is not None:
+            # registry-time knob validation (loud, not half-way through a
+            # suite run) + structural constraints the Cluster would reject
+            from repro.core.paxos import LeaseConfig
+            LeaseConfig(**self.lease)
+            if self.protocol == "epaxos":
+                raise ValueError(
+                    "leases are leader-granted; epaxos is leaderless — "
+                    "epaxos read scenarios use read_path='quorum'")
+            if self.engine == "ref":
+                raise ValueError("leases are not supported by the verbatim "
+                                 "seed stack (engine='ref')")
+        if rpath == "lease" and rr is not None and rr > 0.0 \
+                and self.lease is None:
+            raise ValueError(
+                "read_path='lease' requires lease= (no granted lease, no "
+                "local leader reads — set e.g. lease={'duration_ms': 200})")
+        if self.backend == "batch" and rr is not None and rr > 0.0:
+            if rpath == "quorum":
+                raise ValueError(
+                    "batch backend models log and leased leader reads "
+                    "only; quorum reads (probe / rinse rounds) need the "
+                    "DES")
+            if rpath == "lease":
+                if plan is not None:
+                    raise ValueError(
+                        "batch leased reads assume the lease is held for "
+                        "the whole run — fault plans need the DES")
+                if self.batch is not None \
+                        and self.batch.get("max_batch", 1) > 1:
+                    raise ValueError(
+                        "batch leased reads with leader batching are "
+                        "DES-authoritative (reads bypass the batch "
+                        "buffer)")
         if self.backend == "batch":
             ok_collect = {"per_node_msgs"}
             if plan is not None:

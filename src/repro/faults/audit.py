@@ -25,7 +25,20 @@ of what the clients observed:
    invoked (on the same key), A precedes B in the witness;
 5. **read values** — every completed ``get`` returned the value written by
    the latest ``put`` preceding it in the witness (write identity comes
-   from the per-op value tags the history-recording clients attach).
+   from the per-op value tags the history-recording clients attach);
+6. **non-logged reads** (``path`` in ``{"lease", "quorum"}`` — leased
+   leader-local reads and client-side quorum reads never enter the log, so
+   checks 1–5 cannot see them): each must return a value that (a) is a real
+   witness put or the initial value (no phantoms), (b) is at least as fresh
+   as every put — and every other non-logged read — that COMPLETED before
+   this read was invoked (no stale reads, no read inversion), and (c) was
+   not written by a put invoked after the read completed (no reads from the
+   future).  These reads are exempt from the durability check: not being
+   logged is their point.
+
+Model boundary: the auditor sees the DES histories only — batch-backend
+cells are never audited directly (their read/write semantics are
+cross-checked against audited DES twins by the `reads` scenario family).
 
 ``check_history`` is a pure function over plain data so tests can feed it
 deliberately corrupted fixtures; ``audit_cluster`` adapts a finished
@@ -102,8 +115,28 @@ def check_history(history: List[dict],
                 p.setdefault(key, []).append((cid, seq, op))
         proj.append(p)
 
-    for key in sorted({k for p in proj for k in p}):
+    # non-logged reads (leased / quorum) never appear in any applied log:
+    # they get their own per-key freshness checks against the witness below
+    nl_reads: Dict[int, list] = {}
+    for h in history:
+        if (h.get("op") == "get" and h.get("ok")
+                and h.get("path") in ("lease", "quorum")):
+            nl_reads.setdefault(h["key"], []).append(h)
+
+    for key in sorted({k for p in proj for k in p} | set(nl_reads)):
         ps = [p[key] for p in proj if key in p]
+        if not ps:
+            # only non-logged reads touched this key: empty witness, every
+            # read must have returned the initial value
+            self_reads = nl_reads.get(key, ())
+            for h in self_reads:
+                res.reads_checked += 1
+                if h.get("rtag") is not None:
+                    violate(f"phantom read on key {key}: {h.get('path')} "
+                            f"read (client={h['cid']}, seq={h['seq']}) "
+                            f"returned {h.get('rtag')} but no put to the "
+                            f"key was ever applied")
+            continue
         # Merge the per-replica orders into one witness.  Every replica's
         # projection must be a contiguous *window* of a single total order:
         # long-lived replicas hold prefixes, snapshot-joined replicas hold
@@ -172,6 +205,63 @@ def check_history(history: List[dict],
             if op == "put":
                 last_put = (cid, seq)
 
+        # ---- check 6: non-logged (lease/quorum) reads on this key ----
+        nls = nl_reads.get(key)
+        if nls:
+            put_pos: Dict[Tuple[int, int], int] = {}
+            for i, (cid, seq, op) in enumerate(witness):
+                if op == "put":
+                    put_pos[(cid, seq)] = i
+            # freshness floors by sweep: puts (and other non-logged reads)
+            # that COMPLETED before a read's invoke lower-bound the witness
+            # position the read must return
+            puts_done = sorted(
+                (hist[t]["resp"], i) for t, i in put_pos.items()
+                if (ph := hist.get(t)) is not None and ph.get("ok")
+                and ph["resp"] is not None)
+            reads_done = sorted(
+                (h["resp"], put_pos.get(h.get("rtag"), -1)) for h in nls)
+            jp = jr = 0
+            floor = rfloor = -1
+            for h in sorted(nls, key=lambda h: h["invoke"]):
+                inv = h["invoke"]
+                while jp < len(puts_done) and puts_done[jp][0] < inv:
+                    if puts_done[jp][1] > floor:
+                        floor = puts_done[jp][1]
+                    jp += 1
+                while jr < len(reads_done) and reads_done[jr][0] < inv:
+                    if reads_done[jr][1] > rfloor:
+                        rfloor = reads_done[jr][1]
+                    jr += 1
+                rt = h.get("rtag")
+                path = h.get("path")
+                if rt is not None and rt not in put_pos:
+                    violate(f"phantom read on key {key}: {path} read "
+                            f"(client={h['cid']}, seq={h['seq']}) returned "
+                            f"{rt}, which no replica ever applied")
+                    continue
+                res.reads_checked += 1
+                rpos = put_pos[rt] if rt is not None else -1
+                if rpos < floor:
+                    violate(f"stale read on key {key}: {path} read "
+                            f"(client={h['cid']}, seq={h['seq']}) returned "
+                            f"witness position {rpos} ({rt}) but the put at "
+                            f"position {floor} completed before the read "
+                            f"was invoked")
+                elif rpos < rfloor:
+                    violate(f"stale read on key {key}: {path} read "
+                            f"(client={h['cid']}, seq={h['seq']}) returned "
+                            f"witness position {rpos} ({rt}) but an earlier "
+                            f"completed read already saw position {rfloor} "
+                            f"— read inversion")
+                if rt is not None:
+                    ph = hist.get(rt)
+                    if (ph is not None and ph["invoke"] > h["resp"]):
+                        violate(f"future read on key {key}: {path} read "
+                                f"(client={h['cid']}, seq={h['seq']}) "
+                                f"returned a value whose put was invoked "
+                                f"after the read completed")
+
     # durability: every acknowledged op must survive on a replica that is
     # still a member at the end of the run
     idxs = range(len(logs)) if durable_logs is None else durable_logs
@@ -182,6 +272,8 @@ def check_history(history: List[dict],
     where = "every replica's" if durable_logs is None \
         else "every final-membership replica's"
     for h in history:
+        if h.get("path") in ("lease", "quorum"):
+            continue   # non-logged read paths: durability does not apply
         if h.get("ok") and (h["cid"], h["seq"]) not in durable_seen:
             violate(f"acknowledged op (client={h['cid']}, seq={h['seq']}) "
                     f"on key {h['key']} is missing from {where} "

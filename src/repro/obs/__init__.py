@@ -33,6 +33,18 @@ plain dict also works).  ``sample_rate`` controls tracing only and is
 event-neutral; ``metrics_dt`` > 0 arms the sampler timer, which adds
 K_CALL events (still RNG- and message-order-neutral, but not
 event-count-identical — keep it 0 for golden-trace comparisons).
+
+Model boundaries (where this layer's numbers do and don't exist):
+
+* ``engine="ref"`` has **no obs surface** — ``Cluster(obs=...)`` raises on
+  the verbatim seed stack rather than silently skipping hooks.
+* the batch backend (``core/vectorsim.py``) is **timelines-only**: the
+  vectorized kernel emits leader-backlog series but has no per-op span
+  trees or critical-path decomposition — traced runs need a DES engine.
+* span trees cover **logged** operations' causal chains; leased
+  leader-local reads are served without any fan-out, so their traces are
+  single-node by construction (see ``docs/consistency.md`` for the read
+  paths and ``docs/architecture.md`` for the full selection matrix).
 """
 from .config import ObsConfig  # noqa: F401
 from .critpath import CAT_PRIORITY, SEGMENTS, critical_path, decompose  # noqa: F401

@@ -1,0 +1,62 @@
+"""Docs integrity: no dead relative links in docs/ or the READMEs.
+
+The docs layer (ISSUE 10) is navigation — a dead relative link is a
+broken build, same as a dead import.  This is the CI docs-link check:
+it runs in tier-1, so every PR that moves/renames a file must fix the
+links that pointed at it.  External links (http/https/mailto) and
+pure in-page anchors are out of scope — only repo-relative paths are
+checked, anchors stripped.
+"""
+import os
+import re
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# [text](target) — excluding images' srcsets etc.; good enough for our md
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+
+def _doc_files():
+    out = [os.path.join(REPO, "README.md")]
+    docs = os.path.join(REPO, "docs")
+    for root, _dirs, files in os.walk(docs):
+        out += [os.path.join(root, f) for f in files if f.endswith(".md")]
+    for sub in ("benchmarks", "examples", "tests", "src"):
+        for root, _dirs, files in os.walk(os.path.join(REPO, sub)):
+            out += [os.path.join(root, f) for f in files
+                    if f.lower() == "readme.md"]
+    return sorted(p for p in out if os.path.exists(p))
+
+
+def _relative_links(path):
+    text = open(path, encoding="utf-8").read()
+    for m in _LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        yield target.split("#", 1)[0]
+
+
+def test_docs_exist():
+    # the docs site itself is part of the contract, not just its links
+    for rel in ("README.md", "docs/architecture.md", "docs/consistency.md",
+                "docs/adding-a-scenario.md",
+                "examples/read_paths_quickstart.py"):
+        assert os.path.exists(os.path.join(REPO, rel)), f"missing {rel}"
+
+
+@pytest.mark.parametrize("path", _doc_files(),
+                         ids=lambda p: os.path.relpath(p, REPO))
+def test_no_dead_relative_links(path):
+    base = os.path.dirname(path)
+    dead = []
+    for target in _relative_links(path):
+        if not target:          # pure-anchor link, already handled
+            continue
+        resolved = os.path.normpath(os.path.join(base, target))
+        if not os.path.exists(resolved):
+            dead.append(target)
+    assert not dead, (f"{os.path.relpath(path, REPO)}: dead relative "
+                      f"link(s): {dead}")
